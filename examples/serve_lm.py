@@ -1,0 +1,67 @@
+"""Batched-decode serving example: prefill + token-by-token generation with
+the KV-cache serve_step on a (data=2, model=4) mesh of host devices.
+
+    python examples/serve_lm.py [--batch 8] [--gen 32] [--arch llama3-8b]
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.mesh import make_mesh
+from repro.launch.steps import make_serve_step
+from repro.models import registry, transformer
+from repro.runtime import sharding as shrules
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b", choices=registry.ARCH_IDS)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = registry.get_config(args.arch, "smoke")
+    mesh = make_mesh((2, 4), ("data", "model"))
+    max_seq = args.prompt_len + args.gen
+
+    with shrules.use_rules(shrules.DEFAULT_RULES, mesh):
+        params, _ = transformer.init(jax.random.PRNGKey(0), cfg)
+        cache = transformer.init_cache(cfg, args.batch, max_seq)
+        serve = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
+
+        key = jax.random.PRNGKey(1)
+        prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                    cfg.vocab_size)
+        # prefill token-by-token (simple; a production prefill would batch)
+        tok = prompt[:, :1]
+        for pos in range(args.prompt_len):
+            logits, cache = serve(params, cache,
+                                  prompt[:, pos:pos + 1], jnp.int32(pos))
+        # greedy generation
+        out = []
+        t0 = time.perf_counter()
+        tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None]
+        for i in range(args.gen):
+            logits, cache = serve(params, cache, tok,
+                                  jnp.int32(args.prompt_len + i))
+            tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None]
+            out.append(tok)
+        jax.block_until_ready(tok)
+        dt = time.perf_counter() - t0
+    toks = jnp.concatenate(out, axis=1)
+    print(f"[serve_lm] arch={cfg.name} generated {args.gen} tokens x "
+          f"batch {args.batch} in {dt:.2f}s "
+          f"({args.gen * args.batch / dt:.1f} tok/s on CPU)")
+    print("[serve_lm] sample token ids:", toks[0, :16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Regenerate the data tables in EXPERIMENTS.md from results/*.json.
+Run after a dry-run sweep + roofline pass:
+
+    PYTHONPATH=src python scripts/make_experiments_md.py
+"""
+
+import json
+import pathlib
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def dryrun_table() -> str:
+    rows = []
+    for p in sorted((ROOT / "results" / "dryrun").glob("*.json")):
+        r = json.loads(p.read_text())
+        coll = sum(r["collectives"].values())
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['bytes_per_device']/2**30:.2f} | "
+            f"{r['cost'].get('flops', 0):.3g} | {coll/2**30:.3f} | "
+            f"{r['compile_s']:.0f}s |")
+    hdr = ("| arch | shape | mesh | GiB/dev | HLO flops/dev* | "
+           "coll GiB/dev* | compile |\n|---|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(rows)
+
+
+def roofline_table() -> str:
+    rows = []
+    for p in sorted((ROOT / "results" / "roofline").glob("*.json")):
+        r = json.loads(p.read_text())
+        dom = {"compute": r["t_compute"], "memory": r["t_memory"],
+               "collective": r["t_collective"]}[r["bottleneck"]]
+        frac = r["t_compute"] / max(dom, 1e-12)
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']*1e3:.1f} | "
+            f"{r['t_memory']*1e3:.1f} | {r['t_collective']*1e3:.1f} | "
+            f"{r['bottleneck']} | {frac:.2f} | {r['useful_ratio']:.2f} | "
+            f"{r['mem_gib']:.1f} |")
+    hdr = ("| arch | shape | t_comp ms | t_mem ms | t_coll ms | bound | "
+           "roofline frac | useful | GiB/dev |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(rows)
+
+
+if __name__ == "__main__":
+    print("## Dry-run table\n")
+    print(dryrun_table())
+    print("\n## Roofline table\n")
+    print(roofline_table())

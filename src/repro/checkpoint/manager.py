@@ -1,0 +1,139 @@
+"""Checkpointing: atomic msgpack+npz save/restore of arbitrary pytrees with
+keep-k rotation and automatic resume -- the restart half of fault tolerance.
+
+Layout: <dir>/step_<n>/ {tree.msgpack (structure + small leaves),
+arrays.npz (numbered large leaves)} plus a COMMIT marker written LAST so a
+crash mid-save never yields a checkpoint that restore would trust. Saves
+run on a background thread (async checkpointing): the train loop hands off
+host copies and keeps stepping.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import shutil
+import threading
+from typing import Any
+
+import jax
+import ml_dtypes
+import numpy as np
+
+PyTree = Any
+
+# numpy's npz cannot store ml_dtypes (bf16 etc.) natively: store a uint view
+# plus a dtype tag.
+_EXOTIC = {"bfloat16": (ml_dtypes.bfloat16, np.uint16),
+           "float8_e4m3fn": (ml_dtypes.float8_e4m3fn, np.uint8)}
+
+
+def _flatten(tree: PyTree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save_tree(path: pathlib.Path, tree: PyTree, *, extra: dict | None = None):
+    """Atomic synchronous save of a pytree of arrays."""
+    path = pathlib.Path(path)
+    tmp = path.with_name(path.name + ".tmp")
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    leaves, treedef = _flatten(tree)
+    arrays, dtypes = {}, []
+    for i, l in enumerate(leaves):
+        arr = np.asarray(l)
+        name = arr.dtype.name if arr.dtype.names is None else str(arr.dtype)
+        for tag, (dt, view) in _EXOTIC.items():
+            if arr.dtype == dt:
+                arr, name = arr.view(view), tag
+                break
+        arrays[f"a{i}"] = arr
+        dtypes.append(name)
+    np.savez(tmp / "arrays.npz", **arrays)
+    meta = {"n_leaves": len(leaves), "dtypes": dtypes, "extra": extra or {}}
+    (tmp / "meta.json").write_text(json.dumps(meta))
+    (tmp / "COMMIT").write_text("ok")
+    if path.exists():
+        shutil.rmtree(path)
+    tmp.rename(path)
+
+
+def restore_tree(path: pathlib.Path, like: PyTree) -> tuple[PyTree, dict]:
+    """Restore into the structure of `like` (shape/dtype checked against
+    leaves). Returns (tree, extra)."""
+    path = pathlib.Path(path)
+    if not (path / "COMMIT").exists():
+        raise FileNotFoundError(f"no committed checkpoint at {path}")
+    data = np.load(path / "arrays.npz")
+    meta = json.loads((path / "meta.json").read_text())
+    leaves, treedef = _flatten(like)
+    assert meta["n_leaves"] == len(leaves), "structure mismatch"
+    new_leaves = []
+    for i, ref in enumerate(leaves):
+        arr = data[f"a{i}"]
+        tag = meta["dtypes"][i]
+        if tag in _EXOTIC:
+            arr = arr.view(_EXOTIC[tag][0])
+        ref_shape = getattr(ref, "shape", None)
+        assert arr.shape == tuple(ref_shape), (i, arr.shape, ref_shape)
+        new_leaves.append(jax.numpy.asarray(arr))
+    return jax.tree.unflatten(treedef, new_leaves), meta["extra"]
+
+
+class CheckpointManager:
+    """keep-k rotating checkpoints with async save and latest-resume."""
+
+    def __init__(self, directory: str | pathlib.Path, keep: int = 3):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._lock = threading.Lock()
+        self._pending: threading.Thread | None = None
+
+    def _step_dirs(self) -> list[tuple[int, pathlib.Path]]:
+        out = []
+        for p in self.dir.glob("step_*"):
+            if (p / "COMMIT").exists():
+                try:
+                    out.append((int(p.name.split("_")[1]), p))
+                except ValueError:
+                    continue
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        dirs = self._step_dirs()
+        return dirs[-1][0] if dirs else None
+
+    def save(self, step: int, tree: PyTree, *, extra: dict | None = None,
+             blocking: bool = False):
+        host_tree = jax.tree.map(np.asarray, tree)  # device->host copy now
+
+        def work():
+            with self._lock:
+                save_tree(self.dir / f"step_{step}", host_tree, extra=extra)
+                dirs = self._step_dirs()
+                while len(dirs) > self.keep:
+                    shutil.rmtree(dirs[0][1])
+                    dirs = dirs[1:]
+
+        self.wait()
+        t = threading.Thread(target=work, daemon=True)
+        t.start()
+        self._pending = t
+        if blocking:
+            self.wait()
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def restore_latest(self, like: PyTree) -> tuple[int, PyTree, dict] | None:
+        self.wait()
+        step = self.latest_step()
+        if step is None:
+            return None
+        tree, extra = restore_tree(self.dir / f"step_{step}", like)
+        return step, tree, extra

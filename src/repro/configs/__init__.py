@@ -1,0 +1,2 @@
+"""Architecture configs: one module per assigned architecture (exact
+published hyperparameters) plus the paper's own experiment configs."""

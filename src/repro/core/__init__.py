@@ -1,0 +1,24 @@
+"""Core: the paper's contribution -- consensus-based distributed optimization
+with explicit communication/computation tradeoff control."""
+
+from repro.core.graphs import (CommGraph, build_graph, complete_graph,
+                               hypercube_graph, kregular_expander, lambda2,
+                               random_regular_expander, ring_graph,
+                               spectral_gap, torus_graph)
+from repro.core.schedules import (CommSchedule, EveryIteration,
+                                  IncreasinglySparse, Periodic, c1_constant,
+                                  ch_constant, cp_constant, make_schedule,
+                                  optimal_stepsize_A)
+from repro.core.tradeoff import (TPU_V5E, HardwareSpec, derive_r_from_roofline,
+                                 h_opt, h_opt_int, iteration_cost, measure_r,
+                                 n_opt_complete, predict_speedup,
+                                 time_to_accuracy)
+from repro.core.consensus import (disagreement, mix_collective, mix_dense,
+                                  mix_stale, tree_mix_collective,
+                                  tree_mix_dense)
+from repro.core.dda import (DDASimulator, DDAState, SimTrace, dda_init,
+                            dda_local_step, dda_mix_step, stepsize_sqrt)
+from repro.core.compression import (CompressionState, ef_compress, ef_init,
+                                    ratio_bytes, topk_compress,
+                                    topk_decompress)
+from repro.core.consensus_sgd import ConsensusConfig, mix_params, mix_params_dense

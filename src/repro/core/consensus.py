@@ -1,0 +1,113 @@
+"""Consensus mixing operators: z <- P z over the communication graph.
+
+Two device realizations plus a host oracle:
+
+  * `mix_dense`      -- oracle: stacked z of shape (n, ...) times the dense
+                        doubly-stochastic P. Used by the single-process
+                        simulator (paper experiments) and as the test oracle.
+  * `mix_collective` -- inside `shard_map`: complete graph -> `lax.pmean`
+                        (one all-reduce); k-regular graph -> k
+                        `lax.ppermute`s + weighted accumulation. This is the
+                        TPU-native mapping of the paper's point-to-point
+                        messages (DESIGN.md section 2).
+  * `mix_stale`      -- [beyond paper] one-step-stale (async) gossip: mixes
+                        with the PREVIOUS round's neighbor values while
+                        shipping the current ones, so the permute latency
+                        overlaps the next local step.
+
+All operators are linear and preserve the network average exactly (P is
+doubly stochastic) -- property-tested in tests/test_consensus.py.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graphs import CommGraph
+
+__all__ = [
+    "mix_dense",
+    "mix_collective",
+    "mix_stale",
+    "tree_mix_dense",
+    "tree_mix_collective",
+    "disagreement",
+]
+
+PyTree = Any
+
+
+def mix_dense(z: jax.Array, P: jax.Array | np.ndarray) -> jax.Array:
+    """Oracle mixing: z has shape (n, ...) -- one leading row per node."""
+    P = jnp.asarray(P, dtype=z.dtype)
+    zf = z.reshape(z.shape[0], -1)
+    return (P @ zf).reshape(z.shape)
+
+
+def tree_mix_dense(tree: PyTree, P: jax.Array | np.ndarray) -> PyTree:
+    return jax.tree.map(lambda a: mix_dense(a, P), tree)
+
+
+def _ppermute_accumulate(z: jax.Array, graph: CommGraph, axis_name: str,
+                         *, self_weight: float | None = None,
+                         edge_weight: float | None = None) -> jax.Array:
+    sw = graph.self_weight if self_weight is None else self_weight
+    ew = graph.edge_weight if edge_weight is None else edge_weight
+    acc = z * sw
+    for pairs in graph.ppermute_pairs():
+        recv = jax.lax.ppermute(z, axis_name, perm=list(pairs))
+        acc = acc + ew * recv
+    return acc
+
+
+def mix_collective(z: jax.Array, graph: CommGraph, axis_name: str) -> jax.Array:
+    """Mixing inside shard_map over `axis_name` (one node per axis index).
+
+    Complete graph: P = (1/n) 11^T, i.e. exact averaging -> single pmean
+    (an all-reduce; on TPU this is the native ICI collective and is both
+    faster and numerically exact vs. n-1 permutes).
+    k-regular: k ppermutes + weighted accumulation.
+    """
+    if graph.name == "complete":
+        return jax.lax.pmean(z, axis_name)
+    return _ppermute_accumulate(z, graph, axis_name)
+
+
+def tree_mix_collective(tree: PyTree, graph: CommGraph, axis_name: str) -> PyTree:
+    return jax.tree.map(lambda a: mix_collective(a, graph, axis_name), tree)
+
+
+def mix_stale(z: jax.Array, neighbor_acc: jax.Array, graph: CommGraph,
+              axis_name: str) -> tuple[jax.Array, jax.Array]:
+    """[beyond paper] async gossip: returns (mixed, next_neighbor_acc).
+
+    `neighbor_acc` is the edge-weighted sum of neighbor values shipped during
+    the PREVIOUS round (already multiplied by edge_weight). The mixed value
+    uses those stale messages; fresh messages for the next round are launched
+    now, so their transfer overlaps the subsequent local computation. One-step
+    delay preserves DDA convergence (paper ref [9], delay-tolerant DDA).
+    """
+    mixed = z * graph.self_weight + neighbor_acc
+    # Ship current z to neighbors for the NEXT round.
+    nxt = jnp.zeros_like(z)
+    if graph.name == "complete":
+        n = graph.n
+        # pmean of z minus own contribution, scaled to edge weights (1/n each).
+        nxt = jax.lax.pmean(z, axis_name) - z / n
+    else:
+        for pairs in graph.ppermute_pairs():
+            nxt = nxt + graph.edge_weight * jax.lax.ppermute(z, axis_name, perm=list(pairs))
+    return mixed, nxt
+
+
+def disagreement(z_stack: jax.Array) -> jax.Array:
+    """Network error max_i ||z_bar - z_i|| (paper's network-error term in
+    eq. (6)); z_stack has shape (n, ...)."""
+    zbar = jnp.mean(z_stack, axis=0, keepdims=True)
+    diff = (z_stack - zbar).reshape(z_stack.shape[0], -1)
+    return jnp.max(jnp.linalg.norm(diff, axis=-1))

@@ -1,0 +1,52 @@
+"""[Beyond paper, anticipated by its section VI] Consensus wrapping of an
+arbitrary inner optimizer (SGD / AdamW / ...).
+
+The paper's closing remark proposes extending the analysis to stochastic
+optimization where "h_t = t^p could correspond to using increasingly larger
+minibatches". The modern form of that idea is local-update data parallelism
+(DiLoCo-family): each consensus node runs `h` inner optimizer steps on its
+shard, then the nodes gossip-average their PARAMETERS over the communication
+graph G with mixing matrix P, on the paper's schedule.
+
+This module provides the pure functions used by the production launcher:
+
+    inner_step:  (params, opt_state, batch) -> (params, opt_state, metrics)
+    mix_params:  params <- P params  (collective over the consensus axis)
+
+Setting graph=complete and schedule=EveryIteration recovers exactly
+synchronous data-parallel SGD on the gradients' average? -- no: parameter
+averaging after each single step. For linear updates (plain SGD) the two are
+IDENTICAL trajectories; tests/test_consensus_sgd.py verifies this equivalence
+(gossip-DP == all-reduce-DP for SGD, h=1, complete graph), which is the
+correctness anchor tying the consensus feature to standard DP.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import consensus as _cons
+from repro.core.graphs import CommGraph
+
+__all__ = ["ConsensusConfig", "mix_params", "mix_params_dense"]
+
+PyTree = Any
+
+
+class ConsensusConfig(NamedTuple):
+    graph: CommGraph
+    axis_name: str = "pod"
+
+
+def mix_params(params: PyTree, cfg: ConsensusConfig) -> PyTree:
+    """Gossip-average parameters over the consensus axis (inside shard_map)."""
+    return _cons.tree_mix_collective(params, cfg.graph, cfg.axis_name)
+
+
+def mix_params_dense(params_stack: PyTree, graph: CommGraph) -> PyTree:
+    """Oracle/simulator version: leading axis = node index."""
+    P = graph.mixing_matrix()
+    return _cons.tree_mix_dense(params_stack, P)

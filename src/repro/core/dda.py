@@ -1,0 +1,237 @@
+"""Distributed Dual Averaging (DDA) -- the paper's algorithm (eq. 3-5).
+
+Per node i, at iteration t (1-indexed):
+
+    z_i(t)   = sum_j p_ij z_j(t-1) + g_i(t-1)         (consensus + subgradient)
+    x_i(t)   = argmin_x { <z_i(t), x> + psi(x)/a(t) } (proximal step)
+    xhat_i(t)= ((t-1) xhat_i(t-1) + x_i(t)) / t       (running average)
+
+with psi(x) = 0.5 ||x||^2 the proximal step is x = Proj_X(-a(t) z) (paper V.A).
+On cheap iterations (no communication) the consensus sum is replaced by
+z_i(t) = z_i(t-1) + g_i(t-1)  (paper IV.A).
+
+Two execution modes:
+
+  * `DDASimulator` -- stacked (n, ...) arrays on one device; mixing by dense
+    P matmul. Bit-faithful to the paper's algorithm; used for the paper's
+    experiments (benchmarks/fig*) and as the oracle for the distributed mode.
+  * `dda_local_step` / `dda_mix_step` -- per-shard pytree updates with
+    `mix_collective` over a mesh axis, used by the production launcher. Both
+    are pure and jit/shard_map friendly; the schedule (which step type to run)
+    is decided by the host launcher, never by traced control flow, so each
+    variant compiles to a collective-free / collective-bearing program
+    respectively.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import consensus as _cons
+from repro.core.graphs import CommGraph
+from repro.core.schedules import CommSchedule, EveryIteration
+
+__all__ = [
+    "DDAState",
+    "dda_init",
+    "dda_local_step",
+    "dda_mix_step",
+    "DDASimulator",
+    "SimTrace",
+    "stepsize_sqrt",
+]
+
+PyTree = Any
+
+
+def stepsize_sqrt(A: float, q: float = 0.5) -> Callable[[jax.Array], jax.Array]:
+    """a(t) = A / t^q (paper uses q=1/2 for bounded/periodic schedules and
+    general q in (p, 1) for increasingly sparse ones)."""
+    def a(t):
+        return A / jnp.maximum(t, 1.0) ** q
+    return a
+
+
+class DDAState(NamedTuple):
+    z: PyTree      # accumulated dual (subgradient) direction
+    x: PyTree      # current primal iterate
+    xhat: PyTree   # running average (the algorithm's output)
+    t: jax.Array   # iteration counter (float32 scalar for stable division)
+
+
+def dda_init(x0: PyTree) -> DDAState:
+    zeros = jax.tree.map(jnp.zeros_like, x0)
+    return DDAState(z=zeros, x=x0, xhat=x0, t=jnp.asarray(0.0, jnp.float32))
+
+
+def _prox(z: PyTree, a_t: jax.Array, projection: Callable[[PyTree], PyTree] | None) -> PyTree:
+    x = jax.tree.map(lambda zl: (-a_t * zl).astype(zl.dtype), z)
+    return projection(x) if projection is not None else x
+
+
+def _advance(state: DDAState, z_new: PyTree, a_fn, projection) -> DDAState:
+    t_new = state.t + 1.0
+    x_new = _prox(z_new, a_fn(t_new), projection)
+    xhat_new = jax.tree.map(
+        lambda h, x: (state.t * h + x) / t_new, state.xhat, x_new)
+    return DDAState(z=z_new, x=x_new, xhat=xhat_new, t=t_new)
+
+
+def dda_local_step(state: DDAState, grad: PyTree, a_fn,
+                   projection: Callable | None = None) -> DDAState:
+    """Cheap iteration: z <- z + g (no communication)."""
+    z_new = jax.tree.map(jnp.add, state.z, grad)
+    return _advance(state, z_new, a_fn, projection)
+
+
+def dda_mix_step(state: DDAState, grad: PyTree, graph: CommGraph,
+                 axis_name: str, a_fn,
+                 projection: Callable | None = None) -> DDAState:
+    """Expensive iteration: z <- P z + g (consensus + subgradient).
+
+    Must be called inside shard_map with `axis_name` mapping the consensus
+    axis (one DDA node per index).
+    """
+    mixed = _cons.tree_mix_collective(state.z, graph, axis_name)
+    z_new = jax.tree.map(jnp.add, mixed, grad)
+    return _advance(state, z_new, a_fn, projection)
+
+
+# ---------------------------------------------------------------------------
+# Single-process simulator (paper-faithful; stacked node dimension)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SimTrace:
+    """Evaluation trace with the paper's simulated time model attached."""
+
+    iters: list[int]
+    sim_time: list[float]       # cumulative time units: sum of 1/n + k r 1{comm}
+    fvals: list[float]          # Fbar(t) = (1/n) sum_i F(xhat_i) (paper Fig 1/2)
+    comms: list[int]            # cumulative communication rounds H_t
+    disagreement: list[float]   # max_i ||z_i - z_bar||
+    fvals_consensus: list[float] = dataclasses.field(default_factory=list)
+    # F at the consensus average xhat_bar (not what the paper plots, but
+    # useful to separate optimization error from network disagreement)
+
+
+class DDASimulator:
+    """Runs DDA with n nodes as a stacked leading axis on one device.
+
+    Args:
+      subgrad_fn: (x_stack[n, ...], t) -> g_stack[n, ...]; node i's
+        subgradient of f_i at x_i. Deterministic (batch) or stochastic.
+      eval_fn: x[...] -> scalar F(x) on the FULL objective.
+      graph: communication topology (mixing matrix P taken from it).
+      schedule: communication schedule (every / periodic-h / sparse-p).
+      a_fn: stepsize a(t).
+      projection: optional Proj_X applied after the prox step (stacked).
+      r: communication/computation tradeoff for the simulated time axis.
+    """
+
+    def __init__(self, subgrad_fn, eval_fn, graph: CommGraph,
+                 schedule: CommSchedule | None = None,
+                 a_fn=None, projection=None, r: float = 0.0,
+                 compress_keep: float | None = None):
+        self.subgrad_fn = subgrad_fn
+        self.eval_fn = eval_fn
+        self.graph = graph
+        self.schedule = schedule or EveryIteration()
+        self.a_fn = a_fn or stepsize_sqrt(1.0)
+        self.projection = projection
+        self.r = float(r)
+        self.compress_keep = compress_keep
+        self._P = jnp.asarray(graph.mixing_matrix(), jnp.float32)
+        # off-diagonal mixing applies to RECEIVED (possibly compressed)
+        # messages; the diagonal always uses the node's exact own state.
+        self._P_off = self._P - jnp.diag(jnp.diag(self._P))
+        self._P_diag = jnp.diag(self._P)
+
+        def _mix(z, res):
+            """One consensus round; top-k+error-feedback compression of the
+            transmitted messages when compress_keep is set ([beyond paper],
+            core/compression.py; reduces r by the compression ratio)."""
+            if self.compress_keep is None:
+                return _cons.mix_dense(z, self._P), res
+            corrected = z + res
+            k = max(1, int(corrected.shape[1] * self.compress_keep))
+            mags = jnp.abs(corrected)
+            thresh = jax.lax.top_k(mags, k)[0][:, -1:]  # kth largest per row
+            sent = jnp.where(mags >= thresh, corrected, 0.0)
+            new_res = corrected - sent
+            mixed = (self._P_diag[:, None] * z
+                     + _cons.mix_dense(sent, self._P_off))
+            return mixed, new_res
+
+        @jax.jit
+        def _segment(z, x, xhat, res, t0, comm_mask, keys):
+            """Scan `len(comm_mask)` iterations starting at t0 (0-indexed)."""
+            def body(carry, inp):
+                z, x, xhat, res, t = carry
+                comm, key = inp
+                g = self.subgrad_fn(x, t, key)
+                z_mixed, res_new = jax.lax.cond(
+                    comm, _mix, lambda zz, rr: (zz, rr), z, res)
+                z_new = z_mixed + g
+                t_new = t + 1.0
+                a_t = self.a_fn(t_new)
+                x_new = -a_t * z_new
+                if self.projection is not None:
+                    x_new = self.projection(x_new)
+                xhat_new = (t * xhat + x_new) / t_new
+                return (z_new, x_new, xhat_new, res_new, t_new), None
+
+            (z, x, xhat, res, t), _ = jax.lax.scan(
+                body, (z, x, xhat, res, t0), (comm_mask, keys))
+            return z, x, xhat, res, t
+
+        self._segment = _segment
+
+    def run(self, x0_stack: jax.Array, T: int, eval_every: int = 25,
+            seed: int = 0) -> SimTrace:
+        n = self.graph.n
+        assert x0_stack.shape[0] == n, "x0 must be stacked (n, ...)"
+        z = jnp.zeros_like(x0_stack)
+        x = x0_stack
+        xhat = x0_stack
+        res = jnp.zeros_like(x0_stack)
+        t = jnp.asarray(0.0, jnp.float32)
+        k = self.graph.degree
+        trace = SimTrace([], [], [], [], [])
+        sim_time = 0.0
+        comm_total = 0
+        root = jax.random.PRNGKey(seed)
+
+        done = 0
+        while done < T:
+            seg = min(eval_every, T - done)
+            mask = np.array([self.schedule.is_comm_step(done + i + 1)
+                             for i in range(seg)])
+            keys = jax.random.split(jax.random.fold_in(root, done), seg)
+            z, x, xhat, res, t = self._segment(
+                z, x, xhat, res, t, jnp.asarray(mask), keys)
+            done += seg
+            n_comm = int(mask.sum())
+            comm_total += n_comm
+            sim_time += seg * (1.0 / n) + n_comm * k * self.r
+            xbar = jnp.mean(xhat, axis=0)
+            trace.iters.append(done)
+            trace.sim_time.append(sim_time)
+            trace.fvals.append(float(jnp.mean(jax.vmap(self.eval_fn)(xhat))))
+            trace.fvals_consensus.append(float(self.eval_fn(xbar)))
+            trace.comms.append(comm_total)
+            trace.disagreement.append(float(_cons.disagreement(z)))
+        return trace
+
+    def time_to_reach(self, trace: SimTrace, eps_value: float) -> float:
+        """First simulated time at which F(xhat_bar) <= eps_value."""
+        for tt, fv in zip(trace.sim_time, trace.fvals):
+            if fv <= eps_value:
+                return tt
+        return float("inf")

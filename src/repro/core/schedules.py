@@ -1,0 +1,189 @@
+"""Communication schedules and convergence constants from the paper.
+
+Three regimes (paper sections III.B, IV.A, IV.B):
+
+  * every-iteration  (h = 1)                        -- constant C_1   (eq. 7)
+  * periodic         (communicate every h+1 iters)  -- constant C_h   (eq. 18)
+  * increasingly sparse (h_j = j^p, 0 < p < 1/2)    -- constant C_p   (eq. 31)
+
+A schedule answers one question per step t (1-indexed): "is t a communication
+(expensive) iteration?" plus the bookkeeping H_t (number of communication
+steps among the first t iterations, eq. 12) and Q_t (iterations since the last
+communication).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterator
+
+__all__ = [
+    "CommSchedule",
+    "EveryIteration",
+    "Periodic",
+    "IncreasinglySparse",
+    "make_schedule",
+    "c1_constant",
+    "ch_constant",
+    "cp_constant",
+    "optimal_stepsize_A",
+]
+
+
+class CommSchedule:
+    """Base class. Iterations are 1-indexed, matching the paper."""
+
+    name: str = "base"
+
+    def is_comm_step(self, t: int) -> bool:
+        raise NotImplementedError
+
+    def H(self, t: int) -> int:
+        """Number of communication steps among iterations 1..t."""
+        return sum(1 for s in range(1, t + 1) if self.is_comm_step(s))
+
+    def comm_steps(self, T: int) -> Iterator[int]:
+        return (t for t in range(1, T + 1) if self.is_comm_step(t))
+
+    def constant(self, L: float, R: float, lam2: float) -> float:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class EveryIteration(CommSchedule):
+    """h = 1: communicate at every iteration (original DDA, paper III.B)."""
+
+    name: str = "every"
+
+    def is_comm_step(self, t: int) -> bool:
+        return True
+
+    def H(self, t: int) -> int:
+        return t
+
+    def constant(self, L: float, R: float, lam2: float) -> float:
+        return c1_constant(L, R, lam2)
+
+
+@dataclasses.dataclass(frozen=True)
+class Periodic(CommSchedule):
+    """Communicate once every h+1 iterations (h cheap then 1 expensive).
+
+    Paper IV.A: of T iterations only H_T = floor((T-1)/h) involve
+    communication (eq. 19). We realize that count with comm steps at
+    t = h+1, 2h+2, ...? No -- the paper's indexing has the FIRST h
+    iterations cheap, then iteration h+1 is... Careful reading of eq. (12):
+    H_t = floor((t-1)/h) counts communication steps within t iterations and
+    Q_t = mod(t, h) (or h when the mod is 0) counts the trailing cheap
+    iterations. That corresponds to: iteration t is expensive iff
+    t ≡ 1 (mod h) and t > 1  -- i.e. comm happens at t = h+1, 2h+1, 3h+1...
+    equivalently after every h local updates.
+    """
+
+    h: int = 1
+    name: str = "periodic"
+
+    def __post_init__(self):
+        if self.h < 1:
+            raise ValueError("h must be >= 1")
+
+    def is_comm_step(self, t: int) -> bool:
+        return t > 1 and (t - 1) % self.h == 0
+
+    def H(self, t: int) -> int:
+        return (t - 1) // self.h
+
+    def Q(self, t: int) -> int:
+        m = t % self.h
+        return m if m > 0 else self.h
+
+    def constant(self, L: float, R: float, lam2: float) -> float:
+        return ch_constant(L, R, lam2, self.h)
+
+
+@dataclasses.dataclass(frozen=True)
+class IncreasinglySparse(CommSchedule):
+    """h_j = j^p cheap-iteration gaps (paper IV.B).
+
+    The j-th communication happens at iteration ceil(sum_{i<=j} i^p): the
+    first at h_1 = 1, the second at h_1 + h_2, etc. H_T = Theta(T^(1/(p+1)))
+    communication steps among T iterations (eq. 22). Convergence requires
+    0 <= p < 1/2 (p = 1 provably diverges -- paper Fig. 2).
+    """
+
+    p: float = 0.3
+    name: str = "sparse"
+
+    def __post_init__(self):
+        if self.p < 0:
+            raise ValueError("p must be >= 0")
+
+    def _comm_times(self, upto: int) -> list[int]:
+        times, acc, j = [], 0.0, 1
+        while True:
+            acc += j ** self.p
+            t = math.ceil(acc)
+            if t > upto:
+                break
+            times.append(t)
+            j += 1
+        return times
+
+    def is_comm_step(self, t: int) -> bool:
+        # t is a comm step iff exists j with ceil(sum_{i<=j} i^p) == t.
+        acc, j = 0.0, 1
+        while True:
+            acc += j ** self.p
+            ct = math.ceil(acc)
+            if ct == t:
+                return True
+            if ct > t:
+                return False
+            j += 1
+
+    def H(self, t: int) -> int:
+        return len(self._comm_times(t))
+
+    def constant(self, L: float, R: float, lam2: float) -> float:
+        return cp_constant(L, R, lam2, self.p)
+
+
+def make_schedule(kind: str, *, h: int = 1, p: float = 0.3) -> CommSchedule:
+    if kind in ("every", "h1"):
+        return EveryIteration()
+    if kind == "periodic":
+        return Periodic(h=h)
+    if kind == "sparse":
+        return IncreasinglySparse(p=p)
+    raise ValueError(f"unknown schedule {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# Convergence-rate leading constants (all with a(t) = A / sqrt(t), optimized A)
+# ---------------------------------------------------------------------------
+
+def c1_constant(L: float, R: float, lam2: float) -> float:
+    """C_1 = 2LR sqrt(19 + 12/(1 - sqrt(lam2)))  -- eq. (7)."""
+    gap = 1.0 - math.sqrt(min(max(lam2, 0.0), 1.0 - 1e-15))
+    return 2.0 * L * R * math.sqrt(19.0 + 12.0 / gap)
+
+
+def ch_constant(L: float, R: float, lam2: float, h: int) -> float:
+    """C_h = 2RL sqrt(1 + 18h + 12h/(1 - sqrt(lam2)))  -- eq. (18)."""
+    gap = 1.0 - math.sqrt(min(max(lam2, 0.0), 1.0 - 1e-15))
+    return 2.0 * R * L * math.sqrt(1.0 + 18.0 * h + 12.0 * h / gap)
+
+
+def cp_constant(L: float, R: float, lam2: float, p: float) -> float:
+    """C_p = 2LR sqrt(7 + (12p+12)/((3p+1)(1-sqrt(lam2))) + 12/(2p+1)) -- eq. (31)."""
+    gap = 1.0 - math.sqrt(min(max(lam2, 0.0), 1.0 - 1e-15))
+    return 2.0 * L * R * math.sqrt(
+        7.0 + (12.0 * p + 12.0) / ((3.0 * p + 1.0) * gap) + 12.0 / (2.0 * p + 1.0)
+    )
+
+
+def optimal_stepsize_A(L: float, R: float, lam2: float, h: int = 1) -> float:
+    """A = (R/L) / sqrt(1 + 18h + 12h/(1-sqrt(lam2)))  -- eq. (18)."""
+    gap = 1.0 - math.sqrt(min(max(lam2, 0.0), 1.0 - 1e-15))
+    return (R / L) / math.sqrt(1.0 + 18.0 * h + 12.0 * h / gap)

@@ -1,0 +1,149 @@
+"""The communication/computation tradeoff r and its consequences.
+
+Paper III.A time model (time normalized so ONE processor computes a gradient
+on the FULL dataset in 1 unit):
+
+    cost/iteration = 1/n + k*r                          (eq. 9)
+    tau(eps)       = (C/eps)^2 * (1/n + k*r)            (eq. 10)
+    n_opt (complete graph)           = 1/sqrt(r)        (eq. 11)
+    h_opt (periodic, fixed n, G)     = sqrt(n k r / (18 + 12/(1-sqrt(lam2))))
+                                                        (eq. 21)
+
+r is a *measured* quantity: (time to transmit+receive one message) /
+(time for one processor to compute a full-data gradient). On TPU we derive
+both terms from the roofline of the compiled step:
+
+    t_msg  = message_bytes / link_bw        (cross-consensus-axis transfer)
+    t_grad = max(step_flops / peak_flops, step_bytes / hbm_bw) * n
+             (local shard gradient time scaled back to full data)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core import schedules as _sched
+
+__all__ = [
+    "HardwareSpec",
+    "TPU_V5E",
+    "measure_r",
+    "derive_r_from_roofline",
+    "iteration_cost",
+    "time_to_accuracy",
+    "n_opt_complete",
+    "h_opt",
+    "predict_speedup",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    """Per-chip peaks used in all roofline/tradeoff math (defaults: TPU v5e)."""
+
+    peak_flops: float = 197e12        # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9             # bytes/s per chip
+    ici_bw: float = 50e9              # bytes/s per ICI link
+    dcn_bw: float = 25e9              # bytes/s cross-pod (per pod egress), assumed
+    hbm_per_chip: float = 16e9        # bytes (v5e 16 GB)
+
+
+TPU_V5E = HardwareSpec()
+
+
+def measure_r(t_msg_seconds: float, t_full_grad_seconds: float) -> float:
+    """Direct measurement, exactly as the paper does on its cluster:
+    r = 0.85s / 29s = 0.0293 for full-MNIST metric learning (paper V.A)."""
+    if t_full_grad_seconds <= 0:
+        raise ValueError("gradient time must be positive")
+    return t_msg_seconds / t_full_grad_seconds
+
+
+def derive_r_from_roofline(
+    message_bytes: float,
+    local_step_flops: float,
+    local_step_bytes: float,
+    n: int,
+    hw: HardwareSpec = TPU_V5E,
+    *,
+    link_bw: float | None = None,
+    chips_per_node: int = 1,
+) -> float:
+    """Derive r for a consensus node that is itself a `chips_per_node`-chip
+    synchronous group. `local_step_flops/bytes` are PER NODE per local step on
+    its 1/n shard of the data; time for the full data on one node is n * that.
+    """
+    bw = link_bw if link_bw is not None else hw.dcn_bw
+    t_msg = message_bytes / bw
+    t_local = max(
+        local_step_flops / (hw.peak_flops * chips_per_node),
+        local_step_bytes / (hw.hbm_bw * chips_per_node),
+    )
+    t_full = t_local * n
+    return t_msg / t_full
+
+
+def iteration_cost(n: int, k: int, r: float) -> float:
+    """Time units per (expensive) iteration -- eq. (9)."""
+    return 1.0 / n + k * r
+
+
+def time_to_accuracy(
+    eps: float,
+    n: int,
+    k: int,
+    r: float,
+    lam2: float,
+    L: float = 1.0,
+    R: float = 1.0,
+    schedule: _sched.CommSchedule | None = None,
+) -> float:
+    """tau(eps) in time units for a given topology + schedule.
+
+    every-iteration: eq. (10);  periodic-h: eq. (20);  sparse-p: eq. (30/31).
+    """
+    schedule = schedule or _sched.EveryIteration()
+    C = schedule.constant(L, R, lam2)
+    if isinstance(schedule, _sched.EveryIteration):
+        T = (C / eps) ** 2
+        return T * (1.0 / n + k * r)
+    if isinstance(schedule, _sched.Periodic):
+        T = (C / eps) ** 2
+        return T * (1.0 / n + k * r / schedule.h)
+    if isinstance(schedule, _sched.IncreasinglySparse):
+        p = schedule.p
+        if p >= 0.5:
+            return math.inf  # outside the permissible range (paper IV.B)
+        T = (C / eps) ** (2.0 / (1.0 - 2.0 * p))
+        H = T ** (1.0 / (p + 1.0))
+        return T / n + H * k * r
+    raise TypeError(f"unknown schedule type {type(schedule)}")
+
+
+def n_opt_complete(r: float) -> float:
+    """Optimal processor count on the complete graph -- eq. (11)."""
+    if r <= 0:
+        return math.inf
+    return 1.0 / math.sqrt(r)
+
+
+def h_opt(n: int, k: int, r: float, lam2: float) -> float:
+    """Optimal intercommunication interval -- eq. (21)."""
+    gap = 1.0 - math.sqrt(min(max(lam2, 0.0), 1.0 - 1e-15))
+    return math.sqrt(n * k * r / (18.0 + 12.0 / gap))
+
+
+def h_opt_int(n: int, k: int, r: float, lam2: float) -> int:
+    """Integer interval: h is a count of iterations, so clamp to >= 1.
+    Matches the paper's Fig. 2 reading of eq. (21): r=0.00089, n=10 complete
+    graph gives h_opt < 1 -> 'h_opt = 1' (communicate every iteration)."""
+    return max(1, round(h_opt(n, k, r, lam2)))
+
+
+def predict_speedup(n: int, k: int, r: float, lam2: float,
+                    L: float = 1.0, R: float = 1.0, eps: float = 0.1) -> float:
+    """tau(eps; 1 node, no comm) / tau(eps; n nodes) under every-iteration."""
+    tau1 = time_to_accuracy(eps, 1, 0, 0.0, 0.0, L, R)
+    taun = time_to_accuracy(eps, n, k, r, lam2, L, R)
+    return tau1 / taun

@@ -1,0 +1,3 @@
+from repro.data.pipeline import (TokenStream, metric_learning_pairs,
+                                 nonsmooth_quadratic_problem, partition_rows,
+                                 synthetic_mnist_like)

@@ -1,0 +1,120 @@
+"""Causal flash attention (forward) as a Pallas TPU kernel.
+
+TPU adaptation of the FlashAttention-2 schedule: the grid is
+(batch, q_heads, q_blocks, kv_blocks) with the LAST dimension iterated
+sequentially per TPU core, so the running softmax state (m, l, acc) lives in
+VMEM scratch that persists across kv steps. Block shapes keep the working
+set in VMEM and the matmul operands MXU-aligned (multiples of 128 on the
+contracting/lane dims). GQA is expressed in the kv BlockSpec index map
+(kv_head = q_head // group) so repeated K/V are never materialized.
+
+Causal skipping: kv blocks strictly above the diagonal contribute nothing;
+their compute is predicated off with pl.when (the loads still happen --
+block-level early exit is a grid-shape decision we keep simple here).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+                  *, sm_scale: float, block_q: int, block_k: int,
+                  causal: bool):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # Upper-triangular blocks are fully masked under causality: skip.
+    run = (not causal) or (qi * block_q + block_q - 1 >= ki * block_k)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)            # (Bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)            # (Bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)            # (Bk, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * sm_scale                               # (Bq, Bk)
+        if causal:
+            rows = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            cols = ki * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+
+        m_prev = m_ref[:, :1]                          # (Bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)      # (Bq, 1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                         # (Bq, Bk)
+        corr = jnp.exp(m_prev - m_new)                 # (Bq, 1)
+        l_new = corr * l_ref[:, :1] + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = corr * acc_ref[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_ref[:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)                # fully-masked rows
+        o_ref[0, 0, :, :] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, sm_scale: float | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, H, Sq, D); k, v: (B, KH, Sk, D) with H % KH == 0.
+    Returns (B, H, Sq, D) in q.dtype."""
+    B, H, Sq, D = q.shape
+    KH, Sk = k.shape[1], k.shape[2]
+    assert H % KH == 0, (H, KH)
+    group = H // KH
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, Sk, block_q, block_k)
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(D)
+
+    grid = (B, H, Sq // block_q, Sk // block_k)
+    kernel = functools.partial(_flash_kernel, sm_scale=sm_scale,
+                               block_q=block_q, block_k=block_k,
+                               causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, qi, ki: (b, h // group, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, qi, ki: (b, h // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=[
+            # acc, m, l running-softmax state in VMEM (f32); m/l are padded
+            # to 128 lanes (TPU vector registers are (8,128) tiles).
+            pltpu.VMEM((block_q, D), jnp.float32),
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

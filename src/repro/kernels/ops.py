@@ -1,0 +1,63 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On this container (CPU) the kernels execute with interpret=True; on real
+TPU hardware set REPRO_PALLAS_INTERPRET=0 (or pass interpret=False) to run
+the compiled Mosaic kernels. `ref.py` holds the pure-jnp oracles used by the
+property tests.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.gossip_mix import _TILE, gossip_mix as _gossip
+from repro.kernels.selective_scan import selective_scan as _sscan
+from repro.kernels.ssd_scan import ssd_scan as _ssd
+
+
+def _default_interpret() -> bool:
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    interpret: bool | None = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _flash(q, k, v, causal=causal, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def selective_scan(x, dt, A, B, C, D_skip, *, interpret: bool | None = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _sscan(x, dt, A, B, C, D_skip, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_scan(x, dt, A, B, C, *, interpret: bool | None = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _ssd(x, dt, A, B, C, interpret=interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("self_weight", "edge_weight",
+                                    "interpret"))
+def gossip_mix(self_buf, neighbor_bufs, self_weight: float,
+               edge_weight: float, *, interpret: bool | None = None):
+    """Pads the flat buffers to a whole tile count, mixes, and un-pads."""
+    interpret = _default_interpret() if interpret is None else interpret
+    (M,) = self_buf.shape
+    pad = (-M) % _TILE
+    sb = jnp.pad(self_buf, (0, pad))
+    nb = jnp.pad(neighbor_bufs, ((0, 0), (0, pad)))
+    out = _gossip(sb, nb, self_weight, edge_weight, interpret=interpret)
+    return out[:M]
+
+
+__all__ = ["flash_attention", "selective_scan", "ssd_scan", "gossip_mix",
+           "ref"]

@@ -1,0 +1,87 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets in
+tests/test_kernels.py). Deliberately naive and readable."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        sm_scale: float | None = None) -> jax.Array:
+    """q: (B,H,Sq,D); k,v: (B,KH,Sk,D). Plain softmax attention in fp32."""
+    B, H, Sq, D = q.shape
+    KH, Sk = k.shape[1], k.shape[2]
+    group = H // KH
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    scale = sm_scale if sm_scale is not None else 1.0 / jnp.sqrt(D)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Sk), bool), k=Sk - Sq)
+        s = jnp.where(mask, s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", w, vr.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def selective_scan_ref(x, dt, A, B, C, D_skip) -> jax.Array:
+    """Mamba-1 recurrence, sequential over tokens.
+    x, dt: (Bt, S, d); A: (d, N); B, C: (Bt, S, N); D_skip: (d,).
+    Returns y: (Bt, S, d) fp32."""
+    x = x.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    Bm = B.astype(jnp.float32)
+    Cm = C.astype(jnp.float32)
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp
+        dA = jnp.exp(dt_t[..., None] * A)            # (Bt, d, N)
+        dBx = (dt_t * x_t)[..., None] * B_t[:, None, :]
+        h = dA * h + dBx
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    Bt, S, d = x.shape
+    h0 = jnp.zeros((Bt, d, A.shape[1]), jnp.float32)
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0))
+    _, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1)
+    return y + x * D_skip
+
+
+def ssd_scan_ref(x, dt, A, B, C) -> jax.Array:
+    """Mamba-2 SSD recurrence, sequential oracle.
+    x: (Bt,S,H,P); dt: (Bt,S,H); A: (H,) negative; B, C: (Bt,S,N).
+    Returns y: (Bt,S,H,P) fp32 (no D skip, no gating)."""
+    x = x.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    Bm = B.astype(jnp.float32)
+    Cm = C.astype(jnp.float32)
+    Bt, S, H, P = x.shape
+    N = B.shape[-1]
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp                    # (Bt,H,P),(Bt,H),(Bt,N)
+        dA = jnp.exp(dt_t * A)                       # (Bt,H)
+        dBx = jnp.einsum("bhp,bn->bhpn", x_t * dt_t[..., None], B_t)
+        h = dA[..., None, None] * h + dBx
+        y = jnp.einsum("bhpn,bn->bhp", h, C_t)
+        return h, y
+
+    h0 = jnp.zeros((Bt, H, P, N), jnp.float32)
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1)
+
+
+def gossip_mix_ref(self_buf, neighbor_bufs, self_weight, edge_weight
+                   ) -> jax.Array:
+    """out = sw * self + ew * sum_k neighbor_k.
+    self_buf: (M,); neighbor_bufs: (K, M)."""
+    acc = self_weight * self_buf.astype(jnp.float32)
+    acc = acc + edge_weight * jnp.sum(neighbor_bufs.astype(jnp.float32), 0)
+    return acc.astype(self_buf.dtype)

@@ -1,0 +1,96 @@
+"""Mamba-1 selective scan as a Pallas TPU kernel.
+
+TPU adaptation: the token recurrence h <- exp(dt*A) h + dt*B x is inherently
+sequential, so the kernel keeps the (d_block, N) state resident in VMEM and
+streams sequence chunks HBM->VMEM, amortizing transfers (the GPU version
+keeps state in registers/SMEM; VMEM is the TPU analogue). The grid is
+(batch, d_blocks, seq_chunks) -- the LAST dimension iterates sequentially on
+a TPU core, so the state scratch carries across chunks. d (the channel dim)
+is embarrassingly parallel and blocked to bound VMEM.
+
+The inner per-token loop is a fori_loop of VPU elementwise ops on
+(d_block, N) tiles; with N=16 and d_block=512 each step is a (512,16)
+multiply-add -- latency-bound on real hardware, which is exactly why
+Mamba-2's SSD (matmul form, see ssd_scan.py) replaced it. We implement both;
+the roofline in EXPERIMENTS.md quantifies the gap.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(x_ref, dt_ref, A_ref, B_ref, C_ref, D_ref, y_ref, h_ref,
+                 *, chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    A = A_ref[...]                       # (dB, N)
+    D_skip = D_ref[...]                  # (1, dB)
+
+    def body(t, h):
+        x_t = x_ref[0, t, :]             # (dB,)
+        dt_t = dt_ref[0, t, :]           # (dB,)
+        B_t = B_ref[0, t, :]             # (N,)
+        C_t = C_ref[0, t, :]             # (N,)
+        dA = jnp.exp(dt_t[:, None] * A)                     # (dB, N)
+        dBx = (dt_t * x_t)[:, None] * B_t[None, :]          # (dB, N)
+        h = dA * h + dBx
+        y = jnp.sum(h * C_t[None, :], axis=1)               # (dB,)
+        y_ref[0, t, :] = y + x_t * D_skip[0]
+        return h
+
+    h_ref[...] = jax.lax.fori_loop(0, chunk, body, h_ref[...])
+
+
+def selective_scan(x, dt, A, B, C, D_skip, *, d_block: int = 512,
+                   chunk: int = 256, interpret: bool = False) -> jax.Array:
+    """x, dt: (Bt, S, d) ; A: (d, N) ; B, C: (Bt, S, N) ; D_skip: (d,).
+    Returns y (Bt, S, d) fp32. S % chunk == 0, d % d_block == 0."""
+    Bt, S, d = x.shape
+    N = A.shape[1]
+    d_block = min(d_block, d)
+    chunk = min(chunk, S)
+    assert d % d_block == 0 and S % chunk == 0
+
+    grid = (Bt * (d // d_block), 1, S // chunk)  # (bd, unused, chunks)
+    db = d // d_block
+
+    def xmap(i, _, ci):
+        return (i // db, ci, i % db)
+
+    def bmap(i, _, ci):
+        return (i // db, ci, 0)
+
+    def amap(i, _, ci):
+        return (i % db, 0)
+
+    def dmap(i, _, ci):
+        return (0, i % db)
+
+    f32 = jnp.float32
+    return pl.pallas_call(
+        functools.partial(_scan_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, d_block), xmap),   # x
+            pl.BlockSpec((1, chunk, d_block), xmap),   # dt
+            pl.BlockSpec((d_block, N), amap),          # A
+            pl.BlockSpec((1, chunk, N), bmap),         # B
+            pl.BlockSpec((1, chunk, N), bmap),         # C
+            pl.BlockSpec((1, d_block), dmap),          # D_skip
+        ],
+        out_specs=pl.BlockSpec((1, chunk, d_block), xmap),
+        out_shape=jax.ShapeDtypeStruct((Bt, S, d), f32),
+        scratch_shapes=[pltpu.VMEM((d_block, N), f32)],
+        interpret=interpret,
+    )(x.astype(f32), dt.astype(f32), A.astype(f32), B.astype(f32),
+      C.astype(f32), D_skip.astype(f32).reshape(1, d))

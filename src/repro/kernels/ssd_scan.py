@@ -1,0 +1,95 @@
+"""Mamba-2 SSD (state-space duality) chunked scan as a Pallas TPU kernel.
+
+The SSD reformulation turns the token recurrence into per-chunk MATMULS --
+the MXU-friendly form (this is the hardware-adaptation insight: on TPU the
+win comes from feeding the 128x128 systolic array, not from warp-level
+shuffles as in the CUDA original):
+
+  intra-chunk:  Y_intra = ((C K^T) o L) (dt o X)        two (Q,Q)/(Q,P) GEMMs
+  inter-chunk:  Y_inter = decay0 o (C h0)               one (Q,N)x(N,P) GEMM
+  state update: h_Q = exp(sum dA) h0 + (decay_t B)^T X  one (N,Q)x(Q,P) GEMM
+
+Grid: (batch, heads, seq_chunks); the chunk axis iterates sequentially per
+TPU core so the (P, N) state lives in VMEM scratch across chunks. Block
+shapes: chunk Q=128 tokens (MXU-aligned), full P (head dim) and N (state).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, A_ref, B_ref, C_ref, y_ref, h_ref,
+                *, chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)       # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)        # (Q,)
+    A = A_ref[0]                                    # scalar (negative)
+    Bm = B_ref[0].astype(jnp.float32)               # (Q, N)
+    Cm = C_ref[0].astype(jnp.float32)               # (Q, N)
+
+    dA = dt * A                                     # (Q,) log decays
+    cum = jnp.cumsum(dA)                            # (Q,)
+    # intra-chunk: L[s,t] = exp(cum_s - cum_t), s >= t
+    rel = cum[:, None] - cum[None, :]               # (Q, Q)
+    mask = (jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+            >= jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1))
+    L = jnp.where(mask, jnp.exp(rel), 0.0)
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    W = scores * L                                  # (Q, Q)
+    xdt = x * dt[:, None]                           # (Q, P)
+    y = jax.lax.dot_general(W, xdt, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    # inter-chunk: h0 (P, N) decayed into each position
+    h0 = h_ref[...]                                 # (P, N)
+    Ch = jax.lax.dot_general(Cm, h0, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q, P)
+    y = y + jnp.exp(cum)[:, None] * Ch
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+    # state update
+    total = cum[-1]
+    decay_t = jnp.exp(total - cum)                  # (Q,)
+    dBx = jax.lax.dot_general(xdt * decay_t[:, None], Bm,
+                              (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (P, N)
+    h_ref[...] = jnp.exp(total) * h0 + dBx
+
+
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 128,
+             interpret: bool = False) -> jax.Array:
+    """x: (Bt, S, H, P); dt: (Bt, S, H); A: (H,) negative reals;
+    B, C: (Bt, S, N). Returns y (Bt, S, H, P) fp32."""
+    Bt, S, H, P = x.shape
+    N = B.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    grid = (Bt, H, S // chunk)
+    f32 = jnp.float32
+    return pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, ci: (b, ci, h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, h, ci: (b, ci, h)),
+            pl.BlockSpec((1,), lambda b, h, ci: (h,)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, ci: (b, ci, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, ci: (b, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, 1, P),
+                               lambda b, h, ci: (b, ci, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bt, S, H, P), f32),
+        scratch_shapes=[pltpu.VMEM((P, N), f32)],
+        interpret=interpret,
+    )(x.astype(f32), dt.astype(f32), A.astype(f32), B.astype(f32),
+      C.astype(f32))

@@ -1,0 +1,2 @@
+"""Launch layer: mesh construction, abstract input specs, step factories,
+multi-pod dry-run, and the training/serving drivers."""

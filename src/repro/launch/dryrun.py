@@ -1,0 +1,242 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell on the production mesh with placeholder devices; record
+memory_analysis / cost_analysis / collective bytes for the roofline.
+
+The two lines above MUST precede every other import (jax locks the device
+count on first init). Run as:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only]
+
+Outputs one JSON per cell under results/dryrun/.
+"""
+
+import argparse
+import json
+import pathlib
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import ShapeCell
+from repro.core.graphs import complete_graph
+from repro.launch import specs as sp
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (make_consensus_steps, make_prefill_step,
+                                make_serve_step, make_train_step)
+from repro.models import registry
+from repro.optim import adamw, cosine_lr
+from repro.runtime import sharding as shrules
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+# HLO collective ops whose operand bytes count toward the collective term.
+_COLL_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(", re.IGNORECASE)
+_SHAPE_RE = re.compile(r"(bf16|f16|f32|f64|s32|u32|s8|u8|s64|u64|pred|s16|u16)"
+                       r"\[([0-9,]*)\]")
+_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "f64": 8, "s32": 4, "u32": 4,
+          "s8": 1, "u8": 1, "s64": 8, "u64": 8, "pred": 1, "s16": 2, "u16": 2}
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Sum output-shape bytes of every collective op in the (SPMD-partitioned)
+    HLO. Shapes in post-SPMD HLO are per-device; we report per-device bytes
+    crossing links. Returns totals keyed by op kind."""
+    out: dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or "= " not in line:
+            continue
+        kind = m.group(1).lower()
+        rhs = line.split("= ", 1)[1]
+        dm = _SHAPE_RE.search(rhs)  # first shape = op output (per-device)
+        if dm is None:
+            continue
+        dims = dm.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        out[kind] = out.get(kind, 0.0) + n * _BYTES[dm.group(1)]
+    return out
+
+
+def _cost(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float))}
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+
+
+def _memory(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+        keys = ("argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes",
+                "alias_size_in_bytes")
+        return {k: float(getattr(ma, k)) for k in keys if hasattr(ma, k)}
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+
+
+def dryrun_cell(arch: str, cell: ShapeCell, multi_pod: bool,
+                *, save: bool = True, donate: bool = True,
+                verbose: bool = True, cfg_override=None) -> dict:
+    """Lower + compile one (arch, shape, mesh) cell; return the record."""
+    cfg = cfg_override or registry.get_config(arch, "full")
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    data_size = dict(zip(mesh.axis_names, mesh.devices.shape))["data"]
+    moe_groups = data_size if cfg.moe_experts else 1
+    rec = {"arch": arch, "shape": cell.name, "mesh": mesh_name,
+           "kind": cell.kind, "seq_len": cell.seq_len,
+           "global_batch": cell.global_batch}
+    t0 = time.time()
+
+    optimizer = adamw(cosine_lr(3e-4, 10000),
+                      moment_dtype=(jnp.bfloat16 if cfg.opt_moments_bf16
+                                    else jnp.float32))
+    with shrules.use_rules(shrules.DEFAULT_RULES, mesh):
+        if cell.kind == "train":
+            consensus = multi_pod
+            params, pspecs = sp.param_specs(cfg, mesh)
+            state, sspecs = sp.opt_state_specs(optimizer, params, pspecs)
+            batch, bspecs = sp.batch_specs(cfg, cell, mesh,
+                                           consensus=consensus)
+            if consensus:
+                n_pods = dict(zip(mesh.axis_names,
+                                  mesh.devices.shape))["pod"]
+                params, pspecs = sp.pod_stack(params, pspecs, n_pods)
+                state, sspecs = sp.pod_stack(state, sspecs, n_pods)
+                graph = complete_graph(n_pods)
+                _, _, step = make_consensus_steps(
+                    cfg, optimizer, graph, mesh, moe_groups=moe_groups,
+                    microbatches=cfg.train_microbatches)
+            else:
+                step = make_train_step(cfg, optimizer, moe_groups=moe_groups,
+                                       microbatches=cfg.train_microbatches)
+            args = (params, state, batch)
+            in_sh = sp.to_shardings((pspecs, sspecs, bspecs), mesh)
+            jitted = jax.jit(
+                step, in_shardings=in_sh,
+                donate_argnums=(0, 1) if donate else ())
+        elif cell.kind == "prefill":
+            params, pspecs = sp.param_specs(cfg, mesh)
+            batch, bspecs = sp.batch_specs(cfg, cell, mesh, consensus=False)
+            step = make_prefill_step(cfg, moe_groups=moe_groups)
+            args = (params, batch)
+            in_sh = sp.to_shardings((pspecs, bspecs), mesh)
+            jitted = jax.jit(step, in_shardings=in_sh)
+        else:  # decode
+            params, pspecs = sp.param_specs(cfg, mesh)
+            cache, cspecs = sp.cache_specs(cfg, cell, mesh)
+            toks, tspecs = sp.decode_token_specs(cell, mesh)
+            step = make_serve_step(cfg, moe_groups=1)
+            args = (params, cache, toks["tokens"], toks["pos"])
+            in_sh = sp.to_shardings(
+                (pspecs, cspecs, tspecs["tokens"], tspecs["pos"]), mesh)
+            jitted = jax.jit(step, in_shardings=in_sh,
+                             donate_argnums=(1,) if donate else ())
+
+        with mesh:
+            lowered = jitted.lower(*args)
+            rec["lower_s"] = round(time.time() - t0, 1)
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.time() - t1, 1)
+
+    rec["memory"] = _memory(compiled)
+    rec["cost"] = _cost(compiled)
+    hlo = compiled.as_text()
+    rec["collectives"] = collective_bytes(hlo)
+    rec["hlo_collective_op_counts"] = {
+        k: hlo.count(f" {k}") for k in
+        ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+         "collective-permute")}
+    n_dev = mesh.devices.size
+    arg_b = rec["memory"].get("argument_size_in_bytes", 0.0)
+    tmp_b = rec["memory"].get("temp_size_in_bytes", 0.0)
+    out_b = rec["memory"].get("output_size_in_bytes", 0.0)
+    alias_b = rec["memory"].get("alias_size_in_bytes", 0.0)
+    rec["bytes_per_device"] = arg_b + tmp_b + max(out_b - alias_b, 0.0)
+    rec["devices"] = n_dev
+    if verbose:
+        print(f"[dryrun] {arch} {cell.name} {mesh_name}: "
+              f"lower {rec['lower_s']}s compile {rec['compile_s']}s  "
+              f"mem/dev {(rec['bytes_per_device'])/2**30:.2f} GiB  "
+              f"flops {rec['cost'].get('flops', 0):.3g}", flush=True)
+    if save:
+        RESULTS.mkdir(parents=True, exist_ok=True)
+        fname = RESULTS / f"{arch}__{cell.name}__{mesh_name}.json"
+        fname.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def dryrun_cell_with_cfg(arch: str, cfg, cell: ShapeCell, multi_pod: bool,
+                         *, save: bool = False, verbose: bool = False) -> dict:
+    """Probe variant: compile `cell` under an explicit (modified) config --
+    used by benchmarks/roofline.py for per-layer cost probes."""
+    return dryrun_cell(arch, cell, multi_pod, save=save, verbose=verbose,
+                       cfg_override=cfg)
+
+
+def iter_cells(multi_pod_only=False, arch_filter=None, shape_filter=None):
+    for arch in registry.ARCH_IDS:
+        if arch_filter and arch != arch_filter:
+            continue
+        for cell in registry.get_shapes(arch).values():
+            if shape_filter and cell.name != shape_filter:
+                continue
+            if cell.skip:
+                yield arch, cell, None
+                continue
+            meshes = [True] if multi_pod_only else [False, True]
+            for mp in meshes:
+                yield arch, cell, mp
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--no-save", action="store_true")
+    args = ap.parse_args(argv)
+
+    failures = []
+    for arch, cell, mp in iter_cells(args.multi_pod_only, args.arch,
+                                     args.shape):
+        if mp is None:
+            print(f"[dryrun] SKIP {arch} {cell.name}: {cell.skip}")
+            continue
+        if args.single_pod_only and mp:
+            continue
+        try:
+            dryrun_cell(arch, cell, mp, save=not args.no_save)
+        except Exception:
+            failures.append((arch, cell.name, mp))
+            traceback.print_exc()
+    if failures:
+        print(f"[dryrun] FAILURES: {failures}")
+        return 1
+    print("[dryrun] all requested cells compiled OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,182 @@
+"""Abstract input specs (ShapeDtypeStruct + PartitionSpec) for every
+(architecture x input-shape) cell -- the dry-run's stand-ins. No device
+memory is ever allocated here.
+
+For consensus (multi-pod) training, model/optimizer state carries a leading
+`pod` replica dimension: each pod is one DDA node with its own parameters;
+the batch is split across pods (disjoint data shards, paper section II).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import ShapeCell
+from repro.models import transformer
+from repro.models.common import ModelConfig
+from repro.optim import Optimizer
+from repro.runtime import sharding as shrules
+
+PyTree = Any
+
+
+def to_shardings(specs: PyTree, mesh) -> PyTree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def pod_stack(tree: PyTree, specs: PyTree, n_pods: int
+              ) -> tuple[PyTree, PyTree]:
+    """Prepend a pod-replica dimension (sharded over 'pod') to every leaf."""
+    stacked = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n_pods,) + s.shape, s.dtype), tree)
+    sspecs = jax.tree.map(lambda s: P("pod", *s), specs,
+                          is_leaf=lambda x: isinstance(x, P))
+    return stacked, sspecs
+
+
+def params_and_axes(cfg: ModelConfig) -> tuple[PyTree, PyTree]:
+    """Abstract params (ShapeDtypeStructs, no allocation) + logical axes.
+    The axes tree is static python data, captured via a side channel since
+    eval_shape outputs must be arrays."""
+    box = []
+
+    def build(k):
+        params, axes = transformer.init(k, cfg)
+        box.append(axes)
+        return params
+
+    abstract = jax.eval_shape(build, jax.random.PRNGKey(0))
+    return abstract, box[0]
+
+
+def param_specs(cfg: ModelConfig, mesh) -> tuple[PyTree, PyTree]:
+    """(abstract params, partition specs) -- no pod dimension."""
+    params, axes = params_and_axes(cfg)
+    specs = shrules.tree_specs(params, axes, mesh)
+    return params, specs
+
+
+def opt_state_specs(optimizer: Optimizer, abstract_params: PyTree,
+                    param_specs_tree: PyTree) -> tuple[PyTree, PyTree]:
+    """Abstract optimizer state + specs: moment tensors inherit the param
+    specs; scalar counters are replicated."""
+    state = jax.eval_shape(optimizer.init, abstract_params)
+
+    def specs_like(subtree):
+        leaves_p = jax.tree.leaves(abstract_params)
+        leaves_s = jax.tree.leaves(param_specs_tree,
+                                   is_leaf=lambda x: isinstance(x, P))
+        if len(jax.tree.leaves(subtree)) == len(leaves_p):
+            return jax.tree.unflatten(jax.tree.structure(subtree), leaves_s)
+        return jax.tree.map(lambda l: P(), subtree)
+
+    if state.inner is None:
+        inner_specs = None
+    elif isinstance(state.inner, dict):
+        inner_specs = {k: specs_like(v) for k, v in state.inner.items()}
+    else:
+        inner_specs = specs_like(state.inner)
+    return state, type(state)(step=P(), inner=inner_specs)
+
+
+def batch_specs(cfg: ModelConfig, cell: ShapeCell, mesh,
+                *, consensus: bool) -> tuple[PyTree, PyTree]:
+    """Training/prefill batch: tokens+labels (+enc for VLM)."""
+    has_pod = "pod" in mesh.axis_names
+    B, S = cell.global_batch, cell.seq_len
+    if has_pod and consensus:
+        n_pods = dict(zip(mesh.axis_names, mesh.devices.shape))["pod"]
+        lead, batch_spec = (n_pods,), P("pod", "data", None)
+        B = B // n_pods
+    elif has_pod:
+        lead, batch_spec = (), P(("pod", "data"), None)
+    else:
+        lead, batch_spec = (), P("data", None)
+    tok = jax.ShapeDtypeStruct(lead + (B, S), jnp.int32)
+    batch = {"tokens": tok, "labels": tok}
+    spec = {"tokens": batch_spec, "labels": batch_spec}
+    if cfg.family == "vlm":
+        enc_spec = P(*batch_spec[:len(lead) + 1], None, None)
+        batch["enc"] = jax.ShapeDtypeStruct(
+            lead + (B, cfg.num_encoder_tokens, cfg.encoder_dim), cfg.dtype)
+        spec["enc"] = enc_spec
+    return batch, spec
+
+
+def cache_specs(cfg: ModelConfig, cell: ShapeCell, mesh
+                ) -> tuple[PyTree, PyTree]:
+    """Decode cache: abstract tree + specs. Batch is sharded over
+    ('pod','data') jointly when a pod axis exists (serving replicates params
+    across pods; pods are extra data parallelism)."""
+    B, S = cell.global_batch, cell.seq_len
+    cache = jax.eval_shape(
+        lambda: transformer.init_cache(cfg, B, S, jnp.bfloat16))
+    axes = transformer.cache_axes(cfg)
+    rules = dict(shrules.DEFAULT_RULES)
+    if "pod" in mesh.axis_names:
+        rules["batch"] = (("pod", "data"),)  # composite axis
+    specs = _cache_tree_specs(cache, axes, mesh, rules)
+    return cache, specs
+
+
+def _cache_tree_specs(cache, axes, mesh, rules):
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def size_of(cand):
+        if isinstance(cand, tuple):  # composite ('pod','data')
+            n = 1
+            for c in cand:
+                n *= mesh_shape.get(c, 1)
+            return n
+        return mesh_shape.get(cand, 1)
+
+    def one_spec(shape, ax):
+        used = set()
+        ax = list(ax)
+        shape = list(shape)
+        out = [None] * len(ax)
+        order = sorted(range(len(ax)),
+                       key=lambda i: (shrules._ASSIGN_PRIORITY.get(ax[i], 1),
+                                      i))
+        for i in order:
+            name = ax[i]
+            for cand in (rules.get(name, ()) if name else ()):
+                key = cand if isinstance(cand, str) else tuple(cand)
+                if key in used:
+                    continue
+                if size_of(cand) > 1 and shape[i] % size_of(cand) == 0:
+                    out[i] = cand
+                    used.add(key)
+                    break
+        return P(*out)
+
+    flat_v, treedef = jax.tree.flatten(cache)
+    flat_a = jax.tree.flatten(axes, is_leaf=shrules.is_axes_leaf)[0]
+    specs = [one_spec(v.shape, a) for v, a in zip(flat_v, flat_a)]
+    return jax.tree.unflatten(treedef, specs)
+
+
+def decode_token_specs(cell: ShapeCell, mesh) -> tuple[PyTree, PyTree]:
+    B = cell.global_batch
+    spec = (P(("pod", "data")) if "pod" in mesh.axis_names else P("data"))
+    if B % _spec_size(spec, mesh) != 0:
+        spec = P()  # tiny batches (long_500k B=1): replicate
+    tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return ({"tokens": tok, "pos": pos}, {"tokens": spec, "pos": P()})
+
+
+def _spec_size(spec: P, mesh) -> int:
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = 1
+    for part in spec:
+        if part is None:
+            continue
+        for ax in (part if isinstance(part, tuple) else (part,)):
+            n *= mesh_shape.get(ax, 1)
+    return n

@@ -1,0 +1,3 @@
+from repro.models.common import ModelConfig, cross_entropy_loss
+from repro.models.registry import ARCH_IDS, get_config, get_shapes, list_archs
+from repro.models import transformer

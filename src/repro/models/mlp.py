@@ -1,0 +1,214 @@
+"""Feed-forward blocks: dense (SwiGLU / squared-ReLU / GELU) and
+Mixture-of-Experts with shared experts + top-k token-choice routing.
+
+MoE dispatch uses the sort-based fixed-capacity scheme (no (tokens x experts
+x capacity) one-hot): flatten token assignments, sort by expert id, compute
+each token's slot inside its expert segment, and scatter into an
+(experts, capacity, d) buffer (one overflow row absorbs drops). Experts are
+sharded over the `model` mesh axis (EP); tokens are model-replicated after
+the attention all-reduce, so dispatch/combine stay device-local and the only
+MoE collective is the usual TP reduction of the output.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, p, pz, rms_norm
+from repro.runtime.sharding import constrain
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Dense FFN
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, cfg: ModelConfig, d_ff: int | None = None) -> PyTree:
+    ks = jax.random.split(key, 4)
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    prm = {
+        "norm": pz((D,), ("embed",), jnp.float32),
+        "w_up": p(ks[0], (D, F), ("embed", "mlp"), cfg.dtype),
+        "w_down": p(ks[1], (F, D), ("mlp", "embed"), cfg.dtype),
+    }
+    if cfg.mlp_act == "swiglu":
+        prm["w_gate"] = p(ks[2], (D, F), ("embed", "mlp"), cfg.dtype)
+    return prm
+
+
+def _ffn(prm, h, cfg: ModelConfig):
+    # Default: sequence-parallel MLP -- tokens stay sharded over
+    # ('data','model'), every device runs the FULL d_ff for its token shard.
+    # Identical FLOPs to Megatron TP-MLP with ZERO model-axis activation
+    # collectives, but each device gathers the full (D,F) weights per layer.
+    # For very wide FFNs (qwen110b d_ff=49152) the weight gathers dominate,
+    # so cfg.mlp_tp selects the classic Megatron split: d_ff sharded over
+    # 'model', residual gathered/reduced. (EXPERIMENTS.md section Perf.)
+    tok_axes = (("batch", "seq", "embed_act") if cfg.mlp_tp
+                else ("batch", "seq_sp", "embed_act"))
+    act_axes = (("batch", "seq", "mlp") if cfg.mlp_tp
+                else ("batch", "seq_sp", None))
+    h = constrain(h, tok_axes)
+    up = jnp.einsum("bsd,df->bsf", h, prm["w_up"])
+    if cfg.mlp_act == "swiglu":
+        gate = jnp.einsum("bsd,df->bsf", h, prm["w_gate"])
+        act = jax.nn.silu(gate) * up
+    elif cfg.mlp_act == "squared_relu":
+        r = jnp.maximum(up, 0.0)
+        act = r * r
+    else:
+        act = jax.nn.gelu(up)
+    act = constrain(act, act_axes)
+    return jnp.einsum("bsf,fd->bsd", act, prm["w_down"])
+
+
+def mlp_apply(prm, x, cfg: ModelConfig, d_ff: int | None = None) -> jax.Array:
+    h = rms_norm(x, prm["norm"])
+    out = _ffn(prm, h, cfg)
+    return constrain(out, ("batch", "seq_sp", "embed_act"))
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts
+# ---------------------------------------------------------------------------
+
+
+def moe_init(key, cfg: ModelConfig) -> PyTree:
+    ks = jax.random.split(key, 6)
+    D, E = cfg.d_model, cfg.moe_experts
+    F = cfg.moe_d_ff or cfg.d_ff
+    prm = {
+        "norm": pz((D,), ("embed",), jnp.float32),
+        "router": p(ks[0], (D, E), ("embed", "experts"), jnp.float32),
+        "w_up": p(ks[1], (E, D, F), ("experts", "embed", "expert_mlp"),
+                  cfg.dtype),
+        "w_gate": p(ks[2], (E, D, F), ("experts", "embed", "expert_mlp"),
+                    cfg.dtype),
+        "w_down": p(ks[3], (E, F, D), ("experts", "expert_mlp", "embed"),
+                    cfg.dtype),
+    }
+    if cfg.moe_shared > 0:
+        prm["shared"] = mlp_init(ks[4], cfg,
+                                 d_ff=(cfg.moe_d_ff or cfg.d_ff) * cfg.moe_shared)
+        del prm["shared"]["norm"]  # shares the block norm
+    return prm
+
+
+def _dispatch_indices(expert_ids: jax.Array, num_experts: int, capacity: int):
+    """Sort-based slotting. expert_ids: (A,) flat assignments.
+
+    Returns flat destination index in [0, E*C] for each assignment, where
+    E*C is the overflow slot (dropped tokens).
+    """
+    A = expert_ids.shape[0]
+    sort_idx = jnp.argsort(expert_ids)                  # stable
+    sorted_ids = expert_ids[sort_idx]
+    seg_starts = jnp.searchsorted(sorted_ids, jnp.arange(num_experts))
+    pos_in_expert = jnp.arange(A) - seg_starts[sorted_ids]
+    dest_sorted = jnp.where(pos_in_expert < capacity,
+                            sorted_ids * capacity + pos_in_expert,
+                            num_experts * capacity)
+    dest = jnp.zeros((A,), dest_sorted.dtype).at[sort_idx].set(dest_sorted)
+    return dest
+
+
+def _moe_grouped(tokens, router, w_up, w_gate, w_down, cfg: ModelConfig,
+                 capacity: int):
+    """Route and run experts for G dispatch groups. tokens: (G, Nl, D),
+    G sharded over 'data', experts over 'model'.
+
+    Dispatch is GATHER-based: a cheap per-group 1-D index scatter builds the
+    inverse map slot -> source token, then the (G, E, C, D) expert inputs are
+    a batched gather (scattering (Nl*K, D) token payloads lowers
+    catastrophically in SPMD -- it materialized a u32[(EC+1), D] index
+    tensor; gathers do not). All large intermediates carry explicit sharding
+    constraints: (G -> data, E -> model)."""
+    G, Nl, D = tokens.shape
+    E, K = cfg.moe_experts, cfg.moe_top_k
+    C = capacity
+    logits = jnp.einsum("gnd,de->gne", tokens.astype(jnp.float32), router)
+    gates, ids = jax.lax.top_k(jax.nn.softmax(logits, axis=-1), K)  # (G,Nl,K)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    dest = jax.vmap(
+        lambda i: _dispatch_indices(i, E, C))(ids.reshape(G, Nl * K))
+    dest = constrain(dest, ("batch", None))                  # (G, Nl*K) int
+    # inverse map per group: which assignment fills expert slot s
+    slot_src = jnp.full((G, E * C + 1), Nl * K, jnp.int32)
+    slot_src = jax.vmap(lambda s, d: s.at[d].set(
+        jnp.arange(Nl * K, dtype=jnp.int32)))(slot_src, dest)
+    slot_src = slot_src[:, :E * C]                           # (G, E*C)
+    slot_valid = slot_src < Nl * K
+    token_src = jnp.where(slot_valid, slot_src // K, 0)
+    expert_in = jnp.take_along_axis(
+        tokens, token_src[..., None], axis=1)                # (G, E*C, D)
+    expert_in = jnp.where(slot_valid[..., None], expert_in, 0)
+    expert_in = expert_in.reshape(G, E, C, D)
+    expert_in = constrain(expert_in, ("batch", "experts", None, "embed_act"))
+
+    up = jnp.einsum("gecd,edf->gecf", expert_in, w_up)
+    gate = jnp.einsum("gecd,edf->gecf", expert_in, w_gate)
+    act = jax.nn.silu(gate) * up
+    act = constrain(act, ("batch", "experts", None, "expert_mlp"))
+    expert_out = jnp.einsum("gecf,efd->gecd", act, w_down)
+    expert_out = constrain(expert_out,
+                           ("batch", "experts", None, "embed_act"))
+
+    flat_out = jnp.concatenate(
+        [expert_out.reshape(G, E * C, D),
+         jnp.zeros((G, 1, D), expert_out.dtype)], axis=1)
+    out = jnp.zeros((G, Nl, D), jnp.float32)
+    for k in range(K):  # accumulate per assignment; no (G,Nl,K,D) tensor
+        picked = jnp.take_along_axis(
+            flat_out, dest.reshape(G, Nl, K)[:, :, k][..., None], axis=1)
+        out = out + picked.astype(jnp.float32) * gates[:, :, k:k + 1]
+    out = constrain(out, ("batch", None, "embed_act"))
+    return out.astype(tokens.dtype)
+
+
+def moe_apply(prm, x, cfg: ModelConfig, groups: int = 1) -> jax.Array:
+    """Token-choice top-k MoE with fixed capacity and optional shared experts.
+
+    x: (B,S,D). Router in fp32. `groups` partitions the tokens into
+    independent dispatch groups (the launcher sets groups = data-axis size so
+    each data shard routes its own tokens with a LOCAL capacity buffer --
+    dispatch and combine then stay device-local; the only MoE collectives
+    left are the FSDP weight gathers and the TP output reduction).
+    Capacity per group: C = ceil(top_k * tokens_per_group * cf / E).
+    """
+    B, S, D = x.shape
+    E, K = cfg.moe_experts, cfg.moe_top_k
+    h = rms_norm(x, prm["norm"])
+    N = B * S
+    G = groups if N % groups == 0 else 1
+    Nl = N // G
+    C = max(1, int(-(-K * Nl * cfg.moe_capacity_factor // E)))
+
+    tokens = h.reshape(G, Nl, D)
+    tokens = constrain(tokens, ("batch", None, "embed_act"))
+    combined = _moe_grouped(tokens, prm["router"], prm["w_up"],
+                            prm["w_gate"], prm["w_down"], cfg, C)
+
+    out = combined.reshape(B, S, D)
+    if "shared" in prm:
+        out = out + _ffn(prm["shared"], h, cfg)
+    return constrain(out, ("batch", "seq", "embed_act"))
+
+
+def moe_aux_loss(prm, x, cfg: ModelConfig) -> jax.Array:
+    """Load-balancing auxiliary loss (Switch-style): E * sum_e f_e * p_e."""
+    B, S, D = x.shape
+    h = rms_norm(x, prm["norm"]).reshape(B * S, D)
+    logits = jnp.einsum("nd,de->ne", h.astype(jnp.float32), prm["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top1 = jnp.argmax(probs, axis=-1)
+    frac = jnp.mean(jax.nn.one_hot(top1, cfg.moe_experts, dtype=jnp.float32),
+                    axis=0)
+    prob = jnp.mean(probs, axis=0)
+    return cfg.moe_experts * jnp.sum(frac * prob)

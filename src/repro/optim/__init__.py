@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (Optimizer, adamw, dual_averaging, sgd,
+                                    OptState)
+from repro.optim.lr import constant_lr, cosine_lr, rsqrt_lr, warmup_cosine

@@ -1,0 +1,34 @@
+"""Learning-rate / DDA step-size schedules. All return f(step)->lr with
+`step` a traced scalar (1-indexed)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_lr(lr: float):
+    return lambda t: jnp.asarray(lr, jnp.float32)
+
+
+def rsqrt_lr(A: float, q: float = 0.5):
+    """The paper's a(t) = A / t^q (q=1/2 default, eq. 7; general q for the
+    increasingly-sparse regime, section IV.B)."""
+    return lambda t: A / jnp.maximum(t.astype(jnp.float32), 1.0) ** q
+
+
+def cosine_lr(peak: float, total_steps: int, floor: float = 0.0):
+    def f(t):
+        frac = jnp.clip(t.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        return floor + 0.5 * (peak - floor) * (1.0 + jnp.cos(jnp.pi * frac))
+    return f
+
+
+def warmup_cosine(peak: float, warmup: int, total_steps: int,
+                  floor: float = 0.0):
+    def f(t):
+        t = t.astype(jnp.float32)
+        warm = peak * t / max(warmup, 1)
+        frac = jnp.clip((t - warmup) / max(total_steps - warmup, 1), 0.0, 1.0)
+        cos = floor + 0.5 * (peak - floor) * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(t < warmup, warm, cos)
+    return f

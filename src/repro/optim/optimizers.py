@@ -1,0 +1,128 @@
+"""Optimizers as pure (init, update) pairs (optax-style, self-contained).
+
+`dual_averaging` is the paper's inner update (eq. 3-4 without the consensus
+term, which the launcher applies via `core.consensus`): the state carries the
+accumulated subgradient z and the primal is x = -a(t) z. `adamw`/`sgd` are
+the substrate optimizers for the consensus-SGD (section VI) LM training mode.
+
+Adam moments are fp32 regardless of param dtype; updates are computed in
+fp32 and cast back (bf16 params + fp32 state; no separate fp32 master copy
+-- documented in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    inner: PyTree
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], OptState]
+    update: Callable[[PyTree, OptState, PyTree], tuple[PyTree, OptState]]
+    name: str = "opt"
+
+
+def sgd(lr_fn, momentum: float = 0.0, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        inner = (jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), params)
+                 if momentum else None)
+        return OptState(jnp.zeros((), jnp.int32), inner)
+
+    def update(grads, state, params):
+        t = state.step + 1
+        lr = lr_fn(t)
+
+        if momentum:
+            new_m = jax.tree.map(
+                lambda m, g: momentum * m + g.astype(jnp.float32),
+                state.inner, grads)
+            upd = new_m
+        else:
+            new_m = None
+            upd = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        new_params = jax.tree.map(
+            lambda p_, u: (p_.astype(jnp.float32)
+                           - lr * (u + weight_decay * p_.astype(jnp.float32))
+                           ).astype(p_.dtype),
+            params, upd)
+        return new_params, OptState(t, new_m)
+
+    return Optimizer(init, update, "sgd")
+
+
+def adamw(lr_fn, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, moment_dtype=jnp.float32) -> Optimizer:
+    """moment_dtype=bfloat16 halves optimizer-state HBM (the standard
+    large-model tradeoff; updates still computed in fp32)."""
+    def init(params):
+        zeros = lambda: jax.tree.map(
+            lambda x: jnp.zeros(x.shape, moment_dtype), params)
+        return OptState(jnp.zeros((), jnp.int32),
+                        {"m": zeros(), "v": zeros()})
+
+    def update(grads, state, params):
+        t = state.step + 1
+        lr = lr_fn(t)
+        tf = t.astype(jnp.float32)
+        c1 = 1.0 - b1 ** tf
+        c2 = 1.0 - b2 ** tf
+
+        def one(p_, g, m, v):
+            g = g.astype(jnp.float32)
+            mf = b1 * m.astype(jnp.float32) + (1 - b1) * g
+            vf = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+            upd = (mf / c1) / (jnp.sqrt(vf / c2) + eps)
+            newp = (p_.astype(jnp.float32)
+                    - lr * (upd + weight_decay * p_.astype(jnp.float32)))
+            return (newp.astype(p_.dtype), mf.astype(moment_dtype),
+                    vf.astype(moment_dtype))
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state.inner["m"])
+        flat_v = jax.tree.leaves(state.inner["v"])
+        out = [one(p_, g, m, v) for p_, g, m, v
+               in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+        new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+        new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+        return new_params, OptState(t, {"m": new_m, "v": new_v})
+
+    return Optimizer(init, update, "adamw")
+
+
+def dual_averaging(a_fn, projection: Callable[[PyTree], PyTree] | None = None
+                   ) -> Optimizer:
+    """DDA primal-dual update (paper eq. 3-4, local part):
+        z <- z + g;   x <- Proj(-a(t) z)
+    The consensus mixing of z happens OUTSIDE (launcher/mix step), exactly as
+    the paper separates cheap and expensive iterations."""
+
+    def init(params):
+        return OptState(jnp.zeros((), jnp.int32),
+                        {"z": jax.tree.map(
+                            lambda x: jnp.zeros(x.shape, jnp.float32), params)})
+
+    def update(grads, state, params):
+        t = state.step + 1
+        a_t = a_fn(t)
+        new_z = jax.tree.map(lambda z, g: z + g.astype(jnp.float32),
+                             state.inner["z"], grads)
+        new_params = jax.tree.map(
+            lambda p_, z: (-a_t * z).astype(p_.dtype), params, new_z)
+        if projection is not None:
+            new_params = projection(new_params)
+        return new_params, OptState(t, {"z": new_z})
+
+    return Optimizer(init, update, "dual_averaging")

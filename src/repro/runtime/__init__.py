@@ -1,0 +1,2 @@
+from repro.runtime.sharding import (DEFAULT_RULES, constrain, tree_shardings,
+                                    tree_specs, use_rules)

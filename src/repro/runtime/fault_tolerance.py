@@ -1,0 +1,77 @@
+"""Fault tolerance: straggler-tolerant consensus and failure handling.
+
+The paper's motivation (section I): consensus algorithms are "immune to slow
+nodes that use part of their computation and communication resources for
+unrelated tasks" and tolerate delays (ref [9]). This module makes those
+claims operational:
+
+  * deadline gossip  -- a round's mixing proceeds with whatever messages
+    arrived by the deadline; missing neighbors' weights fold back into the
+    self weight (row-stochasticity preserved, so iterates stay in the convex
+    hull; the doubly-stochastic property is restored on the next full round)
+  * stale mixing     -- late messages are still used one round later
+    (delay-tolerant DDA), implemented in core.consensus.mix_stale
+  * crash + restart  -- checkpoint/resume via repro.checkpoint; on a node
+    loss the elastic module (runtime.elastic) rebuilds the graph
+
+`StragglerModel` simulates per-node slowdown for tests/benchmarks: each
+round each node is slow with probability p_slow (multiplier m_slow), and a
+message misses the deadline when sender_delay > deadline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.graphs import CommGraph
+
+
+@dataclasses.dataclass
+class StragglerModel:
+    p_slow: float = 0.1
+    m_slow: float = 4.0          # slowdown multiplier for a straggling node
+    deadline: float = 2.0        # in units of the median round time
+    seed: int = 0
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+
+    def sample_round(self, n: int) -> np.ndarray:
+        """Per-node completion time for one round (median-normalized)."""
+        slow = self._rng.random(n) < self.p_slow
+        return np.where(slow, self.m_slow, 1.0)
+
+    def arrival_mask(self, n: int) -> np.ndarray:
+        """mask[j] = True if node j's message makes the deadline."""
+        return self.sample_round(n) <= self.deadline
+
+
+def degraded_matrix(graph: CommGraph, arrived: np.ndarray) -> np.ndarray:
+    """Mixing matrix for a round where only `arrived[j]` messages landed.
+
+    Every weight p_ij for a missing j (j != i) is folded into p_ii: rows
+    stay stochastic and the update remains a convex combination. The result
+    is generally NOT doubly stochastic -- consensus-weighted averaging with
+    occasional drop rounds still converges when drops are independent and
+    the expected graph is connected (tested empirically in
+    tests/test_fault_tolerance.py)."""
+    P = graph.mixing_matrix().copy()
+    n = P.shape[0]
+    for j in range(n):
+        if not arrived[j]:
+            col = P[:, j].copy()
+            for i in range(n):
+                if i != j:
+                    P[i, i] += col[i]
+                    P[i, j] = 0.0
+    return P
+
+
+def effective_round_time(times: np.ndarray, deadline: float,
+                         comm_cost: float) -> float:
+    """Wall time of a deadline-gossip round: stragglers beyond the deadline
+    do NOT gate the round (that is the point); the round costs the deadline
+    plus the communication term."""
+    return float(min(times.max(), deadline) + comm_cost)

@@ -1,0 +1,165 @@
+"""Logical-axis sharding rules (MaxText-style) and activation constraints.
+
+Model code annotates params and activations with LOGICAL axis names
+("batch", "embed", "q_heads", ...). A `Rules` table maps logical names to
+mesh axes; `constrain(x, axes)` applies `with_sharding_constraint` when a
+rules context is active (set by the launcher), and is a no-op otherwise so
+model code runs unmodified on a single CPU device in tests.
+
+A logical axis is only sharded if the dimension is divisible by the mesh
+axis size (e.g. llama3's 8 KV heads stay replicated on a model=16 mesh and
+the KV cache is sharded over sequence instead -- see DEFAULT_RULES).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Sequence
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+PyTree = Any
+
+# logical axis -> preference-ordered candidate mesh axes
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("data",),
+    "seq": (),
+    # residual stream BETWEEN blocks: sequence-parallel over 'model'
+    # (Megatron SP). Cuts the per-layer saved-activation footprint by the
+    # model-axis size; XLA re-gathers at attention entry.
+    "seq_sp": ("model",),
+    "cache_seq": ("model",),       # decode KV/state cache: sequence-sharded
+    "embed": ("data",),            # FSDP: shard params' d_model over data
+    "embed_act": (),               # activations' d_model: replicated (TP collects)
+    "q_heads": ("model",),
+    "kv_heads": ("model",),
+    # head dim is only ever sharded as the decode-cache fallback (weights'
+    # head dims lose to q/kv_heads via _ASSIGN_PRIORITY + the used-set)
+    "head": ("model",),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "expert_mlp": (),
+    "kv_lora": (),
+    "q_lora": (),   # never steal 'model' from q_heads in the MLA up-projs
+    "conv": (),
+    "state": (),
+    "ssm_inner": ("model",),
+    "ssm_heads": ("model",),
+    "layers": (),
+    "lora": (),
+    "enc_tokens": ("model",),
+    "enc_embed": (),
+}
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.rules: dict[str, tuple[str, ...]] | None = None
+        self.mesh: jax.sharding.Mesh | None = None
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def use_rules(rules: dict[str, tuple[str, ...]], mesh: jax.sharding.Mesh):
+    prev = (_CTX.rules, _CTX.mesh)
+    _CTX.rules, _CTX.mesh = rules, mesh
+    try:
+        yield
+    finally:
+        _CTX.rules, _CTX.mesh = prev
+
+
+# Lower value = assigned first when several logical axes compete for the
+# same mesh axis. cache_seq is the LAST resort: a dynamic-update-slice into
+# a sharded dim forces XLA to reshard the whole cache every decode step, so
+# decode caches prefer head-sharding (kv_heads, then head) over seq.
+_ASSIGN_PRIORITY = {
+    "batch": 0, "seq_sp": 0, "embed": 0, "experts": 0, "enc_tokens": 0,
+    "kv_heads": 1, "q_heads": 1, "mlp": 1, "vocab": 1, "ssm_inner": 1,
+    "ssm_heads": 1,
+    "head": 2,
+    "cache_seq": 3,
+}
+
+
+def logical_to_spec(shape: Sequence[int], axes: Sequence[str | None],
+                    rules: dict[str, tuple[str, ...]],
+                    mesh_shape: dict[str, int]) -> P:
+    """Resolve logical axes to a PartitionSpec, honoring divisibility and
+    never assigning one mesh axis twice. Competing axes are resolved in
+    _ASSIGN_PRIORITY order (then position order)."""
+    used: set[str] = set()
+    out: list[Any] = [None] * len(list(axes))
+    order = sorted(range(len(out)),
+                   key=lambda i: (_ASSIGN_PRIORITY.get(list(axes)[i], 1), i))
+    axes = list(axes)
+    shape = list(shape)
+    for i in order:
+        name = axes[i]
+        for cand in (rules.get(name, ()) if name else ()):
+            if cand in used:
+                continue
+            size = mesh_shape.get(cand, 1)
+            if size > 1 and shape[i] % size == 0:
+                out[i] = cand
+                used.add(cand)
+                break
+    return P(*out)
+
+
+def spec_for(x, axes: Sequence[str | None],
+             rules: dict[str, tuple[str, ...]] | None = None,
+             mesh: jax.sharding.Mesh | None = None) -> P:
+    rules = rules if rules is not None else _CTX.rules
+    mesh = mesh if mesh is not None else _CTX.mesh
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return logical_to_spec(x.shape, axes, rules, mesh_shape)
+
+
+def rules_active() -> bool:
+    """True when the launcher installed sharding rules (production mesh);
+    model code uses this to pick distribution-aware compute paths."""
+    return _CTX.rules is not None and _CTX.mesh is not None
+
+
+def constrain(x: jax.Array, axes: Sequence[str | None]) -> jax.Array:
+    """Apply a sharding constraint when a rules context is active."""
+    if _CTX.rules is None or _CTX.mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(_CTX.mesh, spec_for(x, axes)))
+
+
+def is_axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+
+
+def tree_specs(abstract_tree: PyTree, axes_tree: PyTree,
+               mesh: jax.sharding.Mesh,
+               rules: dict[str, tuple[str, ...]] | None = None) -> PyTree:
+    """PartitionSpecs for a whole tree: flatten the value tree and the
+    parallel logical-axes tree (whose leaves are tuples) independently."""
+    rules = rules if rules is not None else DEFAULT_RULES
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    flat_v, treedef = jax.tree.flatten(abstract_tree)
+    flat_a = jax.tree.flatten(axes_tree, is_leaf=is_axes_leaf)[0]
+    assert len(flat_v) == len(flat_a), (len(flat_v), len(flat_a))
+    specs = [logical_to_spec(v.shape, a, rules, mesh_shape)
+             for v, a in zip(flat_v, flat_a)]
+    return jax.tree.unflatten(treedef, specs)
+
+
+def tree_shardings(abstract_tree: PyTree, axes_tree: PyTree,
+                   mesh: jax.sharding.Mesh,
+                   rules: dict[str, tuple[str, ...]] | None = None) -> PyTree:
+    """NamedShardings for a whole tree (in_shardings / checkpoint layout)."""
+    specs = tree_specs(abstract_tree, axes_tree, mesh, rules)
+    return jax.tree.map(
+        lambda s: jax.sharding.NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,11 @@
+import os
+
+# Tests run on the default single CPU device (the dry-run sets its own
+# device count in its own process). Keep hypothesis deterministic.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from hypothesis import settings
+
+settings.register_profile("ci", max_examples=25, deadline=None,
+                          derandomize=True)
+settings.load_profile("ci")

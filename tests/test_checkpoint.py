@@ -1,0 +1,62 @@
+"""Checkpoint manager: roundtrip (incl. bf16), keep-k rotation, atomicity,
+resume."""
+
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, restore_tree, save_tree
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"w": jax.random.normal(k, (4, 8), jnp.bfloat16),
+            "m": jax.random.normal(k, (4, 8), jnp.float32),
+            "step": jnp.asarray(7, jnp.int32),
+            "nested": {"b": jnp.ones((3,), jnp.float32)}}
+
+
+def test_roundtrip_with_bf16(tmp_path):
+    tree = _tree()
+    save_tree(tmp_path / "ck", tree, extra={"note": "hi"})
+    restored, extra = restore_tree(tmp_path / "ck", tree)
+    assert extra["note"] == "hi"
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_commit_marker_required(tmp_path):
+    tree = _tree()
+    save_tree(tmp_path / "ck", tree)
+    (tmp_path / "ck" / "COMMIT").unlink()
+    with pytest.raises(FileNotFoundError):
+        restore_tree(tmp_path / "ck", tree)
+
+
+def test_manager_keep_k_and_resume(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for step in (10, 20, 30):
+        mgr.save(step, _tree(step), extra={"step": step}, blocking=True)
+    steps = [s for s, _ in mgr._step_dirs()]
+    assert steps == [20, 30]
+    got = mgr.restore_latest(_tree())
+    assert got is not None
+    step, tree, extra = got
+    assert step == 30 and extra["step"] == 30
+
+
+def test_manager_empty_dir(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    assert mgr.restore_latest(_tree()) is None
+
+
+def test_async_save_waits(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=1)
+    mgr.save(1, _tree(1))
+    mgr.wait()
+    assert mgr.latest_step() == 1

@@ -1,0 +1,80 @@
+"""Consensus mixing invariants: average preservation and contraction."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import consensus as C
+from repro.core import graphs as G
+
+
+@given(name=st.sampled_from(["complete", "ring", "hypercube", "expander4"]),
+       rows=st.integers(1, 6), seed=st.integers(0, 10))
+def test_mean_preservation(name, rows, seed):
+    n = 8
+    g = G.build_graph(name, n)
+    z = jnp.asarray(np.random.default_rng(seed).normal(size=(n, rows, 3)),
+                    jnp.float32)
+    zm = C.mix_dense(z, g.mixing_matrix())
+    np.testing.assert_allclose(np.asarray(zm.mean(0)), np.asarray(z.mean(0)),
+                               atol=1e-5)
+
+
+@given(name=st.sampled_from(["ring", "hypercube", "expander4", "complete"]),
+       seed=st.integers(0, 10))
+def test_disagreement_contracts(name, seed):
+    n = 8
+    g = G.build_graph(name, n)
+    z = jnp.asarray(np.random.default_rng(seed).normal(size=(n, 5)),
+                    jnp.float32)
+    d0 = float(C.disagreement(z))
+    zm = C.mix_dense(z, g.mixing_matrix())
+    d1 = float(C.disagreement(zm))
+    assert d1 <= d0 + 1e-6
+
+
+def test_complete_graph_one_round_consensus():
+    g = G.complete_graph(5)
+    z = jnp.asarray(np.random.default_rng(0).normal(size=(5, 7)), jnp.float32)
+    zm = C.mix_dense(z, g.mixing_matrix())
+    assert float(C.disagreement(zm)) < 1e-5
+
+
+def test_repeated_mixing_converges_to_average():
+    g = G.ring_graph(6)
+    P = g.mixing_matrix()
+    z = jnp.asarray(np.random.default_rng(1).normal(size=(6, 4)), jnp.float32)
+    target = z.mean(0)
+    for _ in range(200):
+        z = C.mix_dense(z, P)
+    np.testing.assert_allclose(np.asarray(z), np.tile(target, (6, 1)),
+                               atol=1e-4)
+
+
+def test_contraction_rate_matches_lambda2():
+    """||z - zbar|| after one round shrinks by at most lambda2 (in 2-norm
+    across the stacked matrix)."""
+    g = G.random_regular_expander(16, k=4, seed=3)
+    P = g.mixing_matrix()
+    lam2 = g.lambda2()
+    rng = np.random.default_rng(0)
+    worst = 0.0
+    for _ in range(10):
+        z = rng.normal(size=(16, 8)).astype(np.float32)
+        z -= z.mean(0, keepdims=True)
+        zm = P @ z
+        ratio = np.linalg.norm(zm) / np.linalg.norm(z)
+        worst = max(worst, ratio)
+    assert worst <= lam2 + 1e-5
+
+
+def test_tree_mix_dense():
+    g = G.complete_graph(4)
+    tree = {"a": jnp.arange(8.0).reshape(4, 2),
+            "b": jnp.ones((4, 3))}
+    out = C.tree_mix_dense(tree, g.mixing_matrix())
+    np.testing.assert_allclose(np.asarray(out["a"]),
+                               np.tile(np.asarray(tree["a"]).mean(0), (4, 1)),
+                               atol=1e-6)

@@ -1,0 +1,90 @@
+"""Fault tolerance: deadline gossip, straggler robustness, elastic rescale,
+and message compression with error feedback."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core import (CompressionState, complete_graph, ef_compress,
+                        ef_init, mix_dense, ratio_bytes, ring_graph)
+from repro.core.graphs import random_regular_expander
+from repro.runtime.elastic import plan_rescale, rescale_state
+from repro.runtime.fault_tolerance import StragglerModel, degraded_matrix
+
+
+@given(seed=st.integers(0, 20))
+def test_degraded_matrix_row_stochastic(seed):
+    g = random_regular_expander(10, k=4, seed=0)
+    rng = np.random.default_rng(seed)
+    arrived = rng.random(10) > 0.3
+    P = degraded_matrix(g, arrived)
+    assert np.allclose(P.sum(axis=1), 1.0, atol=1e-9)
+    assert (P >= -1e-12).all()
+    # columns of missing nodes are zeroed except self
+    for j in range(10):
+        if not arrived[j]:
+            col = P[:, j].copy()
+            col[j] = 0.0
+            assert np.allclose(col, 0.0)
+
+
+def test_consensus_with_random_drops_still_converges():
+    """Gossip with 30% dropped messages per round still mixes to (near)
+    consensus -- the paper's robustness claim, empirically."""
+    g = random_regular_expander(12, k=4, seed=1)
+    rng = np.random.default_rng(0)
+    z = rng.normal(size=(12, 5)).astype(np.float64)
+    for _ in range(300):
+        arrived = rng.random(12) > 0.3
+        P = degraded_matrix(g, arrived)
+        z = P @ z
+    assert np.max(np.std(z, axis=0)) < 1e-3
+
+
+def test_straggler_model_deadline():
+    m = StragglerModel(p_slow=0.5, m_slow=8.0, deadline=2.0, seed=0)
+    times = m.sample_round(1000)
+    assert set(np.unique(times)) <= {1.0, 8.0}
+    mask = m.arrival_mask(1000)
+    # slow nodes (8.0 > 2.0) miss the deadline
+    assert 0.3 < mask.mean() < 0.7
+
+
+def test_elastic_rescale_shrink_and_grow():
+    state = {"w": jnp.arange(8.0).reshape(4, 2)}
+    # 4 -> 3 nodes, node 1 failed
+    plan = plan_rescale("complete", 4, 3, m_rows=120, failed=[1])
+    out = rescale_state(state, plan)
+    assert out["w"].shape == (3, 2)
+    np.testing.assert_allclose(np.asarray(out["w"][0]), [0, 1])  # node 0
+    np.testing.assert_allclose(np.asarray(out["w"][1]), [4, 5])  # node 2
+    # grow 3 -> 5: new rows = survivors' mean
+    plan2 = plan_rescale("complete", 3, 5, m_rows=120)
+    out2 = rescale_state({"w": out["w"]}, plan2)
+    assert out2["w"].shape == (5, 2)
+    np.testing.assert_allclose(np.asarray(out2["w"][3]),
+                               np.asarray(out["w"]).mean(0), rtol=1e-6)
+    # data slices cover the whole dataset
+    assert sum(s.stop - s.start for s in plan2.data_slices) == 120
+
+
+def test_error_feedback_accumulates_everything():
+    """Over T rounds, sum(sent) + residual == sum(messages): EF loses
+    nothing permanently."""
+    rng = np.random.default_rng(0)
+    msgs = [jnp.asarray(rng.normal(size=(32,)), jnp.float32)
+            for _ in range(10)]
+    state = ef_init(msgs[0])
+    total_sent = jnp.zeros(32)
+    for m in msgs:
+        sent, state = ef_compress(m, state, keep_fraction=0.1)
+        total_sent = total_sent + sent
+    total_msgs = sum(msgs)
+    np.testing.assert_allclose(np.asarray(total_sent + state.residual),
+                               np.asarray(total_msgs), atol=1e-5)
+
+
+def test_ratio_bytes():
+    assert np.isclose(ratio_bytes(0.01, 4, 4), 0.02)
+    assert np.isclose(ratio_bytes(0.05, 8, 4), 0.075)

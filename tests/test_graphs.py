@@ -1,0 +1,91 @@
+"""Communication-graph properties (paper section III prerequisites)."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import graphs as G
+
+
+TOPOLOGIES = ["complete", "ring", "hypercube", "torus", "expander4",
+              "rregular4"]
+
+
+def _build(name, n):
+    return G.build_graph(name, n)
+
+
+@pytest.mark.parametrize("name,n", [
+    ("complete", 2), ("complete", 8), ("complete", 14),
+    ("ring", 4), ("ring", 9),
+    ("hypercube", 8), ("hypercube", 16),
+    ("torus", 16), ("torus", 25),
+    ("expander4", 12), ("expander4", 64),
+    ("rregular4", 16), ("rregular4", 100),
+])
+def test_doubly_stochastic(name, n):
+    P = _build(name, n).mixing_matrix()
+    assert np.allclose(P.sum(axis=0), 1.0, atol=1e-9)
+    assert np.allclose(P.sum(axis=1), 1.0, atol=1e-9)
+    assert (P >= -1e-12).all()
+
+
+@pytest.mark.parametrize("name", TOPOLOGIES)
+def test_lambda2_in_unit_interval(name):
+    g = _build(name, 16)
+    lam2 = g.lambda2()
+    assert 0.0 <= lam2 < 1.0  # connected => strictly < 1
+
+
+def test_complete_graph_exact_average():
+    g = G.complete_graph(6)
+    assert g.lambda2() < 1e-8  # one round reaches consensus
+    P = g.mixing_matrix()
+    assert np.allclose(P, np.full((6, 6), 1 / 6))
+
+
+def test_expander_gap_beats_ring():
+    """Claim C3's prerequisite: the expander keeps a usable gap as n grows,
+    the ring does not."""
+    for n, factor in ((16, 3), (64, 10), (256, 100)):
+        e = G.random_regular_expander(n, k=4)
+        r = G.ring_graph(n)
+        assert e.spectral_gap() > factor * r.spectral_gap(), n
+
+
+def test_rregular_gap_roughly_constant():
+    gaps = [G.random_regular_expander(n, k=4, seed=1).spectral_gap()
+            for n in (64, 256, 1024)]
+    assert max(gaps) / min(gaps) < 2.5, gaps
+
+
+def test_ppermute_pairs_are_permutations():
+    g = G.kregular_expander(12, k=4)
+    for pairs in g.ppermute_pairs():
+        srcs = sorted(s for s, _ in pairs)
+        dsts = sorted(d for _, d in pairs)
+        assert srcs == list(range(12)) and dsts == list(range(12))
+
+
+@given(n=st.integers(3, 40), seed=st.integers(0, 5))
+def test_expander_doubly_stochastic_hypothesis(n, seed):
+    g = G.random_regular_expander(n, k=2, seed=seed)
+    P = g.mixing_matrix()
+    assert np.allclose(P.sum(axis=0), 1.0, atol=1e-9)
+    assert np.allclose(P.sum(axis=1), 1.0, atol=1e-9)
+
+
+@given(n=st.sampled_from([4, 8, 16, 32]))
+def test_hypercube_degree_logn(n):
+    g = G.hypercube_graph(n)
+    assert g.degree == int(math.log2(n))
+
+
+def test_mixing_matrix_matches_perms():
+    g = G.ring_graph(5)
+    P = g.mixing_matrix()
+    # each node averages self + two neighbors with weight 1/3
+    assert np.isclose(P[0, 0], 1 / 3) and np.isclose(P[0, 1], 1 / 3) \
+        and np.isclose(P[0, 4], 1 / 3)

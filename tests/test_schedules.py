@@ -1,0 +1,89 @@
+"""Communication schedules: H_t / Q_t bookkeeping (paper eq. 12/19/22) and
+the convergence constants (eq. 7/18/31)."""
+
+import math
+
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import schedules as S
+
+
+def test_every_iteration():
+    s = S.EveryIteration()
+    assert all(s.is_comm_step(t) for t in range(1, 20))
+    assert s.H(17) == 17
+
+
+@given(h=st.integers(1, 10), T=st.integers(1, 200))
+def test_periodic_H_matches_paper_formula(h, T):
+    """Paper eq. (19): of T iterations only H_T = floor((T-1)/h) are
+    expensive."""
+    s = S.Periodic(h=h)
+    assert s.H(T) == (T - 1) // h
+    # consistency with the indicator
+    assert s.H(T) == sum(1 for t in range(1, T + 1) if s.is_comm_step(t))
+
+
+@given(h=st.integers(1, 10), T=st.integers(1, 100))
+def test_periodic_Q_range(h, T):
+    s = S.Periodic(h=h)
+    q = s.Q(T)
+    assert 1 <= q <= h
+
+
+@given(p=st.floats(0.05, 0.45), T=st.sampled_from([50, 200, 800]))
+def test_sparse_H_growth_theta(p, T):
+    """Paper eq. (22): H_T = Theta(T^{1/(p+1)})."""
+    s = S.IncreasinglySparse(p=p)
+    H = s.H(T)
+    pred = T ** (1.0 / (p + 1.0))
+    assert 0.4 * pred <= H <= 2.5 * pred, (H, pred)
+
+
+def test_sparse_comm_times_monotone_gaps():
+    s = S.IncreasinglySparse(p=0.5)
+    times = [t for t in range(1, 400) if s.is_comm_step(t)]
+    gaps = [b - a for a, b in zip(times, times[1:])]
+    # gaps are nondecreasing within +-1 rounding
+    for a, b in zip(gaps, gaps[5:]):
+        assert b >= a - 1
+
+
+def test_sparse_p0_is_every_iteration():
+    s = S.IncreasinglySparse(p=0.0)
+    assert [t for t in range(1, 10) if s.is_comm_step(t)] == list(range(1, 10))
+
+
+def test_constants_paper_values():
+    # C1 = 2LR sqrt(19 + 12) for lam2=0
+    assert math.isclose(S.c1_constant(1, 1, 0.0), 2 * math.sqrt(31))
+    # C_h at h=1 reduces to the C1 form: 1 + 18 + 12 = 31
+    assert math.isclose(S.ch_constant(1, 1, 0.0, 1), 2 * math.sqrt(31))
+
+
+@given(p=st.floats(0.01, 0.49), lam2=st.floats(0.0, 0.9))
+def test_cp_below_c1(p, lam2):
+    """Claim C5: C_p < C_1 for 0 < p < 1/2."""
+    assert S.cp_constant(1, 1, lam2, p) < S.c1_constant(1, 1, lam2)
+
+
+@given(h=st.integers(2, 50), lam2=st.floats(0.0, 0.9))
+def test_ch_above_c1(h, lam2):
+    assert S.ch_constant(1, 1, lam2, h) > S.c1_constant(1, 1, lam2)
+
+
+def test_optimal_stepsize_matches_ch():
+    # A = R/L / sqrt(...) and C_h = 2RL sqrt(...) => A * C_h = 2 R^2
+    for h in (1, 3, 9):
+        A = S.optimal_stepsize_A(2.0, 3.0, 0.25, h)
+        C = S.ch_constant(2.0, 3.0, 0.25, h)
+        assert math.isclose(A * C, 2 * 3.0 * 3.0, rel_tol=1e-9)
+
+
+def test_make_schedule_dispatch():
+    assert isinstance(S.make_schedule("every"), S.EveryIteration)
+    assert S.make_schedule("periodic", h=4).h == 4
+    assert S.make_schedule("sparse", p=0.2).p == 0.2
+    with pytest.raises(ValueError):
+        S.make_schedule("nope")

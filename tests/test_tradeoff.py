@@ -1,0 +1,95 @@
+"""The r tradeoff calculus: paper's headline numbers and monotonicities."""
+
+import math
+
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import (TPU_V5E, EveryIteration, IncreasinglySparse,
+                        Periodic, derive_r_from_roofline, h_opt, h_opt_int,
+                        iteration_cost, measure_r, n_opt_complete,
+                        time_to_accuracy)
+
+
+def test_paper_headline_numbers():
+    # section V.A: r = 0.85/29 ~ 0.0293 -> n_opt = 5.8
+    r = measure_r(0.85, 29.0)
+    assert math.isclose(r, 0.0293, rel_tol=0.01)
+    assert math.isclose(n_opt_complete(r), 5.8, rel_tol=0.01)
+    # PCA-reduced: r = 0.0104/2.1 -> n_opt = 14.15
+    r2 = measure_r(0.0104, 2.1)
+    assert math.isclose(n_opt_complete(r2), 14.2, rel_tol=0.01)
+    # fig 2: r=0.00089, n=10 complete -> h_opt = 1
+    assert h_opt_int(10, 9, 0.00089, 0.0) == 1
+
+
+@given(r=st.floats(1e-6, 0.5))
+def test_nopt_is_tau_argmin(r):
+    """n_opt = 1/sqrt(r) minimizes tau(eps) = C^2/eps^2 (1/n + (n-1) r)."""
+    nopt = n_opt_complete(r)
+    tau = lambda n: 1.0 / n + (n - 1) * r
+    eps = 1e-3
+    assert tau(nopt) <= tau(nopt * 1.2) + eps * r
+    assert tau(nopt) <= tau(nopt / 1.2) + eps * r
+
+
+@given(n=st.integers(2, 64), k=st.integers(1, 8), r=st.floats(1e-5, 1.0))
+def test_iteration_cost_decomposition(n, k, r):
+    assert math.isclose(iteration_cost(n, k, r), 1.0 / n + k * r)
+
+
+def test_expander_beats_complete_at_large_n():
+    """At large n and nontrivial r, the k-regular expander's fixed comm cost
+    wins over the complete graph's (n-1) r."""
+    r, eps = 0.01, 0.1
+    n = 64
+    tau_complete = time_to_accuracy(eps, n, n - 1, r, 0.0)
+    tau_expander = time_to_accuracy(eps, n, 4, r, 0.36)
+    assert tau_expander < tau_complete
+
+
+def test_sparse_beats_every_iteration_in_time():
+    """Claim C5 in the time model: when communication dominates the
+    iteration cost (kr >> 1/n) and p is small (the bound's exponent penalty
+    2/(1-2p) stays near 2), the p-sparse schedule reaches eps sooner."""
+    # eq. (30): tau_sparse = T/n + T^{1/(p+1)} k r. The bound-level win
+    # appears when kr dominates 1/n and eps is moderate (T small), so the
+    # T-exponent penalty 2/(1-2p) stays bounded while the comm count drops.
+    r, eps, n, k, lam2 = 0.5, 10.03, 16, 4, 0.36
+    t_every = time_to_accuracy(eps, n, k, r, lam2,
+                               schedule=EveryIteration())
+    t_sparse = time_to_accuracy(eps, n, k, r, lam2,
+                                schedule=IncreasinglySparse(p=0.3))
+    assert t_sparse < t_every
+    # and the crossover direction: tiny r favors every-iteration
+    t_every2 = time_to_accuracy(eps, n, k, 1e-5, lam2,
+                                schedule=EveryIteration())
+    t_sparse2 = time_to_accuracy(eps, n, k, 1e-5, lam2,
+                                 schedule=IncreasinglySparse(p=0.3))
+    assert t_every2 < t_sparse2
+
+
+def test_sparse_p_half_invalid():
+    t = time_to_accuracy(0.1, 8, 4, 0.01, 0.2,
+                         schedule=IncreasinglySparse(p=0.6))
+    assert t == float("inf")
+
+
+@given(r=st.floats(1e-4, 0.2))
+def test_hopt_scales_sqrt_r(r):
+    h1 = h_opt(16, 4, r, 0.25)
+    h2 = h_opt(16, 4, 4 * r, 0.25)
+    assert math.isclose(h2, 2 * h1, rel_tol=1e-9)
+
+
+def test_derive_r_from_roofline():
+    # 1 GiB message over DCN, 1 TFLOP local step on 1 chip
+    r = derive_r_from_roofline(2**30, 1e12, 1e9, n=8, link_bw=25e9)
+    t_msg = 2**30 / 25e9
+    t_full = (1e12 / TPU_V5E.peak_flops) * 8
+    assert math.isclose(r, t_msg / t_full, rel_tol=1e-9)
+
+
+def test_measure_r_guards():
+    with pytest.raises(ValueError):
+        measure_r(1.0, 0.0)
