@@ -1,0 +1,236 @@
+"""[beyond paper] Event-driven async cluster sweep: loss-rate x straggler-
+factor against the paper's predicted tau(eps).
+
+The paper validates eq. (9)-(21) on a real cluster where r is measured and
+the clock is wall time. `repro.netsim` recreates that setting in simulation:
+this benchmark runs the paper's non-smooth problem (section V.B) on an
+8-node expander under increasingly hostile cluster conditions and reports,
+per cell of the (loss, straggler) grid:
+
+  * empirical time-to-accuracy on the event clock,
+  * r recovered from the observed timeline (measure_r_empirical),
+  * the flat-time-model prediction `T_emp * iteration_cost(n, k, r_hat)`
+    via core.tradeoff.time_to_accuracy (exact for a lossless homogeneous
+    cluster; the grid shows where reality departs from the model).
+
+Knobs (see --help): --n, --T, --r, --k, --loss, --straggler, --eval-every,
+--seed, --schedule/--h, --pushsum, --smoke.
+
+--smoke runs the acceptance check: on a lossless homogeneous 8-node
+expander the event-driven trace's time-to-accuracy must match
+core.tradeoff.time_to_accuracy within 15%, and the lossy / straggler
+scenarios must produce strictly slower traces. Exits nonzero on failure.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import math
+import sys
+
+import numpy as np
+
+from repro.core import (EveryIteration, iteration_cost, make_schedule,
+                        time_to_accuracy)
+from repro.data.pipeline import nonsmooth_quadratic_problem
+from repro.netsim import NetSimulator, homogeneous, lossy, straggler
+
+
+def build_problem(n: int, M: int, d: int, seed: int):
+    """Paper V.B non-smooth quadratics, in pure numpy (the netsim is
+    host-side; no need to round-trip each per-node subgradient through jax)."""
+    centers = nonsmooth_quadratic_problem(n, M, d, seed,
+                                          center_scale=1.5).astype(np.float64)
+
+    def grad_fn(i, x, t):
+        diff = x[None, None, :] - centers[i]          # (M, 2, d)
+        q = np.sum(diff * diff, axis=-1)              # (M, 2)
+        pick = np.argmax(q, axis=-1)                  # (M,)
+        chosen = np.take_along_axis(
+            diff, pick[:, None, None], axis=1)[:, 0]  # (M, d)
+        return 2.0 * np.sum(chosen, axis=0)
+
+    def eval_fn(x):
+        diff = x[None, None, None, :] - centers       # (n, M, 2, d)
+        q = np.sum(diff * diff, axis=-1)
+        return float(np.mean(np.sum(np.max(q, axis=-1), axis=-1)))
+
+    return centers, grad_fn, eval_fn
+
+
+def centralized_optimum(centers: np.ndarray, iters: int = 800) -> float:
+    """Reference F* via centralized subgradient descent on the mean
+    objective (mirrors NonsmoothQuadratics.optimum_value)."""
+    n, M, _, d = centers.shape
+
+    def full_grad(x):
+        diff = x[None, None, None, :] - centers
+        q = np.sum(diff * diff, axis=-1)
+        pick = np.argmax(q, axis=-1)
+        chosen = np.take_along_axis(diff, pick[..., None, None],
+                                    axis=2)[:, :, 0]
+        return 2.0 * np.sum(chosen, axis=(0, 1)) / n
+
+    def value(x):
+        diff = x[None, None, None, :] - centers
+        q = np.sum(diff * diff, axis=-1)
+        return float(np.mean(np.sum(np.max(q, axis=-1), axis=-1)))
+
+    x = np.zeros(d)
+    best = value(x)
+    lr0 = 1.0 / (4.0 * M)
+    for t in range(1, iters + 1):
+        x = x - (lr0 / math.sqrt(t)) * full_grad(x)
+        if t % 50 == 0:
+            best = min(best, value(x))
+    return best
+
+
+def run_cell(scenario, grad_fn, eval_fn, d, schedule, T, eval_every, seed,
+             a_scale, algorithm="dda"):
+    a_fn = (lambda t: a_scale / math.sqrt(max(t, 1.0)))
+    sim = NetSimulator(scenario, grad_fn, eval_fn, a_fn=a_fn,
+                       schedule=schedule, algorithm=algorithm, seed=seed)
+    trace = sim.run(np.zeros((scenario.n, d)), T, eval_every=eval_every)
+    return sim, trace
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--n", type=int, default=8, help="cluster size")
+    ap.add_argument("--k", type=int, default=4, help="expander degree")
+    ap.add_argument("--M", type=int, default=30, help="terms per node")
+    ap.add_argument("--d", type=int, default=20, help="dimension")
+    ap.add_argument("--T", type=int, default=1000, help="iterations per node")
+    ap.add_argument("--r", type=float, default=0.01,
+                    help="configured per-message time (full-grad units)")
+    ap.add_argument("--loss", type=float, nargs="*", default=[0.0, 0.1, 0.3],
+                    help="loss-rate sweep values")
+    ap.add_argument("--straggler", type=float, nargs="*",
+                    default=[1.0, 2.0, 4.0],
+                    help="straggler slow-factor sweep values (1 = none)")
+    ap.add_argument("--eval-every", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--schedule", default="every",
+                    choices=["every", "periodic", "sparse"])
+    ap.add_argument("--h", type=int, default=2, help="h for --schedule periodic")
+    ap.add_argument("--pushsum", action="store_true",
+                    help="use drop-robust push-sum instead of stale gossip")
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the acceptance check and exit")
+    args = ap.parse_args(argv)
+
+    n, d = args.n, args.d
+    centers, grad_fn, eval_fn = build_problem(n, args.M, d, args.seed)
+    fstar = centralized_optimum(centers)
+    f0 = eval_fn(np.zeros(d))
+    eps_value = fstar + 0.05 * (f0 - fstar)   # 5% of the initial gap
+    schedule = make_schedule(args.schedule, h=args.h)
+    algorithm = "pushsum" if args.pushsum else "dda"
+    # empirical stepsize: the bound-optimal A is too conservative at these
+    # sizes; one global multiplier, as in fig2_sparse
+    a_scale = 1.0 / (4.0 * args.M)
+    common = dict(d=d, schedule=schedule, T=args.T,
+                  eval_every=args.eval_every, seed=args.seed,
+                  a_scale=a_scale, algorithm=algorithm)
+
+    if args.smoke:
+        return smoke(args, grad_fn, eval_fn, eps_value, common)
+
+    print("scenario,loss,straggler,tta,final_F,r_emp,tau_model,drop_rate")
+    for loss_p in args.loss:
+        for factor in args.straggler:
+            if factor > 1.0 and loss_p > 0.0:
+                sc = dataclasses.replace(
+                    lossy(n, args.r, loss=loss_p, k=args.k, seed=args.seed),
+                    name=f"lossy{loss_p:g}_strag{factor:g}",
+                    node_specs=straggler(n, args.r, slow_factor=factor,
+                                         k=args.k, seed=args.seed).node_specs)
+            elif factor > 1.0:
+                sc = straggler(n, args.r, slow_factor=factor, k=args.k,
+                               seed=args.seed)
+            elif loss_p > 0.0:
+                sc = lossy(n, args.r, loss=loss_p, k=args.k, seed=args.seed)
+            else:
+                sc = homogeneous(n, args.r, k=args.k, seed=args.seed)
+            sim, trace = run_cell(sc, grad_fn, eval_fn, **common)
+            tta = sim.time_to_reach(trace, eps_value)
+            m = sim.measure_r_empirical()
+            # flat-model wall clock for the empirically needed iterations
+            T_eps = next((it for it, f in zip(trace.iters, trace.fvals)
+                          if f <= eps_value), None)
+            g = sim.net.graph
+            tau_model = (T_eps * iteration_cost(n, g.degree, m.r)
+                         if T_eps else float("inf"))
+            print(f"{sc.name},{loss_p:g},{factor:g},{tta:.3f},"
+                  f"{trace.fvals[-1]:.3f},{m.r:.5f},{tau_model:.3f},"
+                  f"{m.drop_rate:.3f}")
+    return 0
+
+
+def smoke(args, grad_fn, eval_fn, eps_value, common) -> int:
+    """Acceptance: lossless homogeneous event trace matches the flat time
+    model (eq. 9/10) within 15%; lossy + straggler are strictly slower.
+
+    The check is defined for every-iteration stale-gossip DDA only: the
+    eps_eff inversion below assumes T = (C/eps)^2 (wrong for the sparse
+    schedule's exponent) and the tuned T/eps targets assume communication
+    every iteration, so --schedule/--pushsum are pinned here rather than
+    silently producing a spurious FAIL.
+    """
+    if (not isinstance(common["schedule"], EveryIteration)
+            or common["algorithm"] != "dda"):
+        print("[smoke] note: acceptance check runs with --schedule every "
+              "and stale-gossip dda; ignoring other flags")
+        common = {**common, "schedule": make_schedule("every"),
+                  "algorithm": "dda"}
+    n = args.n
+    sc0 = homogeneous(n, args.r, k=args.k, seed=args.seed)
+    sim0, tr0 = run_cell(sc0, grad_fn, eval_fn, **common)
+    tta0 = sim0.time_to_reach(tr0, eps_value)
+    T_eps = next((it for it, f in zip(tr0.iters, tr0.fvals)
+                  if f <= eps_value), None)
+    ok = True
+    if T_eps is None or not math.isfinite(tta0):
+        print(f"[smoke] FAIL: homogeneous run never reached eps={eps_value:.3f}"
+              f" (final F {tr0.fvals[-1]:.3f})")
+        return 1
+
+    # express the model's wall clock through time_to_accuracy: pick the
+    # eps whose iteration count T = (C/eps)^2 equals the observed T_eps,
+    # so the comparison isolates the TIME AXIS (the netsim's claim), not
+    # the conservatism of the bound constants
+    g = sim0.net.graph
+    lam2 = g.lambda2()
+    m = sim0.measure_r_empirical()
+    C = common["schedule"].constant(1.0, 1.0, lam2)
+    eps_eff = C / math.sqrt(T_eps)
+    tau_pred = time_to_accuracy(eps_eff, n, g.degree, m.r, lam2,
+                                schedule=common["schedule"])
+    rel = abs(tta0 - tau_pred) / tau_pred
+    line = (f"[smoke] homogeneous: tta={tta0:.3f} model tau={tau_pred:.3f} "
+            f"rel_err={rel:.3%} r_emp={m.r:.5f} (configured {args.r:g})")
+    if rel > 0.15:
+        ok = False
+        line += "  FAIL(>15%)"
+    print(line)
+
+    for name, sc in [
+        ("lossy", lossy(n, args.r, loss=0.2, k=args.k, seed=args.seed)),
+        ("straggler", straggler(n, args.r, slow_factor=4.0, k=args.k,
+                                seed=args.seed)),
+    ]:
+        sim, tr = run_cell(sc, grad_fn, eval_fn, **common)
+        tta = sim.time_to_reach(tr, eps_value)
+        slower = tta > tta0
+        print(f"[smoke] {name}: tta={tta:.3f} vs homogeneous {tta0:.3f} "
+              f"{'slower OK' if slower else 'FAIL(not slower)'}")
+        ok = ok and slower
+
+    print(f"[smoke] {'PASS' if ok else 'FAIL'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,7 +1,8 @@
 """Core: the paper's contribution -- consensus-based distributed optimization
 with explicit communication/computation tradeoff control."""
 
-from repro.core.graphs import (CommGraph, build_graph, complete_graph,
+from repro.core.graphs import (CommGraph, GraphSequence, build_graph,
+                               complete_graph, expander_sequence,
                                hypercube_graph, kregular_expander, lambda2,
                                random_regular_expander, ring_graph,
                                spectral_gap, torus_graph)
@@ -14,8 +15,8 @@ from repro.core.tradeoff import (TPU_V5E, HardwareSpec, derive_r_from_roofline,
                                  n_opt_complete, predict_speedup,
                                  time_to_accuracy)
 from repro.core.consensus import (disagreement, mix_collective, mix_dense,
-                                  mix_stale, tree_mix_collective,
-                                  tree_mix_dense)
+                                  mix_stale, stale_combine,
+                                  tree_mix_collective, tree_mix_dense)
 from repro.core.dda import (DDASimulator, DDAState, SimTrace, dda_init,
                             dda_local_step, dda_mix_step, stepsize_sqrt)
 from repro.core.compression import (CompressionState, ef_compress, ef_init,

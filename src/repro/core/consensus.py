@@ -34,6 +34,7 @@ __all__ = [
     "mix_dense",
     "mix_collective",
     "mix_stale",
+    "stale_combine",
     "tree_mix_dense",
     "tree_mix_collective",
     "disagreement",
@@ -82,6 +83,17 @@ def tree_mix_collective(tree: PyTree, graph: CommGraph, axis_name: str) -> PyTre
     return jax.tree.map(lambda a: mix_collective(a, graph, axis_name), tree)
 
 
+def stale_combine(z, neighbor_acc, self_weight: float):
+    """Stale-gossip combine: self_weight * z + (edge-weighted sum of the
+    neighbor values that actually arrived). Shared by the shard_map
+    `mix_stale` below and by `repro.netsim.node.AsyncDDANode`, whose
+    event-driven nodes fold the weight of missing/late messages back into
+    `self_weight` (row-stochasticity preserved, as in
+    runtime.fault_tolerance.degraded_matrix). Works on jax and numpy arrays.
+    """
+    return z * self_weight + neighbor_acc
+
+
 def mix_stale(z: jax.Array, neighbor_acc: jax.Array, graph: CommGraph,
               axis_name: str) -> tuple[jax.Array, jax.Array]:
     """[beyond paper] async gossip: returns (mixed, next_neighbor_acc).
@@ -92,7 +104,7 @@ def mix_stale(z: jax.Array, neighbor_acc: jax.Array, graph: CommGraph,
     now, so their transfer overlaps the subsequent local computation. One-step
     delay preserves DDA convergence (paper ref [9], delay-tolerant DDA).
     """
-    mixed = z * graph.self_weight + neighbor_acc
+    mixed = stale_combine(z, neighbor_acc, graph.self_weight)
     # Ship current z to neighbors for the NEXT round.
     nxt = jnp.zeros_like(z)
     if graph.name == "complete":

@@ -45,6 +45,7 @@ __all__ = [
     "DDASimulator",
     "SimTrace",
     "stepsize_sqrt",
+    "trace_time_to_reach",
 ]
 
 PyTree = Any
@@ -119,6 +120,25 @@ class SimTrace:
     fvals_consensus: list[float] = dataclasses.field(default_factory=list)
     # F at the consensus average xhat_bar (not what the paper plots, but
     # useful to separate optimization error from network disagreement)
+
+
+def trace_time_to_reach(trace: SimTrace, eps_value: float,
+                        use_consensus: bool = False) -> float:
+    """First simulated time at which the objective reaches eps_value.
+
+    Default (`use_consensus=False`) scans `trace.fvals`, i.e.
+    Fbar(t) = (1/n) sum_i F(xhat_i) -- the per-node mean the paper's
+    Fig. 1/2 time-to-accuracy curves are read from. Pass
+    `use_consensus=True` to instead scan `trace.fvals_consensus`
+    (F evaluated at the consensus average xhat_bar), which isolates
+    optimization error from network disagreement. Shared by DDASimulator
+    (simulated time axis) and netsim.NetSimulator (event-clock axis).
+    """
+    fvals = trace.fvals_consensus if use_consensus else trace.fvals
+    for tt, fv in zip(trace.sim_time, fvals):
+        if fv <= eps_value:
+            return tt
+    return float("inf")
 
 
 class DDASimulator:
@@ -229,9 +249,7 @@ class DDASimulator:
             trace.disagreement.append(float(_cons.disagreement(z)))
         return trace
 
-    def time_to_reach(self, trace: SimTrace, eps_value: float) -> float:
-        """First simulated time at which F(xhat_bar) <= eps_value."""
-        for tt, fv in zip(trace.sim_time, trace.fvals):
-            if fv <= eps_value:
-                return tt
-        return float("inf")
+    def time_to_reach(self, trace: SimTrace, eps_value: float,
+                      use_consensus: bool = False) -> float:
+        """See `trace_time_to_reach` (default reads Fbar, per the paper)."""
+        return trace_time_to_reach(trace, eps_value, use_consensus)

@@ -31,12 +31,14 @@ import numpy as np
 
 __all__ = [
     "CommGraph",
+    "GraphSequence",
     "complete_graph",
     "ring_graph",
     "torus_graph",
     "hypercube_graph",
     "kregular_expander",
     "random_regular_expander",
+    "expander_sequence",
     "build_graph",
     "doubly_stochastic_matrix",
     "lambda2",
@@ -101,6 +103,53 @@ class CommGraph:
         for perm in self.perms:
             out.append(tuple((int(perm[i]), int(i)) for i in range(self.n)))
         return tuple(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphSequence:
+    """Time-varying topology: a periodic sequence of same-n graphs.
+
+    The paper's analysis fixes G, but its cluster motivation (and the
+    Yarmoshik-Klimenko time-varying lower bound in PAPERS.md) concerns
+    networks whose edge set changes over time. `at(idx)` returns the graph
+    active for the idx-th epoch (the netsim rewires every `rewire_every`
+    sim-time units); B-connectedness holds trivially since every member is
+    itself connected.
+    """
+
+    graphs: tuple[CommGraph, ...]
+
+    def __post_init__(self):
+        if not self.graphs:
+            raise ValueError("GraphSequence needs at least one graph")
+        sizes = {g.n for g in self.graphs}
+        if len(sizes) != 1:
+            raise ValueError(f"all graphs must share n, got {sorted(sizes)}")
+
+    @property
+    def n(self) -> int:
+        return self.graphs[0].n
+
+    def __len__(self) -> int:
+        return len(self.graphs)
+
+    def at(self, idx: int) -> CommGraph:
+        return self.graphs[idx % len(self.graphs)]
+
+    def lambda2_worst(self) -> float:
+        """Pessimistic per-round mixing rate: max over the sequence (each
+        round contracts disagreement by at most sqrt(lambda2) of the graph
+        active that round)."""
+        return max(g.lambda2() for g in self.graphs)
+
+
+def expander_sequence(n: int, k: int = 4, length: int = 4,
+                      seed: int = 0) -> GraphSequence:
+    """`length` independently-rewired random k-regular expanders. Each draw
+    is near-Ramanujan, so the sequence keeps a constant spectral gap while
+    the edge set changes completely between epochs."""
+    return GraphSequence(tuple(
+        random_regular_expander(n, k=k, seed=seed + i) for i in range(length)))
 
 
 def _circulant_perms(n: int, shifts: Sequence[int]) -> tuple[tuple[int, ...], ...]:

@@ -46,6 +46,19 @@ class CommSchedule:
     def comm_steps(self, T: int) -> Iterator[int]:
         return (t for t in range(1, T + 1) if self.is_comm_step(t))
 
+    def next_comm_step(self, t: int) -> int:
+        """Smallest communication iteration strictly greater than t.
+
+        Sim-time query used by the event-driven netsim: an async node asks
+        once per communication round instead of testing `is_comm_step`
+        every iteration (which is O(t) per call for the sparse schedule).
+        Subclasses override with closed forms where available.
+        """
+        s = t + 1
+        while not self.is_comm_step(s):
+            s += 1
+        return s
+
     def constant(self, L: float, R: float, lam2: float) -> float:
         raise NotImplementedError
 
@@ -61,6 +74,9 @@ class EveryIteration(CommSchedule):
 
     def H(self, t: int) -> int:
         return t
+
+    def next_comm_step(self, t: int) -> int:
+        return t + 1
 
     def constant(self, L: float, R: float, lam2: float) -> float:
         return c1_constant(L, R, lam2)
@@ -97,6 +113,11 @@ class Periodic(CommSchedule):
     def Q(self, t: int) -> int:
         m = t % self.h
         return m if m > 0 else self.h
+
+    def next_comm_step(self, t: int) -> int:
+        # comm steps are 1 + m*h for m >= 1
+        m = max(1, (t - 1) // self.h + 1)
+        return 1 + m * self.h
 
     def constant(self, L: float, R: float, lam2: float) -> float:
         return ch_constant(L, R, lam2, self.h)
@@ -144,6 +165,15 @@ class IncreasinglySparse(CommSchedule):
 
     def H(self, t: int) -> int:
         return len(self._comm_times(t))
+
+    def next_comm_step(self, t: int) -> int:
+        acc, j = 0.0, 1
+        while True:
+            acc += j ** self.p
+            ct = math.ceil(acc)
+            if ct > t:
+                return ct
+            j += 1
 
     def constant(self, L: float, R: float, lam2: float) -> float:
         return cp_constant(L, R, lam2, self.p)

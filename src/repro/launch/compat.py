@@ -1,0 +1,47 @@
+"""jax API compatibility for the launcher.
+
+The launch stack targets current jax (`jax.shard_map` with `axis_names`,
+`jax.make_mesh` with `axis_types`); the pinned container image may carry an
+older release where shard_map still lives in jax.experimental with the
+(auto, check_rep) spelling and meshes take no axis types. These wrappers
+translate between the two so the same launcher code runs on both.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_mesh_auto", "shard_map"]
+
+
+def make_mesh_auto(shape: tuple[int, ...],
+                   axes: tuple[str, ...]) -> jax.sharding.Mesh:
+    """jax.make_mesh with all axes in Auto mode where supported."""
+    try:
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    except (AttributeError, TypeError):
+        # older jax: meshes are implicitly auto
+        return jax.make_mesh(shape, axes)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma: bool = False):
+    """`jax.shard_map` on current jax; experimental shard_map otherwise.
+
+    `axis_names` (new spelling) lists the MANUAL axes; the old API instead
+    takes `auto` = the complementary set, and calls `check_vma` `check_rep`.
+    """
+    if hasattr(jax, "shard_map"):
+        kwargs = {}
+        if axis_names is not None:
+            kwargs["axis_names"] = axis_names
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma,
+                             **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    auto = (frozenset(mesh.axis_names) - frozenset(axis_names)
+            if axis_names is not None else frozenset())
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma, auto=auto)

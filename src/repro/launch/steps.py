@@ -22,6 +22,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.consensus import tree_mix_collective
 from repro.core.graphs import CommGraph
+from repro.launch.compat import shard_map
 from repro.models import transformer
 from repro.models.common import ModelConfig
 from repro.optim import Optimizer, OptState
@@ -153,10 +154,10 @@ def make_consensus_steps(cfg: ModelConfig, optimizer: Optimizer,
         mixed_z = tree_mix_collective(sq(opt_state.inner["z"]), graph, "pod")
         return params, OptState(opt_state.step, {"z": unsq(mixed_z)})
 
-    mix = jax.shard_map(mix_body, mesh=mesh,
-                        in_specs=(P("pod"), P("pod")),
-                        out_specs=(P("pod"), P("pod")),
-                        axis_names={"pod"}, check_vma=False)
+    mix = shard_map(mix_body, mesh=mesh,
+                    in_specs=(P("pod"), P("pod")),
+                    out_specs=(P("pod"), P("pod")),
+                    axis_names={"pod"}, check_vma=False)
 
     def fused_step(params, opt_state, batch):
         params, opt_state, metrics = local(params, opt_state, batch)

@@ -13,7 +13,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import ModelConfig, apply_rope, p, pz, rms_norm
+from repro.models.common import (ModelConfig, apply_rope, barrier, p, pz,
+                                 rms_norm)
 from repro.runtime.sharding import constrain
 
 PyTree = Any
@@ -58,8 +59,8 @@ def _qkv(prm, x, cfg: ModelConfig, positions):
     q = constrain(q, ("batch", "seq_sp", "q_heads", "head"))
     k = constrain(k, ("batch", "seq_sp", "kv_heads", "head"))
     v = constrain(v, ("batch", "seq_sp", "kv_heads", "head"))
-    k = jax.lax.optimization_barrier(k)
-    v = jax.lax.optimization_barrier(v)
+    k = barrier(k)
+    v = barrier(v)
     k = constrain(k, ("batch", None, "kv_heads", "head"))
     v = constrain(v, ("batch", None, "kv_heads", "head"))
     return q, k, v
@@ -274,8 +275,8 @@ def mla_apply(prm, x, cfg: ModelConfig, positions) -> jax.Array:
     q_full = constrain(q_full, ("batch", "seq_sp", "q_heads", "head"))
     k_full = constrain(k_full, ("batch", "seq_sp", "q_heads", "head"))
     v = constrain(v, ("batch", "seq_sp", "q_heads", "head"))
-    k_full = jax.lax.optimization_barrier(k_full)
-    v = jax.lax.optimization_barrier(v)
+    k_full = barrier(k_full)
+    v = barrier(v)
     k_full = constrain(k_full, ("batch", None, "q_heads", "head"))
     v = constrain(v, ("batch", None, "q_heads", "head"))
     out = _sdpa_causal(q_full, k_full, v, cfg)
@@ -365,8 +366,8 @@ def cross_attn_apply(prm, x, enc, cfg: ModelConfig) -> jax.Array:
     v = jnp.einsum("bne,ehk->bnhk", enc, prm["wv"])
     k = constrain(k, ("batch", "enc_tokens", "kv_heads", "head"))
     v = constrain(v, ("batch", "enc_tokens", "kv_heads", "head"))
-    k = jax.lax.optimization_barrier(k)
-    v = jax.lax.optimization_barrier(v)
+    k = barrier(k)
+    v = barrier(v)
     k = constrain(k, ("batch", None, "kv_heads", "head"))
     v = constrain(v, ("batch", None, "kv_heads", "head"))
     B, S, H, hd = q.shape

@@ -22,8 +22,8 @@ import jax.numpy as jnp
 from repro.models import attention as attn
 from repro.models import mlp as mlp_mod
 from repro.models import ssm as ssm_mod
-from repro.models.common import (ModelConfig, cross_entropy_loss, p, pz,
-                                 rms_norm, split_axes)
+from repro.models.common import (ModelConfig, barrier, cross_entropy_loss, p,
+                                 pz, rms_norm, split_axes)
 from repro.runtime.sharding import constrain
 
 PyTree = Any
@@ -275,7 +275,7 @@ def forward(params, tokens, cfg: ModelConfig, enc: jax.Array | None = None,
         # The barrier pins the saved scan carry to bf16: without it XLA
         # hoists the rms_norm upcast through the carry history buffer and
         # stores the full (L, B, S, D) residual stack in f32 (2x memory).
-        x = jax.lax.optimization_barrier(x)
+        x = barrier(x)
         for i, kind in enumerate(cfg.superblock):
             x = _block_apply(kind, slot_params[f"slot{i}"], x, cfg, positions,
                              shared, enc, moe_groups)

@@ -1,0 +1,17 @@
+"""Event-driven asynchronous cluster simulation (the repo's third execution
+mode, next to the dense synchronous DDASimulator and the shard_map launcher).
+
+Simulates DDA on a modeled cluster: priority-queue event clock
+(netsim.events), heterogeneous node speeds + lossy/jittery links + optional
+time-varying topology (netsim.network), async stale-gossip and drop-robust
+push-sum nodes (netsim.node), scenario presets (netsim.scenarios) and the
+driver with empirical-r recovery (netsim.simulator).
+"""
+
+from repro.netsim.events import Event, EventQueue
+from repro.netsim.network import LinkModel, Network, NodeSpec
+from repro.netsim.node import (AsyncDDANode, PushSumDDANode,
+                               pushsum_mass_audit)
+from repro.netsim.scenarios import (Scenario, homogeneous, lossy, straggler,
+                                    time_varying_expander)
+from repro.netsim.simulator import NetSimulator, RMeasurement

@@ -1,0 +1,67 @@
+"""Discrete-event simulation clock: a priority queue of timestamped events.
+
+The netsim's single source of truth for time. Events are totally ordered by
+(time, seq): `seq` is a monotone insertion counter, so simultaneous events
+fire in schedule order and the whole simulation is deterministic for a fixed
+seed (no dict/hash iteration order anywhere on the hot path).
+
+Time is in the paper's normalized units: 1.0 = one full-data gradient on the
+reference node (tradeoff.py eq. 9 normalization), so event timestamps are
+directly comparable to `iteration_cost` / `time_to_accuracy` predictions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Any
+
+__all__ = ["Event", "EventQueue"]
+
+
+@dataclasses.dataclass(order=True, slots=True)
+class Event:
+    time: float
+    seq: int
+    kind: str = dataclasses.field(compare=False)
+    data: dict[str, Any] = dataclasses.field(compare=False,
+                                             default_factory=dict)
+
+
+class EventQueue:
+    """Min-heap of events plus the simulation clock `now`.
+
+    `now` only advances via `pop()`; scheduling in the past raises, so causal
+    ordering cannot be violated by a buggy handler.
+    """
+
+    def __init__(self) -> None:
+        self._heap: list[Event] = []
+        self._seq = 0
+        self.now = 0.0
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def empty(self) -> bool:
+        return not self._heap
+
+    def schedule(self, time: float, kind: str, **data: Any) -> Event:
+        if time < self.now:
+            raise ValueError(
+                f"cannot schedule {kind!r} at {time} < now={self.now}")
+        ev = Event(float(time), self._seq, kind, data)
+        self._seq += 1
+        heapq.heappush(self._heap, ev)
+        return ev
+
+    def schedule_in(self, delay: float, kind: str, **data: Any) -> Event:
+        return self.schedule(self.now + delay, kind, **data)
+
+    def peek(self) -> Event:
+        return self._heap[0]
+
+    def pop(self) -> Event:
+        ev = heapq.heappop(self._heap)
+        self.now = ev.time
+        return ev

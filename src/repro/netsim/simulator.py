@@ -1,0 +1,240 @@
+"""Event-driven asynchronous cluster simulator for DDA.
+
+The third execution mode next to `core.dda.DDASimulator` (dense, synchronous,
+one device) and `launch/` (shard_map, real collectives): a discrete-event
+simulation of a *cluster* -- heterogeneous node speeds, per-link latency /
+bandwidth / jitter / loss, and optionally a time-varying topology -- running
+asynchronous stale-gossip DDA or drop-robust push-sum DDA.
+
+Traces come out `SimTrace`-compatible but on a WALL-CLOCK time axis: sim_time
+is the event-clock timestamp of each evaluation, not the closed-form
+`iters * (1/n + k r)` charge of the dense simulator. That makes the paper's
+predictions falsifiable here: `measure_r_empirical()` recovers r from the
+observed message flights and step durations exactly as the paper measures it
+on its cluster (r = t_msg / t_full_grad), and `predict()` feeds that
+empirical r back into `core.tradeoff.h_opt` / `n_opt_complete` /
+`time_to_accuracy` for closed-loop prediction-vs-observation checks
+(benchmarks/fig_async.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import numpy as np
+
+from repro.core import tradeoff as _tradeoff
+from repro.core.dda import SimTrace, trace_time_to_reach
+from repro.core.schedules import CommSchedule, EveryIteration
+from repro.netsim.events import EventQueue
+from repro.netsim.node import AsyncDDANode, GradFn, PushSumDDANode
+from repro.netsim.scenarios import Scenario
+
+__all__ = ["NetSimulator", "RMeasurement"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RMeasurement:
+    """Empirical communication/computation tradeoff from an event timeline,
+    measured the way the paper measures it on its cluster (section V.A)."""
+
+    r: float                  # t_msg / t_grad_full
+    t_msg: float              # mean observed send->receive time per message
+    t_grad_full: float        # median local step time * n (full-data grad)
+    n_messages: int
+    n_steps: int
+    drop_rate: float          # fraction of messages lost in flight
+
+
+class NetSimulator:
+    """Drives one scenario to completion on the event clock.
+
+    Args:
+      scenario: cluster description (see netsim.scenarios).
+      grad_fn: (node_index, x_i, t) -> subgradient of f_i at x_i; t is the
+        0-indexed iteration counter, matching DDASimulator's subgrad_fn
+        convention. May close over jitted jax functions; must return
+        something `np.asarray` accepts.
+      eval_fn: x -> scalar F(x) on the full objective.
+      a_fn: stepsize a(t); default a(t) = 1/sqrt(t).
+      schedule: communication schedule shared by all nodes (local iteration
+        counts -- nodes drift apart in wall-clock, not in schedule logic).
+      algorithm: "dda" (stale gossip) or "pushsum" (drop-robust ratio
+        consensus; required for convergence under heavy loss or directed
+        links).
+    """
+
+    def __init__(self, scenario: Scenario, grad_fn: GradFn,
+                 eval_fn: Callable[[np.ndarray], float],
+                 a_fn: Callable[[float], float] | None = None,
+                 schedule: CommSchedule | None = None,
+                 projection: Callable[[np.ndarray], np.ndarray] | None = None,
+                 algorithm: str = "dda", seed: int = 0,
+                 pushsum_y0: np.ndarray | None = None,
+                 pushsum_w_floor: float = 0.5):
+        if algorithm not in ("dda", "pushsum"):
+            raise ValueError(f"unknown algorithm {algorithm!r}")
+        self.scenario = scenario
+        self.grad_fn = grad_fn
+        self.eval_fn = eval_fn
+        self.a_fn = a_fn or (lambda t: 1.0 / math.sqrt(max(t, 1.0)))
+        self.schedule = schedule or EveryIteration()
+        self.projection = projection
+        self.algorithm = algorithm
+        self.seed = seed
+        self.pushsum_y0 = pushsum_y0
+        self.pushsum_w_floor = pushsum_w_floor
+        self.net = scenario.build_network()
+        self.nodes: list[AsyncDDANode | PushSumDDANode] = []
+        # observability: the "profiler trace" measure_r_empirical reads
+        self.msg_flights: list[float] = []
+        self.compute_times: list[float] = []
+        self.drops = 0
+        self.sent = 0
+        self.rewires = 0
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def _make_nodes(self, x0_stack: np.ndarray) -> None:
+        n = self.net.n
+        self.nodes = []
+        for i in range(n):
+            if self.algorithm == "pushsum":
+                y0 = None if self.pushsum_y0 is None else self.pushsum_y0[i]
+                node = PushSumDDANode(i, x0_stack[i], self.grad_fn, self.a_fn,
+                                      self.schedule, self.projection, y0=y0,
+                                      w_floor=self.pushsum_w_floor)
+            else:
+                node = AsyncDDANode(i, x0_stack[i], self.grad_fn, self.a_fn,
+                                    self.schedule, self.projection)
+            self.nodes.append(node)
+
+    def _step_busy(self, i: int) -> float:
+        """Wall-clock the node is occupied by its NEXT iteration: local
+        gradient plus (on communication iterations) serializing k messages
+        out the NIC -- eq. (9)'s 1/n + k*r, per node, per link model."""
+        node = self.nodes[i]
+        busy = self.net.local_step_time(i)
+        if node.is_comm_next():
+            busy += self.net.send_busy_time(i)
+        return busy
+
+    # -- main loop ----------------------------------------------------------
+
+    def run(self, x0_stack: np.ndarray, T: int,
+            eval_every: int = 25, time_limit: float = math.inf) -> SimTrace:
+        """Run every node for T iterations (or until time_limit); returns a
+        SimTrace whose sim_time axis is the event clock."""
+        x0_stack = np.asarray(x0_stack, dtype=np.float64)
+        n = self.net.n
+        if x0_stack.shape[0] != n:
+            raise ValueError(f"x0 must be stacked ({n}, ...)")
+        self._make_nodes(x0_stack)
+        rng = np.random.default_rng(self.seed)
+        q = EventQueue()
+        trace = SimTrace([], [], [], [], [])
+
+        for i in range(n):
+            q.schedule(self._step_busy(i), "step", node=i)
+        if self.scenario.rewire_every is not None:
+            q.schedule(self.scenario.rewire_every, "rewire")
+
+        total_steps = 0
+        next_eval = eval_every * n
+        active = n
+
+        while not q.empty():
+            ev = q.pop()
+            if ev.time > time_limit:
+                break
+            if ev.kind == "step":
+                i = ev.data["node"]
+                node = self.nodes[i]
+                self.compute_times.append(self.net.local_step_time(i))
+                msgs = node.finish_step(self.net)
+                for dst, payload in msgs:
+                    self.sent += 1
+                    flight = self.net.sample_flight(i, dst, rng)
+                    if flight is None:
+                        self.drops += 1
+                        continue
+                    self.msg_flights.append(flight)
+                    # serialization already stalled the sender (step busy);
+                    # only propagation + jitter remains in the air
+                    extra = max(flight - self.net.serialize_time(i, dst), 0.0)
+                    q.schedule_in(extra, "msg", src=i, dst=dst,
+                                  payload=payload)
+                total_steps += 1
+                if node.t < T:
+                    q.schedule_in(self._step_busy(i), "step", node=i)
+                else:
+                    active -= 1
+                if total_steps >= next_eval:
+                    self._record(trace, q.now, total_steps)
+                    next_eval += eval_every * n
+            elif ev.kind == "msg":
+                self.nodes[ev.data["dst"]].receive(ev.data["src"],
+                                                   ev.data["payload"])
+            elif ev.kind == "rewire":
+                self.net.rewire()
+                self.rewires += 1
+                if active > 0:
+                    q.schedule_in(self.scenario.rewire_every, "rewire")
+
+        if not trace.iters or trace.iters[-1] * n < total_steps:
+            self._record(trace, q.now, total_steps)
+        return trace
+
+    def _record(self, trace: SimTrace, now: float, total_steps: int) -> None:
+        n = self.net.n
+        xhat = np.stack([nd.xhat for nd in self.nodes])
+        z = np.stack([nd.z_est for nd in self.nodes])
+        zbar = z.mean(axis=0, keepdims=True)
+        diff = (z - zbar).reshape(n, -1)
+        trace.iters.append(total_steps // n)
+        trace.sim_time.append(float(now))
+        trace.fvals.append(float(np.mean([self.eval_fn(x) for x in xhat])))
+        trace.fvals_consensus.append(float(self.eval_fn(xhat.mean(axis=0))))
+        trace.comms.append(int(sum(nd.comm_iters for nd in self.nodes) // n))
+        trace.disagreement.append(float(np.linalg.norm(diff, axis=-1).max()))
+
+    # -- closed-loop measurement --------------------------------------------
+
+    def measure_r_empirical(self) -> RMeasurement:
+        """Recover r from the observed event timeline, as the paper does on
+        its cluster: mean message send->receive time over the median node's
+        full-data gradient time (median is robust to stragglers)."""
+        if not self.msg_flights or not self.compute_times:
+            raise ValueError("run() first (needs observed messages and steps)")
+        t_msg = float(np.mean(self.msg_flights))
+        t_full = float(np.median(self.compute_times)) * self.net.n
+        return RMeasurement(
+            r=_tradeoff.measure_r(t_msg, t_full),
+            t_msg=t_msg,
+            t_grad_full=t_full,
+            n_messages=len(self.msg_flights),
+            n_steps=len(self.compute_times),
+            drop_rate=self.drops / max(self.sent, 1))
+
+    def predict(self, eps: float, L: float = 1.0, R: float = 1.0) -> dict:
+        """Closed-loop paper predictions from the EMPIRICAL r: optimal
+        cluster size (eq. 11), optimal communication interval (eq. 21) and
+        tau(eps) (eq. 10/20/30) for this topology + schedule."""
+        m = self.measure_r_empirical()
+        g = self.net.graph
+        lam2 = g.lambda2()
+        return {
+            "r_empirical": m.r,
+            "n_opt": _tradeoff.n_opt_complete(m.r),
+            "h_opt": _tradeoff.h_opt_int(g.n, g.degree, m.r, lam2),
+            "tau_eps": _tradeoff.time_to_accuracy(
+                eps, g.n, g.degree, m.r, lam2, L, R, self.schedule),
+            "measurement": m,
+        }
+
+    def time_to_reach(self, trace: SimTrace, eps_value: float,
+                      use_consensus: bool = False) -> float:
+        """Same contract as DDASimulator.time_to_reach, on the event clock."""
+        return trace_time_to_reach(trace, eps_value, use_consensus)

@@ -4,8 +4,14 @@ import os
 # device count in its own process). Keep hypothesis deterministic.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
-from hypothesis import settings
+try:
+    from hypothesis import settings
+except ModuleNotFoundError:
+    # hypothesis is an optional `test` extra (pip install -e .[test]);
+    # property tests skip via the tests/_hyp.py shim when it is missing.
+    settings = None
 
-settings.register_profile("ci", max_examples=25, deadline=None,
-                          derandomize=True)
-settings.load_profile("ci")
+if settings is not None:
+    settings.register_profile("ci", max_examples=25, deadline=None,
+                              derandomize=True)
+    settings.load_profile("ci")

@@ -29,17 +29,18 @@ def test_mix_collective_matches_dense_oracle():
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
         from repro.core import graphs as G, consensus as C
+        from repro.launch.compat import shard_map
+        from repro.launch.mesh import make_mesh
 
-        mesh = jax.make_mesh((8,), ("pod",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("pod",))
         for name in ("complete", "ring", "hypercube", "expander4"):
             g = G.build_graph(name, 8)
             z = jnp.asarray(np.random.default_rng(0).normal(size=(8, 16)),
                             jnp.float32)
             def mix(zl):
                 return C.mix_collective(zl[0], g, "pod")[None]
-            f = jax.shard_map(mix, mesh=mesh, in_specs=P("pod"),
-                              out_specs=P("pod"), axis_names={"pod"})
+            f = shard_map(mix, mesh=mesh, in_specs=P("pod"),
+                          out_specs=P("pod"), axis_names={"pod"})
             got = jax.jit(f)(z)
             want = C.mix_dense(z, g.mixing_matrix())
             np.testing.assert_allclose(np.asarray(got), np.asarray(want),

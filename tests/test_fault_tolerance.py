@@ -4,7 +4,7 @@ and message compression with error feedback."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, strategies as st
+from _hyp import given, st
 
 from repro.core import (CompressionState, complete_graph, ef_compress,
                         ef_init, mix_dense, ratio_bytes, ring_graph)

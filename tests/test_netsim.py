@@ -1,0 +1,217 @@
+"""Event-driven async cluster simulator (repro.netsim): determinism, the
+eq. (9) wall-clock contract, empirical r recovery, scenario orderings, and
+push-sum mass conservation under packet loss."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (EveryIteration, GraphSequence, IncreasinglySparse,
+                        Periodic, expander_sequence, iteration_cost,
+                        kregular_expander)
+from repro.netsim import (EventQueue, LinkModel, NetSimulator, NodeSpec,
+                          homogeneous, lossy, pushsum_mass_audit, straggler,
+                          time_varying_expander)
+
+N, D, R = 8, 5, 0.01
+
+
+def _quadratic_problem(seed=0):
+    """f_i(x) = ||x - c_i||^2: consensus-essential, closed-form optimum.
+    The common +3 offset keeps ||mean(c)|| large so the x0=0 optimality gap
+    dominates the irreducible spread term mean ||c_i - cbar||^2."""
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(N, D)) * 2.0 + 3.0
+
+    def grad_fn(i, x, t):
+        return 2.0 * (x - centers[i])
+
+    def eval_fn(x):
+        return float(np.mean(np.sum((x[None] - centers) ** 2, axis=1)))
+
+    return centers, grad_fn, eval_fn
+
+
+def _run(scenario, T=300, seed=0, eval_every=5, **kw):
+    _, grad_fn, eval_fn = _quadratic_problem()
+    sim = NetSimulator(scenario, grad_fn, eval_fn, seed=seed, **kw)
+    trace = sim.run(np.zeros((N, D)), T, eval_every=eval_every)
+    return sim, trace
+
+
+# -- events -----------------------------------------------------------------
+
+
+def test_event_queue_ordering_and_clock():
+    q = EventQueue()
+    q.schedule(2.0, "b")
+    q.schedule(1.0, "a")
+    q.schedule(2.0, "c")  # same time: insertion order breaks the tie
+    kinds = [q.pop().kind for _ in range(3)]
+    assert kinds == ["a", "b", "c"]
+    assert q.now == 2.0
+    with pytest.raises(ValueError):
+        q.schedule(1.0, "past")
+
+
+def test_link_model_loss_and_serialize():
+    link = LinkModel(bandwidth=100.0, loss=0.5, latency=0.25)
+    assert link.serialize(50.0) == 0.5
+    rng = np.random.default_rng(0)
+    flights = [link.sample_flight(50.0, rng) for _ in range(400)]
+    dropped = sum(f is None for f in flights)
+    assert 120 < dropped < 280  # ~50%
+    assert all(f == pytest.approx(0.75) for f in flights if f is not None)
+
+
+# -- wall-clock contract ----------------------------------------------------
+
+
+def test_homogeneous_wall_clock_matches_eq9():
+    """Lossless homogeneous cluster: event clock == T * (1/n + k r)."""
+    sc = homogeneous(N, R, k=4, seed=0)
+    sim, trace = _run(sc, T=200)
+    k = sc.topology.degree
+    assert trace.sim_time[-1] == pytest.approx(
+        200 * iteration_cost(N, k, R), rel=1e-9)
+
+
+def test_measure_r_empirical_recovers_configured_r():
+    sim, _ = _run(homogeneous(N, R, k=4, seed=0), T=200)
+    m = sim.measure_r_empirical()
+    assert m.r == pytest.approx(R, rel=1e-6)
+    assert m.drop_rate == 0.0
+    pred = sim.predict(eps=0.1)
+    assert pred["n_opt"] == pytest.approx(1.0 / math.sqrt(R), rel=1e-6)
+    assert pred["h_opt"] >= 1
+
+
+def test_deterministic_given_seed():
+    _, t1 = _run(lossy(N, R, loss=0.3, seed=0), T=120, seed=7)
+    _, t2 = _run(lossy(N, R, loss=0.3, seed=0), T=120, seed=7)
+    assert t1.sim_time == t2.sim_time
+    assert t1.fvals == t2.fvals
+
+
+# -- scenario orderings -----------------------------------------------------
+
+
+def _tta(sim, trace, eval_fn_value):
+    return sim.time_to_reach(trace, eval_fn_value)
+
+
+def test_straggler_strictly_slower_than_homogeneous():
+    """One 4x straggler: its own iterations pace 4x slower AND its stale z
+    drags every neighbor's mixing -- time-to-accuracy strictly increases."""
+    centers, _, eval_fn = _quadratic_problem()
+    fstar = eval_fn(centers.mean(0))
+    f0 = eval_fn(np.zeros(D))
+    eps = fstar + 0.025 * (f0 - fstar)
+    sim0, tr0 = _run(homogeneous(N, R, k=4, seed=0), T=800)
+    sim1, tr1 = _run(straggler(N, R, slow_factor=4.0, k=4, seed=0), T=1200)
+    t0, t1 = _tta(sim0, tr0, eps), _tta(sim1, tr1, eps)
+    assert math.isfinite(t0) and math.isfinite(t1)
+    assert t1 > t0
+    # wall clock itself is strictly longer too, per iteration completed
+    assert tr1.sim_time[-1] / tr1.iters[-1] > tr0.sim_time[-1] / tr0.iters[-1]
+
+
+def test_lossy_slower_than_homogeneous():
+    """30% packet loss leaves the wall clock per iteration unchanged but
+    degrades mixing, so time-to-accuracy strictly increases at tight eps."""
+    centers, _, eval_fn = _quadratic_problem()
+    fstar = eval_fn(centers.mean(0))
+    f0 = eval_fn(np.zeros(D))
+    eps = fstar + 0.015 * (f0 - fstar)
+    sim0, tr0 = _run(homogeneous(N, R, k=4, seed=0), T=1200)
+    sim1, tr1 = _run(lossy(N, R, loss=0.3, seed=0), T=1200)
+    t0, t1 = _tta(sim0, tr0, eps), _tta(sim1, tr1, eps)
+    assert math.isfinite(t0) and math.isfinite(t1)
+    assert t1 > t0
+    assert sim1.measure_r_empirical().drop_rate == pytest.approx(0.3, abs=0.08)
+
+
+def test_time_varying_expander_runs_and_rewires():
+    sim, trace = _run(time_varying_expander(N, R, rewire_every=1.0, seed=0),
+                      T=150)
+    assert sim.rewires > 3
+    assert trace.fvals[-1] < trace.fvals[0]
+
+
+# -- push-sum ---------------------------------------------------------------
+
+
+def test_pushsum_mass_conservation_under_drops():
+    """The sigma/rho counters conserve total (value, weight) mass exactly
+    under 40% i.i.d. packet loss (averaging mode: zero gradients)."""
+    rng = np.random.default_rng(3)
+    y0 = rng.normal(size=(N, D))
+    _, _, eval_fn = _quadratic_problem()
+    sim = NetSimulator(lossy(N, R, loss=0.4, seed=1),
+                       lambda i, x, t: np.zeros(D), eval_fn,
+                       algorithm="pushsum", pushsum_y0=y0, seed=2,
+                       pushsum_w_floor=1e-12)  # exact ratio, no basin clamp
+    sim.run(np.zeros((N, D)), T=150, eval_every=50)
+    assert sim.drops > 0
+    y_total, w_total = pushsum_mass_audit(sim.nodes)
+    np.testing.assert_allclose(y_total, y0.sum(axis=0), atol=1e-9)
+    assert w_total == pytest.approx(N, abs=1e-9)
+    # ratio estimates converge to the true average despite the drops
+    est = np.stack([nd.z_est for nd in sim.nodes])
+    np.testing.assert_allclose(est, np.broadcast_to(y0.mean(0), est.shape),
+                               atol=1e-6)
+
+
+def test_pushsum_dda_converges_under_loss():
+    centers, _, eval_fn = _quadratic_problem()
+    fstar = eval_fn(centers.mean(0))
+    sim, trace = _run(lossy(N, R, loss=0.3, seed=0), T=1500,
+                      algorithm="pushsum",
+                      a_fn=lambda t: 0.5 / math.sqrt(max(t, 1.0)))
+    assert trace.fvals[-1] < fstar * 1.05
+    assert np.isfinite(trace.fvals).all()
+
+
+# -- core hooks the netsim relies on ---------------------------------------
+
+
+def test_next_comm_step_consistent_with_is_comm_step():
+    for sched in [EveryIteration(), Periodic(h=1), Periodic(h=4),
+                  IncreasinglySparse(p=0.3)]:
+        for t in range(0, 60):
+            nxt = sched.next_comm_step(t)
+            assert nxt > t
+            assert sched.is_comm_step(nxt)
+            assert not any(sched.is_comm_step(s) for s in range(t + 1, nxt))
+
+
+def test_graph_sequence():
+    seq = expander_sequence(N, k=4, length=3, seed=0)
+    assert seq.n == N and len(seq) == 3
+    assert seq.at(0).n == N
+    assert seq.at(5) is seq.at(2)  # periodic
+    assert 0.0 < seq.lambda2_worst() < 1.0
+    with pytest.raises(ValueError):
+        GraphSequence((kregular_expander(4, 2), kregular_expander(6, 2)))
+
+
+def test_node_spec_hardware_scaling():
+    assert NodeSpec().scale == pytest.approx(1.0)
+    assert NodeSpec.slowed(4.0).scale == pytest.approx(4.0)
+    assert NodeSpec(compute_scale=2.5).scale == 2.5
+
+
+def test_dda_simulator_time_to_reach_flag():
+    """Satellite fix: default reads Fbar (paper Fig 1/2); the flag switches
+    to F at the consensus average."""
+    from repro.core import DDASimulator
+    from repro.core.dda import SimTrace
+    trace = SimTrace(iters=[1, 2], sim_time=[0.5, 1.0],
+                     fvals=[5.0, 1.0], comms=[1, 2],
+                     disagreement=[0.0, 0.0],
+                     fvals_consensus=[0.5, 0.1])
+    sim = DDASimulator.__new__(DDASimulator)  # only time_to_reach needed
+    assert sim.time_to_reach(trace, 2.0) == 1.0
+    assert sim.time_to_reach(trace, 2.0, use_consensus=True) == 0.5
+    assert sim.time_to_reach(trace, 0.01) == float("inf")

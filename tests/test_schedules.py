@@ -4,7 +4,7 @@ the convergence constants (eq. 7/18/31)."""
 import math
 
 import pytest
-from hypothesis import given, strategies as st
+from _hyp import given, st
 
 from repro.core import schedules as S
 

@@ -3,7 +3,7 @@
 import math
 
 import pytest
-from hypothesis import given, strategies as st
+from _hyp import given, st
 
 from repro.core import (TPU_V5E, EveryIteration, IncreasinglySparse,
                         Periodic, derive_r_from_roofline, h_opt, h_opt_int,
