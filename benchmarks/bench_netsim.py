@@ -1,0 +1,194 @@
+"""Netsim engine throughput: object vs vectorized, n in {64, 256, 1024}.
+
+Benchmarks the two `NetSimulator` execution engines (netsim.engine) on the
+homogeneous expander scenario for both algorithms (stale-gossip dda and
+push-sum), reporting wall-clock and events/sec -- an "event" is one node
+step or one shipped message -- and the vectorized/object speedup per cell.
+Before timing anything it re-verifies the engine-equivalence contract
+(bit-identical traces on a seeded adversarial scenario) so a fast-but-wrong
+engine can never post a number.
+
+Results land in BENCH_netsim.json (see benchmarks/README.md for the schema),
+seeding the repo's netsim perf trajectory: CI runs `--smoke` on every push
+and uploads the JSON as an artifact.
+
+Acceptance (full mode): the vectorized engine must beat the object engine by
+`--min-speedup` (default 10x) at the largest n for dda/EveryIteration;
+exits nonzero otherwise.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+
+import numpy as np
+
+from repro.netsim import (NetSimulator, adversarial, homogeneous,
+                          quadratic_consensus)
+
+DEFAULT_SIZES = (64, 256, 1024)
+
+
+def build_problem(n: int, d: int, seed: int = 0):
+    """Quadratic consensus problem with BATCH-capable grad and eval (the
+    canonical netsim.problems one), so the engines' bitwise-verified batch
+    probes engage and per-node Python evaluation disappears from the hot
+    path."""
+    _, grad_fn, eval_fn = quadratic_consensus(n, d, seed, batchable=True)
+    return grad_fn, eval_fn
+
+
+def check_equivalence(n: int, d: int, T: int, r: float, seed: int) -> dict:
+    """Seeded adversarial scenario (loss + straggler + rewire): both engines
+    must produce bit-identical traces and r-measurements, per algorithm."""
+    grad_fn, eval_fn = build_problem(n, d, seed)
+    out = {}
+    for algorithm in ("dda", "pushsum"):
+        traces, meas = {}, {}
+        for engine in ("object", "vectorized"):
+            sc = adversarial(n, r, loss=0.2, slow_factor=3.0, n_slow=2,
+                             rewire_every=0.8, seed=seed)
+            sim = NetSimulator(sc, grad_fn, eval_fn, algorithm=algorithm,
+                               seed=seed, engine=engine)
+            traces[engine] = sim.run(np.zeros((n, d)), T=T, eval_every=5)
+            meas[engine] = sim.measure_r_empirical()
+        a, b = traces["object"], traces["vectorized"]
+        out[algorithm] = bool(
+            a.iters == b.iters and a.sim_time == b.sim_time
+            and a.fvals == b.fvals and a.fvals_consensus == b.fvals_consensus
+            and a.comms == b.comms and a.disagreement == b.disagreement
+            and meas["object"] == meas["vectorized"])
+    return out
+
+
+def bench_cell(n: int, d: int, T: int, r: float, k: int, algorithm: str,
+               engine: str, seed: int, eval_every: int,
+               repeats: int) -> dict:
+    grad_fn, eval_fn = build_problem(n, d, seed)
+    sc = homogeneous(n, r, k=k, seed=seed)
+    x0 = np.zeros((n, d))
+    best = float("inf")
+    for _ in range(repeats):  # best-of: robust to background load spikes
+        sim = NetSimulator(sc, grad_fn, eval_fn, algorithm=algorithm,
+                           seed=seed, engine=engine)
+        t0 = time.perf_counter()
+        trace = sim.run(x0, T=T, eval_every=eval_every)
+        best = min(best, time.perf_counter() - t0)
+    wall = best
+    events = n * T + sim.sent
+    return {
+        "n": n, "d": d, "T": T, "k": k, "r": r,
+        "algorithm": algorithm, "engine": engine,
+        "schedule": "every",
+        "events": int(events),
+        "wall_s": round(wall, 4),
+        "events_per_s": round(events / wall, 1),
+        "final_f": float(trace.fvals[-1]),
+        "final_disagreement": float(trace.disagreement[-1]),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--sizes", type=int, nargs="*", default=list(DEFAULT_SIZES),
+                    help="cluster sizes to sweep")
+    ap.add_argument("--d", type=int, default=64, help="dimension")
+    ap.add_argument("--T", type=int, default=40, help="iterations per node")
+    ap.add_argument("--r", type=float, default=0.01,
+                    help="configured per-message time (full-grad units)")
+    ap.add_argument("--k", type=int, default=4, help="expander degree")
+    ap.add_argument("--eval-every", type=int, default=5)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--algorithms", nargs="*", default=["dda", "pushsum"],
+                    choices=["dda", "pushsum"])
+    ap.add_argument("--min-speedup", type=float, default=10.0,
+                    help="required vectorized/object speedup at max n (dda)")
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="timing repeats per cell (best-of; 1 in --smoke)")
+    ap.add_argument("--out", default="BENCH_netsim.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes + short T: CI acceptance mode")
+    args = ap.parse_args(argv)
+
+    sizes = sorted(args.sizes)
+    T = args.T
+    if args.smoke:
+        sizes = [16, 64]
+        T = min(T, 25)
+    if not sizes:
+        ap.error("--sizes needs at least one cluster size")
+    if sizes[0] < 4:
+        ap.error("--sizes values must be >= 4 (the adversarial equivalence "
+                 "scenario needs 2 stragglers + healthy nodes)")
+
+    # correctness gate before any timing
+    equiv_n = min(16, sizes[0])
+    equivalence = check_equivalence(equiv_n, min(args.d, 8), T=60, r=args.r,
+                                    seed=args.seed)
+    for algorithm, ok in equivalence.items():
+        print(f"[equivalence] {algorithm}: "
+              f"{'bit-identical OK' if ok else 'FAIL'}")
+    if not all(equivalence.values()):
+        return 1
+
+    results = []
+    print("n,d,T,algorithm,engine,events,wall_s,events_per_s")
+    for n in sizes:
+        for algorithm in args.algorithms:
+            for engine in ("object", "vectorized"):
+                cell = bench_cell(n, args.d, T, args.r, args.k, algorithm,
+                                  engine, args.seed, args.eval_every,
+                                  repeats=1 if args.smoke else args.repeats)
+                results.append(cell)
+                print(f"{n},{args.d},{T},{algorithm},{engine},"
+                      f"{cell['events']},{cell['wall_s']},"
+                      f"{cell['events_per_s']}")
+
+    speedups = []
+    for n in sizes:
+        for algorithm in args.algorithms:
+            cells = {c["engine"]: c for c in results
+                     if c["n"] == n and c["algorithm"] == algorithm}
+            s = cells["object"]["wall_s"] / cells["vectorized"]["wall_s"]
+            speedups.append({"n": n, "algorithm": algorithm,
+                             "speedup": round(s, 2)})
+            print(f"[speedup] n={n} {algorithm}: {s:.1f}x")
+
+    report = {
+        "benchmark": "netsim_engine_throughput",
+        "mode": "smoke" if args.smoke else "full",
+        "config": {"sizes": sizes, "d": args.d, "T": T, "r": args.r,
+                   "k": args.k, "eval_every": args.eval_every,
+                   "seed": args.seed, "schedule": "every",
+                   "scenario": "homogeneous",
+                   "repeats": 1 if args.smoke else args.repeats},
+        "host": {"platform": platform.platform(),
+                 "python": platform.python_version(),
+                 "numpy": np.__version__},
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "equivalence": {"n": equiv_n, **equivalence},
+        "results": results,
+        "speedups": speedups,
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"[bench_netsim] wrote {args.out}")
+
+    if not args.smoke:
+        n_max = sizes[-1]
+        dda = next(s["speedup"] for s in speedups
+                   if s["n"] == n_max and s["algorithm"] == "dda")
+        if dda < args.min_speedup:
+            print(f"[bench_netsim] FAIL: vectorized speedup {dda:.1f}x < "
+                  f"{args.min_speedup:g}x at n={n_max} (dda)")
+            return 1
+        print(f"[bench_netsim] OK: {dda:.1f}x >= {args.min_speedup:g}x "
+              f"at n={n_max} (dda)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -15,7 +15,7 @@ from repro.core.tradeoff import (TPU_V5E, HardwareSpec, derive_r_from_roofline,
                                  n_opt_complete, predict_speedup,
                                  time_to_accuracy)
 from repro.core.consensus import (disagreement, mix_collective, mix_dense,
-                                  mix_stale, stale_combine,
+                                  mix_stale, stale_combine, stale_combine_batch,
                                   tree_mix_collective, tree_mix_dense)
 from repro.core.dda import (DDASimulator, DDAState, SimTrace, dda_init,
                             dda_local_step, dda_mix_step, stepsize_sqrt)

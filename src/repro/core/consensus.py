@@ -35,6 +35,7 @@ __all__ = [
     "mix_collective",
     "mix_stale",
     "stale_combine",
+    "stale_combine_batch",
     "tree_mix_dense",
     "tree_mix_collective",
     "disagreement",
@@ -92,6 +93,21 @@ def stale_combine(z, neighbor_acc, self_weight: float):
     runtime.fault_tolerance.degraded_matrix). Works on jax and numpy arrays.
     """
     return z * self_weight + neighbor_acc
+
+
+def stale_combine_batch(z_stack, neighbor_acc_stack, self_weights):
+    """`stale_combine` over a stacked batch of nodes at once.
+
+    z_stack / neighbor_acc_stack have shape (b, ...); `self_weights` is a
+    (b,) vector because each node folds a DIFFERENT number of undelivered
+    in-neighbors back into its own weight. Elementwise it is the exact same
+    arithmetic as b scalar `stale_combine` calls -- the netsim's vectorized
+    engine relies on that for bit-identical traces against the per-node
+    object engine. Works on jax and numpy arrays.
+    """
+    sw = self_weights.reshape(self_weights.shape[0],
+                              *([1] * (z_stack.ndim - 1)))
+    return z_stack * sw + neighbor_acc_stack
 
 
 def mix_stale(z: jax.Array, neighbor_acc: jax.Array, graph: CommGraph,

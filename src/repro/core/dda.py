@@ -53,9 +53,19 @@ PyTree = Any
 
 def stepsize_sqrt(A: float, q: float = 0.5) -> Callable[[jax.Array], jax.Array]:
     """a(t) = A / t^q (paper uses q=1/2 for bounded/periodic schedules and
-    general q in (p, 1) for increasingly sparse ones)."""
+    general q in (p, 1) for increasingly sparse ones).
+
+    The one canonical definition of the default schedule, shared by every
+    execution mode: the dense `DDASimulator` calls it with a traced float32
+    scalar inside jit (jnp path), while `repro.netsim`'s event-driven nodes
+    call it with host floats / float64 numpy batches (np path, full
+    precision). Sharing the closure keeps stepsize sweeps comparable across
+    modes -- a re-implemented inline lambda in one mode could silently
+    diverge from the other.
+    """
     def a(t):
-        return A / jnp.maximum(t, 1.0) ** q
+        xp = jnp if isinstance(t, jax.Array) else np
+        return A / xp.maximum(t, 1.0) ** q
     return a
 
 

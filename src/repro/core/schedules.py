@@ -18,6 +18,8 @@ import dataclasses
 import math
 from typing import Iterator
 
+import numpy as np
+
 __all__ = [
     "CommSchedule",
     "EveryIteration",
@@ -59,6 +61,19 @@ class CommSchedule:
             s += 1
         return s
 
+    def next_comm_step_batch(self, t: np.ndarray) -> np.ndarray:
+        """`next_comm_step` over an int array of iteration counters.
+
+        Used by the netsim's vectorized engine, which advances a whole
+        batch of due nodes per event bucket. The base implementation is
+        the per-element loop; schedules with closed forms override it with
+        pure array arithmetic so a 1000-node batch costs no Python-level
+        iteration.
+        """
+        t = np.asarray(t)
+        return np.array([self.next_comm_step(int(s)) for s in t],
+                        dtype=np.int64)
+
     def constant(self, L: float, R: float, lam2: float) -> float:
         raise NotImplementedError
 
@@ -77,6 +92,9 @@ class EveryIteration(CommSchedule):
 
     def next_comm_step(self, t: int) -> int:
         return t + 1
+
+    def next_comm_step_batch(self, t: np.ndarray) -> np.ndarray:
+        return np.asarray(t, dtype=np.int64) + 1
 
     def constant(self, L: float, R: float, lam2: float) -> float:
         return c1_constant(L, R, lam2)
@@ -117,6 +135,11 @@ class Periodic(CommSchedule):
     def next_comm_step(self, t: int) -> int:
         # comm steps are 1 + m*h for m >= 1
         m = max(1, (t - 1) // self.h + 1)
+        return 1 + m * self.h
+
+    def next_comm_step_batch(self, t: np.ndarray) -> np.ndarray:
+        t = np.asarray(t, dtype=np.int64)
+        m = np.maximum(1, (t - 1) // self.h + 1)
         return 1 + m * self.h
 
     def constant(self, L: float, R: float, lam2: float) -> float:

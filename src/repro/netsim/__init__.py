@@ -2,16 +2,46 @@
 mode, next to the dense synchronous DDASimulator and the shard_map launcher).
 
 Simulates DDA on a modeled cluster: priority-queue event clock
-(netsim.events), heterogeneous node speeds + lossy/jittery links + optional
-time-varying topology (netsim.network), async stale-gossip and drop-robust
-push-sum nodes (netsim.node), scenario presets (netsim.scenarios) and the
-driver with empirical-r recovery (netsim.simulator).
+(netsim.events, heap or bucketed-calendar backend), heterogeneous node
+speeds + lossy/jittery links + optional time-varying topology
+(netsim.network), async stale-gossip and drop-robust push-sum nodes
+(netsim.node), scenario presets (netsim.scenarios), the per-node and
+vectorized struct-of-arrays execution engines (netsim.engine) and the driver
+with empirical-r recovery (netsim.simulator).
+
+Engine selection
+----------------
+`NetSimulator(engine=...)` picks how the event loop executes:
+
+  * ``"object"``     -- one Python node object per consensus node, one heap
+    event per message. The reference implementation; linear in interpreter
+    overhead, so practical up to ~100 nodes.
+  * ``"vectorized"`` -- all node state in stacked (n, d) arrays, batch
+    queue entries on a calendar-queue clock, whole-batch numpy updates,
+    message payloads as index stamps into shared snapshot buffers. Orders
+    of magnitude faster at n ~ 1000 (benchmarks/bench_netsim.py) and
+    bit-identical to "object" on seeded scenarios
+    (tests/test_netsim_engine.py).
+  * ``"auto"``       -- the default: currently always the vectorized
+    engine, since every scenario the presets can express is compatible
+    with it (link jitter and per-edge overrides fall back to exact
+    per-message sampling inside the engine; non-batchable grad_fn /
+    eval_fn / projection callables fall back to per-node loops after a
+    bitwise-verified probe). The rule exists so future features that only
+    the object engine supports can be routed there without breaking
+    callers.
+
+Gradients can opt into a jitted jax path with
+`NetSimulator(batch_grad_fn=engine.jax_batch_grad(grad_fn))`.
 """
 
+from repro.netsim.engine import (ObjectEngine, VectorizedEngine,
+                                 jax_batch_grad)
 from repro.netsim.events import Event, EventQueue
 from repro.netsim.network import LinkModel, Network, NodeSpec
 from repro.netsim.node import (AsyncDDANode, PushSumDDANode,
                                pushsum_mass_audit)
-from repro.netsim.scenarios import (Scenario, homogeneous, lossy, straggler,
-                                    time_varying_expander)
+from repro.netsim.problems import quadratic_consensus
+from repro.netsim.scenarios import (Scenario, adversarial, homogeneous,
+                                    lossy, straggler, time_varying_expander)
 from repro.netsim.simulator import NetSimulator, RMeasurement

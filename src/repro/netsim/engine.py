@@ -1,0 +1,823 @@
+"""Execution engines for the event-driven cluster simulator.
+
+Two backends drive the same simulation behind `NetSimulator`:
+
+  * `ObjectEngine`     -- the reference: one Python `AsyncDDANode` /
+    `PushSumDDANode` object per node, one event per message. Simple,
+    obviously correct, and O(interpreter) per event -- fine up to ~100
+    nodes, hopeless at 1000.
+
+  * `VectorizedEngine` -- the fast path: all node state lives in
+    struct-of-arrays form (stacked (n, d) arrays for z/x/xhat, an (n, n)
+    latest-stamp matrix plus growable per-edge value pools for the
+    stale-gossip inboxes, per-edge cumulative sigma/rho mass pools for
+    push-sum), events are BATCH entries (one queue entry per set of node
+    steps or message arrivals sharing a timestamp), and every update is
+    applied to the whole due batch with vectorized numpy. Message payloads
+    are index stamps into shared snapshot buffers -- no per-message numpy
+    copy ever happens.
+
+Equivalence contract
+--------------------
+On the same seeded scenario the two engines produce BIT-IDENTICAL traces
+(`SimTrace` and `measure_r_empirical`), not merely statistically equivalent
+ones. That works because every vectorized operation is arranged to perform
+the exact same float64 operations in the exact same order as the per-node
+loop:
+
+  * the drop/jitter RNG is consumed in the object engine's event order
+    (numpy `Generator` block draws are stream-identical to scalar draws);
+  * batched stale mixing accumulates in-neighbor slots in slot order via
+    `core.consensus.stale_combine_batch`, folding undelivered neighbors'
+    weight into the self weight per row exactly like the object node;
+  * the stepsize is evaluated once per distinct iteration counter with the
+    same scalar call the object node makes, then scattered to the batch;
+  * `np.add.at` applies push-sum mass deltas unbuffered in event order.
+
+The one knowing divergence: the object engine interleaves message and
+step-reschedule queue insertions per node, while the vectorized engine
+inserts all of a batch's messages before its steps. The two orders can only
+be told apart when a message arrival ties a step time EXACTLY (same float),
+which no scenario preset produces (it needs link latency to equal a node's
+busy time to the last ulp). Everything else -- loss, stragglers, rewiring,
+partial batches, mid-batch trace records -- is exact.
+
+Gradient / objective batching
+-----------------------------
+`grad_fn(i, x_i, t)` is a per-node callable by contract. The vectorized
+engine PROBES it once with a stacked batch `(idx_array, x_batch, t_array)`
+and keeps the batched call only if the result is bitwise identical to the
+per-node loop on that batch; otherwise it falls back to the loop forever.
+Callers with a jax-traceable gradient can skip the probe and hand
+`NetSimulator(batch_grad_fn=jax_batch_grad(fn))` a jitted
+`jax.vmap` wrapper. `eval_fn` is probed the same way at the first trace
+record, so trace evaluation stops dominating small-`eval_every` runs.
+"""
+
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Any, Callable
+
+import numpy as np
+
+from repro.core.consensus import stale_combine_batch
+from repro.core.dda import SimTrace
+from repro.netsim.events import EventQueue
+from repro.netsim.node import AsyncDDANode, PushSumDDANode
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.netsim.simulator import NetSimulator
+
+__all__ = ["ObjectEngine", "VectorizedEngine", "jax_batch_grad"]
+
+
+def jax_batch_grad(grad_fn: Callable, jit: bool = True) -> Callable:
+    """Wrap a jax-traceable per-node `grad_fn(i, x_i, t)` into the batched
+    convention `(idx_array, x_batch, t_array) -> (b, d) ndarray` via
+    `jax.vmap` (optionally jitted). Pass the result as
+    `NetSimulator(batch_grad_fn=...)`; note jax's float32 default means this
+    path trades the bit-identical guarantee for speed unless x64 is enabled.
+    """
+    import jax
+
+    f = jax.vmap(grad_fn, in_axes=(0, 0, 0))
+    if jit:
+        f = jax.jit(f)
+
+    def batched(idx: np.ndarray, x: np.ndarray, t: np.ndarray) -> np.ndarray:
+        return np.asarray(f(idx, x, t), dtype=np.float64)
+
+    return batched
+
+
+# ---------------------------------------------------------------------------
+# batch-capability probes (shared by both engines via NetSimulator)
+# ---------------------------------------------------------------------------
+
+
+class _GradBatch:
+    """Resolves per-node vs batched gradient evaluation.
+
+    Modes: "explicit" (caller-supplied batch_grad_fn), "batch" (probe found
+    grad_fn itself batchable, verified bitwise), "loop" (per-node calls).
+    """
+
+    def __init__(self, grad_fn: Callable, batch_grad_fn: Callable | None):
+        self.grad_fn = grad_fn
+        self.batch_grad_fn = batch_grad_fn
+        self.mode: str | None = "explicit" if batch_grad_fn is not None else None
+
+    def _loop(self, idx: np.ndarray, x: np.ndarray, t: np.ndarray) -> np.ndarray:
+        return np.stack([
+            np.asarray(self.grad_fn(int(idx[j]), x[j], int(t[j])),
+                       dtype=np.float64)
+            for j in range(len(idx))])
+
+    def __call__(self, idx: np.ndarray, x: np.ndarray, t: np.ndarray) -> np.ndarray:
+        if self.mode == "explicit":
+            return np.asarray(self.batch_grad_fn(idx, x, t), dtype=np.float64)
+        if self.mode == "loop":
+            return self._loop(idx, x, t)
+        per = self._loop(idx, x, t)
+        # probe once, keep batch only if bit-identical -- and only on a
+        # batch of >= 2, since a scalar-style callable can accidentally
+        # survive a size-1 probe (e.g. `if t > 0` is valid on a 1-element
+        # array) and then crash on the first real batch
+        if self.mode is None and len(idx) >= 2:
+            try:
+                batch = np.asarray(self.grad_fn(idx, x, t), dtype=np.float64)
+                ok = batch.shape == per.shape and np.array_equal(batch, per)
+            except Exception:
+                ok = False
+            self.mode = "batch" if ok else "loop"
+        return per
+
+    def batch_or_loop(self, idx, x, t):
+        if self.mode == "batch":
+            return np.asarray(self.grad_fn(idx, x, t), dtype=np.float64)
+        return self(idx, x, t)
+
+
+class _EvalBatch:
+    """Probe whether eval_fn accepts a stacked (n, d) batch and returns one
+    scalar per node; keep the batched call only if it reproduces the
+    per-node loop bitwise on the probe batch."""
+
+    def __init__(self, eval_fn: Callable[[np.ndarray], float]):
+        self.eval_fn = eval_fn
+        self.mode: str | None = None
+
+    def mean(self, xhat_stack: np.ndarray) -> float:
+        n = xhat_stack.shape[0]
+        if self.mode == "batch":
+            return float(np.mean(np.asarray(self.eval_fn(xhat_stack))))
+        per = [self.eval_fn(x) for x in xhat_stack]
+        if self.mode is None and n >= 2:  # see _GradBatch: size-1 probes lie
+            try:
+                batch = np.asarray(self.eval_fn(xhat_stack))
+                ok = (batch.shape == (n,)
+                      and all(float(batch[j]) == float(per[j])
+                              for j in range(n)))
+            except Exception:
+                ok = False
+            self.mode = "batch" if ok else "loop"
+        return float(np.mean(per))
+
+
+class _RowBatch:
+    """Same probe for a row-wise map (projection): batch if bitwise equal."""
+
+    def __init__(self, fn: Callable[[np.ndarray], np.ndarray]):
+        self.fn = fn
+        self.mode: str | None = None
+
+    def __call__(self, rows: np.ndarray) -> np.ndarray:
+        if self.mode == "batch":
+            return np.asarray(self.fn(rows), dtype=np.float64)
+        per = np.stack([np.asarray(self.fn(r), dtype=np.float64)
+                        for r in rows])
+        if self.mode is None and len(rows) >= 2:  # see _GradBatch: a size-1
+            try:                                  # probe can lie
+                batch = np.asarray(self.fn(rows), dtype=np.float64)
+                ok = batch.shape == per.shape and np.array_equal(batch, per)
+            except Exception:
+                ok = False
+            self.mode = "batch" if ok else "loop"
+        return per
+
+
+def _record_stacks(sim: "NetSimulator", trace: SimTrace, now: float,
+                   total_steps: int, n: int, xhat: np.ndarray, z: np.ndarray,
+                   comm_total: int) -> None:
+    """Shared trace-point writer; both engines feed it stacked state."""
+    zbar = z.mean(axis=0, keepdims=True)
+    diff = (z - zbar).reshape(n, -1)
+    trace.iters.append(total_steps // n)
+    trace.sim_time.append(float(now))
+    trace.fvals.append(sim._eval_batch.mean(xhat))
+    trace.fvals_consensus.append(float(sim.eval_fn(xhat.mean(axis=0))))
+    trace.comms.append(int(comm_total // n))
+    trace.disagreement.append(float(np.linalg.norm(diff, axis=-1).max()))
+
+
+# ---------------------------------------------------------------------------
+# object engine (reference)
+# ---------------------------------------------------------------------------
+
+
+class ObjectEngine:
+    """Per-node reference engine: one Python object per node, one event per
+    message, a heapq event clock. This is PR 1's loop, extracted."""
+
+    name = "object"
+
+    def __init__(self, sim: "NetSimulator"):
+        self.sim = sim
+        self.net = sim.net
+        self.nodes: list[AsyncDDANode | PushSumDDANode] = []
+        self.msg_flights: list[float] = []
+        self.compute_times: list[float] = []
+        self.drops = 0
+        self.sent = 0
+        self.rewires = 0
+
+    def _make_nodes(self, x0_stack: np.ndarray) -> None:
+        sim = self.sim
+        self.nodes = []
+        for i in range(self.net.n):
+            if sim.algorithm == "pushsum":
+                y0 = None if sim.pushsum_y0 is None else sim.pushsum_y0[i]
+                node = PushSumDDANode(i, x0_stack[i], sim.grad_fn, sim.a_fn,
+                                      sim.schedule, sim.projection, y0=y0,
+                                      w_floor=sim.pushsum_w_floor)
+            else:
+                node = AsyncDDANode(i, x0_stack[i], sim.grad_fn, sim.a_fn,
+                                    sim.schedule, sim.projection)
+            self.nodes.append(node)
+
+    def _step_busy(self, i: int) -> float:
+        """Wall-clock the node is occupied by its NEXT iteration: local
+        gradient plus (on communication iterations) serializing k messages
+        out the NIC -- eq. (9)'s 1/n + k*r, per node, per link model."""
+        node = self.nodes[i]
+        busy = self.net.local_step_time(i)
+        if node.is_comm_next():
+            busy += self.net.send_busy_time(i)
+        return busy
+
+    def run(self, x0_stack: np.ndarray, T: int, eval_every: int,
+            time_limit: float) -> SimTrace:
+        sim, net = self.sim, self.net
+        n = net.n
+        self._make_nodes(x0_stack)
+        rng = np.random.default_rng(sim.seed)
+        q = EventQueue(backend="heap")
+        trace = SimTrace([], [], [], [], [])
+
+        for i in range(n):
+            q.schedule(self._step_busy(i), "step", node=i)
+        if sim.scenario.rewire_every is not None:
+            q.schedule(sim.scenario.rewire_every, "rewire")
+
+        total_steps = 0
+        next_eval = eval_every * n
+        active = n
+
+        while not q.empty():
+            ev = q.pop()
+            if ev.time > time_limit:
+                break
+            if ev.kind == "step":
+                i = ev.data["node"]
+                node = self.nodes[i]
+                self.compute_times.append(net.local_step_time(i))
+                msgs = node.finish_step(net)
+                for dst, payload in msgs:
+                    self.sent += 1
+                    flight = net.sample_flight(i, dst, rng)
+                    if flight is None:
+                        self.drops += 1
+                        continue
+                    self.msg_flights.append(flight)
+                    # serialization already stalled the sender (step busy);
+                    # only propagation + jitter remains in the air
+                    extra = max(flight - net.serialize_time(i, dst), 0.0)
+                    q.schedule_in(extra, "msg", src=i, dst=dst,
+                                  payload=payload)
+                total_steps += 1
+                if node.t < T:
+                    q.schedule_in(self._step_busy(i), "step", node=i)
+                else:
+                    active -= 1
+                if total_steps >= next_eval:
+                    self._record(trace, q.now, total_steps)
+                    next_eval += eval_every * n
+            elif ev.kind == "msg":
+                self.nodes[ev.data["dst"]].receive(ev.data["src"],
+                                                   ev.data["payload"])
+            elif ev.kind == "rewire":
+                net.rewire()
+                self.rewires += 1
+                if active > 0:
+                    q.schedule_in(sim.scenario.rewire_every, "rewire")
+
+        if not trace.iters or trace.iters[-1] * n < total_steps:
+            self._record(trace, q.now, total_steps)
+        return trace
+
+    def _record(self, trace: SimTrace, now: float, total_steps: int) -> None:
+        n = self.net.n
+        xhat = np.stack([nd.xhat for nd in self.nodes])
+        z = np.stack([nd.z_est for nd in self.nodes])
+        comm_total = sum(nd.comm_iters for nd in self.nodes)
+        _record_stacks(self.sim, trace, now, total_steps, n, xhat, z,
+                       comm_total)
+
+    def materialize_nodes(self) -> list:
+        return self.nodes
+
+
+# ---------------------------------------------------------------------------
+# vectorized engine
+# ---------------------------------------------------------------------------
+
+
+class _EdgeStore:
+    """Growable per-directed-edge row store: `eid[a, b]` maps an (a, b) pair
+    to a row in the value pools, allocated (zero-initialized) on first
+    touch. This is how (n, n, d)-shaped per-link state (inbox values,
+    push-sum sigma/rho mass) stays O(edges seen), not O(n^2 d)."""
+
+    __slots__ = ("eid", "y", "w", "size", "_tail", "_scalar")
+
+    def __init__(self, n: int, tail: tuple[int, ...], scalar: bool = False):
+        self.eid = np.full((n, n), -1, dtype=np.int64)
+        self._tail = tail
+        self._scalar = scalar
+        self.size = 0
+        self.y = np.zeros((0,) + tail, dtype=np.float64)
+        self.w = np.zeros(0, dtype=np.float64) if scalar else None
+
+    def _ensure(self, need: int) -> None:
+        cap = len(self.y)
+        if need <= cap:
+            return
+        cap = max(16, cap)
+        while cap < need:
+            cap *= 2
+        y = np.zeros((cap,) + self._tail, dtype=np.float64)
+        y[:self.size] = self.y[:self.size]
+        self.y = y
+        if self._scalar:
+            w = np.zeros(cap, dtype=np.float64)
+            w[:self.size] = self.w[:self.size]
+            self.w = w
+
+    def rows(self, a: np.ndarray, b: np.ndarray) -> np.ndarray:
+        """Row indices for (a, b) pairs, allocating missing ones. Pairs must
+        be unique within the call (callers guarantee this; duplicate-pair
+        batches go through the scalar fallback paths)."""
+        r = self.eid[a, b]
+        miss = r < 0
+        if miss.any():
+            m = int(miss.sum())
+            self._ensure(self.size + m)
+            self.eid[a[miss], b[miss]] = np.arange(self.size, self.size + m)
+            self.size += m
+            r = self.eid[a, b]
+        return r
+
+    def row1(self, a: int, b: int) -> int:
+        r = int(self.eid[a, b])
+        if r < 0:
+            self._ensure(self.size + 1)
+            r = self.size
+            self.eid[a, b] = r
+            self.size += 1
+        return r
+
+
+class VectorizedEngine:
+    """Struct-of-arrays engine: batched event processing over stacked node
+    state. See the module docstring for the equivalence contract."""
+
+    name = "vectorized"
+
+    def __init__(self, sim: "NetSimulator"):
+        self.sim = sim
+        self.net = sim.net
+        self.algorithm = sim.algorithm
+        self.drops = 0
+        self.sent = 0
+        self.rewires = 0
+        self._flight_chunks: list[np.ndarray] = []
+        self._compute_chunks: list[np.ndarray] = []
+        self._a_cache: dict[float, float] = {}
+        self._epoch_cache: dict[int, tuple] = {}
+        self._proj = (_RowBatch(sim.projection)
+                      if sim.projection is not None else None)
+
+    # -- observability (same contract as ObjectEngine's lists) --------------
+
+    @property
+    def msg_flights(self) -> list[float]:
+        if not self._flight_chunks:
+            return []
+        return np.concatenate(self._flight_chunks).tolist()
+
+    @property
+    def compute_times(self) -> list[float]:
+        if not self._compute_chunks:
+            return []
+        return np.concatenate(self._compute_chunks).tolist()
+
+    # -- topology / timing caches -------------------------------------------
+
+    def _rebuild_topology(self) -> None:
+        net = self.net
+        idx = net.epoch % len(net.seq)
+        cached = self._epoch_cache.get(idx)
+        if cached is None:
+            g = net.seq.at(idx)
+            n, k = g.n, g.degree
+            S_in = np.empty((n, k), dtype=np.int64)
+            S_out = np.empty((n, k), dtype=np.int64)
+            ar = np.arange(n)
+            for slot, perm in enumerate(g.perms):
+                p = np.asarray(perm, dtype=np.int64)
+                S_in[:, slot] = p          # receiver i hears from perm[i]
+                S_out[p, slot] = ar        # sender perm[i] ships to i
+            # NIC occupancy per full gossip round, accumulated link-by-link
+            # in the object engine's out-neighbor order so the float result
+            # matches its Python `sum()` bitwise.
+            send_busy = np.zeros(n, dtype=np.float64)
+            if net.link_overrides:
+                for i in range(n):
+                    busy = 0.0
+                    for slot in range(k):
+                        busy += net.serialize_time(i, int(S_out[i, slot]))
+                    send_busy[i] = busy
+            else:
+                busy, s = 0.0, net.link.serialize(net.message_bytes)
+                for _ in range(k):
+                    busy += s
+                send_busy[:] = busy
+            cached = (g, S_in, S_out, send_busy)
+            self._epoch_cache[idx] = cached
+        self.graph, self.S_in, self.S_out, self.send_busy = cached
+        self.k = self.graph.degree
+
+    # -- flight sampling (RNG consumed in the object engine's order) ---------
+
+    def _sample_flights(self, srcs: np.ndarray, dsts: np.ndarray
+                        ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(keep, flight, extra) per message, node-major slot-minor order."""
+        m = len(srcs)
+        net, rng = self.net, self.rng
+        link = net.link
+        if not net.link_overrides and link.jitter == 0.0:
+            if link.loss > 0.0:
+                keep = rng.random(m) >= link.loss
+            else:
+                keep = np.ones(m, dtype=bool)
+            s = link.serialize(net.message_bytes)
+            flight = s + link.latency
+            extra = max(flight - s, 0.0)
+            return (keep, np.full(m, flight), np.full(m, extra))
+        # jitter or per-edge overrides: exact per-message sampling
+        keep = np.zeros(m, dtype=bool)
+        flights = np.zeros(m, dtype=np.float64)
+        extras = np.zeros(m, dtype=np.float64)
+        for j in range(m):
+            src, dst = int(srcs[j]), int(dsts[j])
+            f = net.sample_flight(src, dst, rng)
+            if f is None:
+                continue
+            keep[j] = True
+            flights[j] = f
+            extras[j] = max(f - net.serialize_time(src, dst), 0.0)
+        return keep, flights, extras
+
+    def _ship(self, srcs, dsts, payload: dict[str, Any]) -> None:
+        """Sample flights for a flat message batch and schedule arrival
+        groups (one queue entry per distinct arrival time)."""
+        m = len(srcs)
+        self.sent += m
+        keep, flights, extras = self._sample_flights(srcs, dsts)
+        self.drops += int(m - keep.sum())
+        if not keep.any():
+            return
+        ks = np.nonzero(keep)[0]
+        self._flight_chunks.append(flights[ks])
+        arrivals = self.q.now + extras[ks]
+        times, inv = np.unique(arrivals, return_inverse=True)
+        for u, tm in enumerate(times):
+            sel = ks[inv == u]
+            data = {key: val[sel] for key, val in payload.items()
+                    if key != "buf"}
+            if "buf" in payload:
+                data["buf"] = payload["buf"]
+            self.q.schedule(float(tm), "msgs", srcs=srcs[sel],
+                            dsts=dsts[sel], **data)
+
+    # -- stepsize (scalar calls, scattered to the batch) ---------------------
+
+    def _a_batch(self, t_new: np.ndarray) -> np.ndarray:
+        uniq, inv = np.unique(t_new, return_inverse=True)
+        vals = np.empty(len(uniq), dtype=np.float64)
+        for j, u in enumerate(uniq):
+            u = float(u)
+            a = self._a_cache.get(u)
+            if a is None:
+                a = float(self.sim.a_fn(u))
+                self._a_cache[u] = a
+            vals[j] = a
+        return vals[inv]
+
+    def _col(self, v: np.ndarray) -> np.ndarray:
+        return v.reshape(v.shape[0], *([1] * len(self.tail)))
+
+    # -- lifecycle ------------------------------------------------------------
+
+    def _init_state(self, x0_stack: np.ndarray) -> None:
+        sim, n = self.sim, self.net.n
+        self.n = n
+        self.tail = x0_stack.shape[1:]
+        self.x = x0_stack.copy()
+        self.xhat = x0_stack.copy()
+        self.t = np.zeros(n, dtype=np.int64)
+        self.next_comm = np.full(n, sim.schedule.next_comm_step(0),
+                                 dtype=np.int64)
+        self.comm_iters = np.zeros(n, dtype=np.int64)
+        self.local_step = np.array(
+            [spec.scale / n for spec in self.net.node_specs],
+            dtype=np.float64)
+        if self.algorithm == "pushsum":
+            self.y = (np.zeros_like(self.x) if sim.pushsum_y0 is None
+                      else np.array(sim.pushsum_y0, dtype=np.float64))
+            self.w = np.ones(n, dtype=np.float64)
+            self.w_floor = sim.pushsum_w_floor
+            self.sigma = _EdgeStore(n, self.tail, scalar=True)
+            self.rho = _EdgeStore(n, self.tail, scalar=True)
+        else:
+            self.z = np.zeros_like(self.x)
+            self.stamp = np.zeros((n, n), dtype=np.int64)
+            self.val = _EdgeStore(n, self.tail)
+
+    def _z_est_all(self) -> np.ndarray:
+        if self.algorithm == "pushsum":
+            return self.y / self._col(np.maximum(self.w, self.w_floor))
+        return self.z
+
+    def _schedule_steps(self, nodes: np.ndarray, fire: np.ndarray) -> None:
+        """One 'steps' entry per distinct fire time (node order within)."""
+        times, inv = np.unique(fire, return_inverse=True)
+        for u, tm in enumerate(times):
+            self.q.schedule(float(tm), "steps", nodes=nodes[inv == u])
+
+    # -- main loop ------------------------------------------------------------
+
+    def run(self, x0_stack: np.ndarray, T: int, eval_every: int,
+            time_limit: float) -> SimTrace:
+        sim = self.sim
+        n = self.net.n
+        self._init_state(x0_stack)
+        self._rebuild_topology()
+        self.rng = np.random.default_rng(sim.seed)
+        self.q = q = EventQueue(backend="calendar")
+        trace = SimTrace([], [], [], [], [])
+
+        nodes0 = np.arange(n, dtype=np.int64)
+        busy0 = self.local_step + np.where(
+            self.t + 1 == self.next_comm, self.send_busy, 0.0)
+        self._schedule_steps(nodes0, busy0)
+        if sim.scenario.rewire_every is not None:
+            q.schedule(sim.scenario.rewire_every, "rewire")
+
+        self.total_steps = 0
+        self.next_eval = eval_every * n
+        self.active = n
+
+        while not q.empty():
+            ev = q.pop()
+            if ev.time > time_limit:
+                break
+            if ev.kind == "steps":
+                nodes = ev.data["nodes"]
+                # coalesce same-time step entries (consecutive by seq)
+                while (not q.empty() and q.peek().kind == "steps"
+                       and q.peek().time == ev.time):
+                    nodes = np.concatenate([nodes, q.pop().data["nodes"]])
+                self._on_steps(nodes, T, trace, eval_every * n)
+            elif ev.kind == "msgs":
+                self._on_msgs(ev.data)
+            elif ev.kind == "rewire":
+                self.net.rewire()
+                self._rebuild_topology()
+                self.rewires += 1
+                if self.active > 0:
+                    q.schedule_in(sim.scenario.rewire_every, "rewire")
+
+        if not trace.iters or trace.iters[-1] * n < self.total_steps:
+            self._record(trace, q.now, self.total_steps)
+        return trace
+
+    def _record(self, trace: SimTrace, now: float, total_steps: int) -> None:
+        _record_stacks(self.sim, trace, now, total_steps, self.n, self.xhat,
+                       self._z_est_all(), int(self.comm_iters.sum()))
+
+    # -- step processing ------------------------------------------------------
+
+    def _on_steps(self, nodes: np.ndarray, T: int, trace: SimTrace,
+                  eval_every_steps: int) -> None:
+        """Drain a same-time batch of node steps, splitting at trace-record
+        boundaries so a mid-batch `total_steps >= next_eval` crossing
+        records exactly the state the object engine would have."""
+        start, b = 0, len(nodes)
+        while start < b:
+            room = self.next_eval - self.total_steps
+            chunk = nodes[start:start + min(room, b - start)]
+            self._process_chunk(chunk, T)
+            self.total_steps += len(chunk)
+            start += len(chunk)
+            if self.total_steps >= self.next_eval:
+                self._record(trace, self.q.now, self.total_steps)
+                self.next_eval += eval_every_steps
+
+    def _process_chunk(self, due: np.ndarray, T: int) -> None:
+        sim, now = self.sim, self.q.now
+        i = due
+        self._compute_chunks.append(self.local_step[i])
+        t_old = self.t[i]
+        t_new = t_old + 1
+        grads = sim._grad_batch.batch_or_loop(i, self.x[i], t_old)
+        comm = t_new == self.next_comm[i]
+        any_comm = bool(comm.any())
+        if any_comm:
+            ci = i[comm]
+            if self.algorithm == "pushsum":
+                self._comm_pushsum(ci)
+            else:
+                self._comm_dda(ci, t_new[comm], grads[comm])
+            self.next_comm[ci] = sim.schedule.next_comm_step_batch(
+                t_new[comm])
+            self.comm_iters[ci] += 1
+        if self.algorithm == "pushsum":
+            self.y[i] = self.y[i] + grads
+            z_rows = self.y[i] / self._col(np.maximum(self.w[i],
+                                                      self.w_floor))
+        else:
+            if (~comm).any():
+                ni = i[~comm]
+                self.z[ni] = self.z[ni] + grads[~comm]
+            z_rows = self.z[i]
+        a_t = self._a_batch(t_new)
+        x_new = -self._col(a_t) * z_rows
+        if self._proj is not None:
+            x_new = self._proj(x_new)
+        self.xhat[i] = (self._col(t_old) * self.xhat[i] + x_new) \
+            / self._col(t_new)
+        self.x[i] = x_new
+        self.t[i] = t_new
+        # reschedule survivors, grouped by their next fire time
+        alive = t_new < T
+        self.active -= int((~alive).sum())
+        if alive.any():
+            ai = i[alive]
+            comm_next = (t_new[alive] + 1) == self.next_comm[ai]
+            busy = self.local_step[ai] + np.where(comm_next,
+                                                  self.send_busy[ai], 0.0)
+            self._schedule_steps(ai, now + busy)
+
+    def _comm_dda(self, ci: np.ndarray, stamps: np.ndarray,
+                  grads: np.ndarray) -> None:
+        """Communication iteration for a batch of stale-gossip DDA nodes:
+        snapshot pre-mix z, ship it, then mix-with-latest + gradient."""
+        k = self.k
+        buf = self.z[ci].copy()  # one shared snapshot for all k messages
+        # batched stale mix: accumulate in-neighbor slots in slot order,
+        # folding never-delivered neighbors back into the self weight
+        g = self.graph
+        acc = np.zeros_like(buf)
+        missing = np.zeros(len(ci), dtype=np.int64)
+        for slot in range(k):
+            srcs = self.S_in[ci, slot]
+            st = self.stamp[ci, srcs]
+            has = st > 0
+            if has.any():
+                rows = self.val.eid[ci, srcs]
+                vals = self.val.y[np.where(has, rows, 0)]
+                acc += np.where(self._col(has), vals, 0.0)
+            missing += ~has
+        sw = g.self_weight + missing * g.edge_weight
+        mixed = stale_combine_batch(self.z[ci], g.edge_weight * acc, sw)
+        self.z[ci] = mixed + grads
+        srcs = np.repeat(ci, k)
+        dsts = self.S_out[ci].ravel()
+        self._ship(srcs, dsts, {
+            "buf": buf,
+            "rows": np.repeat(np.arange(len(ci), dtype=np.int64), k),
+            "stamps": np.repeat(stamps, k)})
+
+    def _comm_pushsum(self, ci: np.ndarray) -> None:
+        """Communication iteration for a batch of push-sum nodes: split mass
+        equally over self + out-links, bump each link's cumulative sigma,
+        and ship the post-bump cumulative totals."""
+        k = self.k
+        share = 1.0 / (k + 1)
+        y_sh = self.y[ci] * share
+        w_sh = self.w[ci] * share
+        b = len(ci)
+        snap_y = np.empty((b, k) + self.tail, dtype=np.float64)
+        snap_w = np.empty((b, k), dtype=np.float64)
+        for slot in range(k):
+            d_s = self.S_out[ci, slot]
+            rows = self.sigma.rows(ci, d_s)
+            self.sigma.y[rows] += y_sh
+            self.sigma.w[rows] += w_sh
+            snap_y[:, slot] = self.sigma.y[rows]
+            snap_w[:, slot] = self.sigma.w[rows]
+        self.y[ci] = y_sh
+        self.w[ci] = w_sh
+        srcs = np.repeat(ci, k)
+        dsts = self.S_out[ci].ravel()
+        self._ship(srcs, dsts, {
+            "buf": snap_y.reshape((b * k,) + self.tail),
+            "rows": np.arange(b * k, dtype=np.int64),
+            "w": snap_w.ravel()})
+
+    # -- message arrival ------------------------------------------------------
+
+    def _on_msgs(self, data: dict[str, Any]) -> None:
+        srcs, dsts = data["srcs"], data["dsts"]
+        m = len(srcs)
+        pairs = dsts.astype(np.int64) * self.n + srcs
+        unique = len(np.unique(pairs)) == m
+        if self.algorithm == "pushsum":
+            self._recv_pushsum(srcs, dsts, data["buf"], data["rows"],
+                               data["w"], unique)
+        else:
+            self._recv_dda(srcs, dsts, data["buf"], data["rows"],
+                           data["stamps"], unique)
+
+    def _recv_dda(self, srcs, dsts, buf, rows, stamps, unique: bool) -> None:
+        if not unique:  # same link twice in one arrival batch: exact order
+            for j in range(len(srcs)):
+                s, d, st = int(srcs[j]), int(dsts[j]), int(stamps[j])
+                if st > self.stamp[d, s]:
+                    r = self.val.row1(d, s)
+                    self.val.y[r] = buf[rows[j]]
+                    self.stamp[d, s] = st
+            return
+        cur = self.stamp[dsts, srcs]
+        upd = stamps > cur
+        if not upd.any():
+            return
+        ds, ss = dsts[upd], srcs[upd]
+        r = self.val.rows(ds, ss)
+        self.val.y[r] = buf[rows[upd]]
+        self.stamp[ds, ss] = stamps[upd]
+
+    def _recv_pushsum(self, srcs, dsts, buf, rows, w, unique: bool) -> None:
+        if not unique:
+            for j in range(len(srcs)):
+                s, d = int(srcs[j]), int(dsts[j])
+                r = self.rho.row1(s, d)
+                S_y, S_w = buf[rows[j]], float(w[j])
+                if S_w >= self.rho.w[r]:
+                    self.y[d] = self.y[d] + (S_y - self.rho.y[r])
+                    self.w[d] += S_w - self.rho.w[r]
+                    self.rho.y[r] = S_y
+                    self.rho.w[r] = S_w
+            return
+        r = self.rho.rows(srcs, dsts)
+        ok = w >= self.rho.w[r]  # ignore out-of-order older messages
+        if not ok.any():
+            return
+        rr = r[ok]
+        S_y = buf[rows[ok]]
+        S_w = w[ok]
+        d_ok = dsts[ok]
+        np.add.at(self.y, d_ok, S_y - self.rho.y[rr])
+        np.add.at(self.w, d_ok, S_w - self.rho.w[rr])
+        self.rho.y[rr] = S_y
+        self.rho.w[rr] = S_w
+
+    # -- interop with the object world ---------------------------------------
+
+    def materialize_nodes(self) -> list:
+        """Build per-node objects mirroring the SoA state, so diagnostics
+        written against the object engine (`pushsum_mass_audit`, direct
+        `.z_est` reads) keep working after a vectorized run."""
+        sim, n = self.sim, self.n
+        nodes: list[AsyncDDANode | PushSumDDANode] = []
+        for i in range(n):
+            if self.algorithm == "pushsum":
+                node = PushSumDDANode(i, self.x[i], sim.grad_fn, sim.a_fn,
+                                      sim.schedule, sim.projection,
+                                      w_floor=self.w_floor)
+                node.y = self.y[i].copy()
+                node.w = float(self.w[i])
+                for dst in np.nonzero(self.sigma.eid[i] >= 0)[0]:
+                    r = self.sigma.eid[i, dst]
+                    node.sigma_y[int(dst)] = self.sigma.y[r].copy()
+                    node.sigma_w[int(dst)] = float(self.sigma.w[r])
+                for src in np.nonzero(self.rho.eid[:, i] >= 0)[0]:
+                    r = self.rho.eid[src, i]
+                    node.rho_y[int(src)] = self.rho.y[r].copy()
+                    node.rho_w[int(src)] = float(self.rho.w[r])
+            else:
+                node = AsyncDDANode(i, self.x[i], sim.grad_fn, sim.a_fn,
+                                    sim.schedule, sim.projection)
+                node.z = self.z[i].copy()
+                for src in np.nonzero(self.stamp[i] > 0)[0]:
+                    r = self.val.eid[i, src]
+                    node.inbox[int(src)] = (int(self.stamp[i, src]),
+                                            self.val.y[r].copy())
+            node.x = self.x[i].copy()
+            node.xhat = self.xhat[i].copy()
+            node.t = int(self.t[i])
+            node.next_comm = int(self.next_comm[i])
+            node.comm_iters = int(self.comm_iters[i])
+            nodes.append(node)
+        return nodes

@@ -23,6 +23,13 @@ jax closures via the simulator's `grad_fn`):
 Iteration bookkeeping matches core.dda exactly (1-indexed iterations,
 z <- mix(z) + g, x = -a(t) z, running xhat average), so traces are
 comparable with `DDASimulator` runs step-for-step.
+
+These classes are the OBJECT-engine representation (netsim.engine
+ObjectEngine drives them one event at a time) and the interop surface of
+the vectorized engine: after a vectorized run, `NetSimulator.nodes`
+materializes equivalent instances from the struct-of-arrays state, so
+diagnostics written against per-node objects (`pushsum_mass_audit`, direct
+`.z_est` reads) work over either backend.
 """
 
 from __future__ import annotations

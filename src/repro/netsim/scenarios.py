@@ -16,6 +16,11 @@ Presets:
   * time_varying_expander  -- the expander is rewired every `rewire_every`
                               time units (PAPERS.md: Yarmoshik-Klimenko
                               time-varying-network regime).
+  * adversarial            -- everything at once: packet loss on every link,
+                              `n_slow` stragglers, and periodic rewiring.
+                              The worst cluster the model can express; used
+                              as the engine-equivalence stress scenario
+                              (tests/test_netsim_engine.py).
 """
 
 from __future__ import annotations
@@ -32,6 +37,7 @@ __all__ = [
     "straggler",
     "lossy",
     "time_varying_expander",
+    "adversarial",
 ]
 
 DEFAULT_MESSAGE_BYTES = 800.0  # a 100-double dual vector
@@ -103,6 +109,30 @@ def lossy(n: int, r: float, loss: float = 0.2, k: int = 4, seed: int = 0,
         link=_link_for_r(r, message_bytes, jitter=jitter, loss=loss),
         node_specs=tuple(NodeSpec() for _ in range(n)),
         message_bytes=message_bytes)
+
+
+def adversarial(n: int, r: float, loss: float = 0.2,
+                slow_factor: float = 4.0, n_slow: int = 1,
+                rewire_every: float | None = None,
+                k: int = 4, length: int = 4, seed: int = 0,
+                message_bytes: float = DEFAULT_MESSAGE_BYTES) -> Scenario:
+    """Loss + stragglers + (optionally) a time-varying topology, together."""
+    if not 0 <= n_slow <= n:
+        raise ValueError(f"n_slow must be in [0, {n}]")
+    specs = tuple(NodeSpec.slowed(slow_factor) if i < n_slow else NodeSpec()
+                  for i in range(n))
+    topology: CommGraph | GraphSequence
+    if rewire_every is not None:
+        topology = expander_sequence(n, k=k, length=length, seed=seed)
+    else:
+        topology = _graph(n, k, seed)
+    return Scenario(
+        name=f"adversarial_l{loss:g}_s{slow_factor:g}x{n_slow}",
+        topology=topology,
+        link=_link_for_r(r, message_bytes, loss=loss),
+        node_specs=specs,
+        message_bytes=message_bytes,
+        rewire_every=rewire_every)
 
 
 def time_varying_expander(n: int, r: float, rewire_every: float,

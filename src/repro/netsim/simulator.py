@@ -15,6 +15,14 @@ on its cluster (r = t_msg / t_full_grad), and `predict()` feeds that
 empirical r back into `core.tradeoff.h_opt` / `n_opt_complete` /
 `time_to_accuracy` for closed-loop prediction-vs-observation checks
 (benchmarks/fig_async.py).
+
+Two engines drive the event loop (netsim.engine): the per-node `"object"`
+reference and the struct-of-arrays `"vectorized"` fast path, selected by the
+`engine` constructor argument. `"auto"` (the default) picks the vectorized
+engine -- every scenario the presets can express is compatible with it, and
+it is bit-identical to the object engine on seeded runs (the equivalence is
+regression-tested, see tests/test_netsim_engine.py) while being orders of
+magnitude faster at large n (benchmarks/bench_netsim.py).
 """
 
 from __future__ import annotations
@@ -26,13 +34,16 @@ from typing import Callable
 import numpy as np
 
 from repro.core import tradeoff as _tradeoff
-from repro.core.dda import SimTrace, trace_time_to_reach
+from repro.core.dda import SimTrace, stepsize_sqrt, trace_time_to_reach
 from repro.core.schedules import CommSchedule, EveryIteration
-from repro.netsim.events import EventQueue
+from repro.netsim.engine import ObjectEngine, VectorizedEngine, _EvalBatch, \
+    _GradBatch
 from repro.netsim.node import AsyncDDANode, GradFn, PushSumDDANode
 from repro.netsim.scenarios import Scenario
 
 __all__ = ["NetSimulator", "RMeasurement"]
+
+_ENGINES = ("object", "vectorized", "auto")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,13 +68,22 @@ class NetSimulator:
         0-indexed iteration counter, matching DDASimulator's subgrad_fn
         convention. May close over jitted jax functions; must return
         something `np.asarray` accepts.
-      eval_fn: x -> scalar F(x) on the full objective.
-      a_fn: stepsize a(t); default a(t) = 1/sqrt(t).
+      eval_fn: x -> scalar F(x) on the full objective. If it also accepts a
+        stacked (n, d) batch and returns one scalar per node, trace
+        evaluation happens in a single call (probed, verified bitwise).
+      a_fn: stepsize a(t); default `core.dda.stepsize_sqrt(1.0)`, the same
+        closure the dense simulator defaults to.
       schedule: communication schedule shared by all nodes (local iteration
         counts -- nodes drift apart in wall-clock, not in schedule logic).
       algorithm: "dda" (stale gossip) or "pushsum" (drop-robust ratio
         consensus; required for convergence under heavy loss or directed
         links).
+      engine: "object" (per-node reference), "vectorized" (struct-of-arrays
+        fast path), or "auto" (vectorized; bit-identical on seeded runs).
+      batch_grad_fn: optional batched gradient `(idx, x_stack, t_array) ->
+        (b, d)`; e.g. `engine.jax_batch_grad(grad_fn)` for a jitted
+        `jax.vmap` path. When absent, `grad_fn` itself is probed with a
+        stacked batch and used batched only if bitwise-equal to the loop.
     """
 
     def __init__(self, scenario: Scenario, grad_fn: GradFn,
@@ -73,21 +93,31 @@ class NetSimulator:
                  projection: Callable[[np.ndarray], np.ndarray] | None = None,
                  algorithm: str = "dda", seed: int = 0,
                  pushsum_y0: np.ndarray | None = None,
-                 pushsum_w_floor: float = 0.5):
+                 pushsum_w_floor: float = 0.5,
+                 engine: str = "auto",
+                 batch_grad_fn: Callable | None = None):
         if algorithm not in ("dda", "pushsum"):
             raise ValueError(f"unknown algorithm {algorithm!r}")
+        if engine not in _ENGINES:
+            raise ValueError(f"unknown engine {engine!r} (one of {_ENGINES})")
         self.scenario = scenario
         self.grad_fn = grad_fn
         self.eval_fn = eval_fn
-        self.a_fn = a_fn or (lambda t: 1.0 / math.sqrt(max(t, 1.0)))
+        self.a_fn = a_fn or stepsize_sqrt(1.0)
         self.schedule = schedule or EveryIteration()
         self.projection = projection
         self.algorithm = algorithm
         self.seed = seed
         self.pushsum_y0 = pushsum_y0
         self.pushsum_w_floor = pushsum_w_floor
+        self.engine = engine
         self.net = scenario.build_network()
-        self.nodes: list[AsyncDDANode | PushSumDDANode] = []
+        self._engine_inst: ObjectEngine | VectorizedEngine | None = None
+        self._nodes_cache: list[AsyncDDANode | PushSumDDANode] | None = []
+        # batch-capability probes persist across runs (the probe verdict is a
+        # property of grad_fn/eval_fn, not of one run)
+        self._grad_batch = _GradBatch(grad_fn, batch_grad_fn)
+        self._eval_batch = _EvalBatch(eval_fn)
         # observability: the "profiler trace" measure_r_empirical reads
         self.msg_flights: list[float] = []
         self.compute_times: list[float] = []
@@ -97,29 +127,13 @@ class NetSimulator:
 
     # -- lifecycle ----------------------------------------------------------
 
-    def _make_nodes(self, x0_stack: np.ndarray) -> None:
-        n = self.net.n
-        self.nodes = []
-        for i in range(n):
-            if self.algorithm == "pushsum":
-                y0 = None if self.pushsum_y0 is None else self.pushsum_y0[i]
-                node = PushSumDDANode(i, x0_stack[i], self.grad_fn, self.a_fn,
-                                      self.schedule, self.projection, y0=y0,
-                                      w_floor=self.pushsum_w_floor)
-            else:
-                node = AsyncDDANode(i, x0_stack[i], self.grad_fn, self.a_fn,
-                                    self.schedule, self.projection)
-            self.nodes.append(node)
-
-    def _step_busy(self, i: int) -> float:
-        """Wall-clock the node is occupied by its NEXT iteration: local
-        gradient plus (on communication iterations) serializing k messages
-        out the NIC -- eq. (9)'s 1/n + k*r, per node, per link model."""
-        node = self.nodes[i]
-        busy = self.net.local_step_time(i)
-        if node.is_comm_next():
-            busy += self.net.send_busy_time(i)
-        return busy
+    def _resolve_engine(self) -> ObjectEngine | VectorizedEngine:
+        if self.engine == "object":
+            return ObjectEngine(self)
+        # "vectorized" and "auto": every scenario the presets express is
+        # vectorizable (jitter and per-edge link overrides fall back to
+        # exact per-message sampling inside the engine)
+        return VectorizedEngine(self)
 
     # -- main loop ----------------------------------------------------------
 
@@ -131,74 +145,28 @@ class NetSimulator:
         n = self.net.n
         if x0_stack.shape[0] != n:
             raise ValueError(f"x0 must be stacked ({n}, ...)")
-        self._make_nodes(x0_stack)
-        rng = np.random.default_rng(self.seed)
-        q = EventQueue()
-        trace = SimTrace([], [], [], [], [])
-
-        for i in range(n):
-            q.schedule(self._step_busy(i), "step", node=i)
-        if self.scenario.rewire_every is not None:
-            q.schedule(self.scenario.rewire_every, "rewire")
-
-        total_steps = 0
-        next_eval = eval_every * n
-        active = n
-
-        while not q.empty():
-            ev = q.pop()
-            if ev.time > time_limit:
-                break
-            if ev.kind == "step":
-                i = ev.data["node"]
-                node = self.nodes[i]
-                self.compute_times.append(self.net.local_step_time(i))
-                msgs = node.finish_step(self.net)
-                for dst, payload in msgs:
-                    self.sent += 1
-                    flight = self.net.sample_flight(i, dst, rng)
-                    if flight is None:
-                        self.drops += 1
-                        continue
-                    self.msg_flights.append(flight)
-                    # serialization already stalled the sender (step busy);
-                    # only propagation + jitter remains in the air
-                    extra = max(flight - self.net.serialize_time(i, dst), 0.0)
-                    q.schedule_in(extra, "msg", src=i, dst=dst,
-                                  payload=payload)
-                total_steps += 1
-                if node.t < T:
-                    q.schedule_in(self._step_busy(i), "step", node=i)
-                else:
-                    active -= 1
-                if total_steps >= next_eval:
-                    self._record(trace, q.now, total_steps)
-                    next_eval += eval_every * n
-            elif ev.kind == "msg":
-                self.nodes[ev.data["dst"]].receive(ev.data["src"],
-                                                   ev.data["payload"])
-            elif ev.kind == "rewire":
-                self.net.rewire()
-                self.rewires += 1
-                if active > 0:
-                    q.schedule_in(self.scenario.rewire_every, "rewire")
-
-        if not trace.iters or trace.iters[-1] * n < total_steps:
-            self._record(trace, q.now, total_steps)
+        eng = self._resolve_engine()
+        self._engine_inst = eng
+        trace = eng.run(x0_stack, T, eval_every, time_limit)
+        # mirror the engine's observability into the accumulating lists the
+        # public API (and measure_r_empirical) reads
+        self.msg_flights.extend(eng.msg_flights)
+        self.compute_times.extend(eng.compute_times)
+        self.drops += eng.drops
+        self.sent += eng.sent
+        self.rewires += eng.rewires
+        self._nodes_cache = None  # re-materialize lazily from the new state
         return trace
 
-    def _record(self, trace: SimTrace, now: float, total_steps: int) -> None:
-        n = self.net.n
-        xhat = np.stack([nd.xhat for nd in self.nodes])
-        z = np.stack([nd.z_est for nd in self.nodes])
-        zbar = z.mean(axis=0, keepdims=True)
-        diff = (z - zbar).reshape(n, -1)
-        trace.iters.append(total_steps // n)
-        trace.sim_time.append(float(now))
-        trace.fvals.append(float(np.mean([self.eval_fn(x) for x in xhat])))
-        trace.fvals_consensus.append(float(self.eval_fn(xhat.mean(axis=0))))
-        trace.comms.append(int(sum(nd.comm_iters for nd in self.nodes) // n))
-        trace.disagreement.append(float(np.linalg.norm(diff, axis=-1).max()))
+    @property
+    def nodes(self) -> list[AsyncDDANode | PushSumDDANode]:
+        """Per-node views of the final state. For the object engine these
+        ARE the simulation's nodes; the vectorized engine materializes
+        equivalent objects from its struct-of-arrays state on first access
+        (so a 1000-node run that never inspects them pays nothing)."""
+        if self._nodes_cache is None:
+            self._nodes_cache = self._engine_inst.materialize_nodes()
+        return self._nodes_cache
 
     # -- closed-loop measurement --------------------------------------------
 

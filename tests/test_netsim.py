@@ -18,19 +18,9 @@ N, D, R = 8, 5, 0.01
 
 
 def _quadratic_problem(seed=0):
-    """f_i(x) = ||x - c_i||^2: consensus-essential, closed-form optimum.
-    The common +3 offset keeps ||mean(c)|| large so the x0=0 optimality gap
-    dominates the irreducible spread term mean ||c_i - cbar||^2."""
-    rng = np.random.default_rng(seed)
-    centers = rng.normal(size=(N, D)) * 2.0 + 3.0
-
-    def grad_fn(i, x, t):
-        return 2.0 * (x - centers[i])
-
-    def eval_fn(x):
-        return float(np.mean(np.sum((x[None] - centers) ** 2, axis=1)))
-
-    return centers, grad_fn, eval_fn
+    """The canonical netsim quadratic (see repro.netsim.problems)."""
+    from repro.netsim import quadratic_consensus
+    return quadratic_consensus(N, D, seed)
 
 
 def _run(scenario, T=300, seed=0, eval_every=5, **kw):

@@ -1,0 +1,275 @@
+"""Vectorized netsim fast path: engine equivalence (bit-identical traces on
+seeded scenarios), calendar-queue vs heap event ordering, batch-capability
+probes, and the 1024-node wall-clock smoke."""
+
+import math
+import time
+
+import numpy as np
+import pytest
+
+from _hyp import HAVE_HYPOTHESIS, given, settings, st
+from repro.core.schedules import (EveryIteration, IncreasinglySparse,
+                                  Periodic)
+from repro.netsim import (EventQueue, NetSimulator, adversarial, homogeneous,
+                          lossy, pushsum_mass_audit, quadratic_consensus as
+                          _problem)
+
+TRACE_FIELDS = ("iters", "sim_time", "fvals", "fvals_consensus", "comms",
+                "disagreement")
+
+
+def _run_engines(scenario, algorithm, n, d, T=200, seed=5, eval_every=3,
+                 **kw):
+    _, grad_fn, eval_fn = _problem(n, d)
+    out = {}
+    for engine in ("object", "vectorized"):
+        sim = NetSimulator(scenario, grad_fn, eval_fn, algorithm=algorithm,
+                           seed=seed, engine=engine, **kw)
+        trace = sim.run(np.zeros((n, d)), T=T, eval_every=eval_every)
+        out[engine] = (sim, trace)
+    return out
+
+
+def _assert_traces_identical(a, b):
+    for field in TRACE_FIELDS:
+        assert getattr(a, field) == getattr(b, field), field
+
+
+# -- engine equivalence ------------------------------------------------------
+
+
+@pytest.mark.parametrize("algorithm", ["dda", "pushsum"])
+def test_adversarial_scenario_bit_identical(algorithm):
+    """Seeded lossy + straggler + rewire scenario: both engines must produce
+    BIT-IDENTICAL SimTrace and measure_r_empirical -- identical RNG
+    consumption, float op order, and event interleaving, not just
+    statistically matching output."""
+    n, d = 12, 5
+    sc = adversarial(n, 0.01, loss=0.25, slow_factor=3.0, n_slow=2,
+                     rewire_every=0.7, seed=0)
+    runs = _run_engines(sc, algorithm, n, d)
+    (sim_o, tr_o), (sim_v, tr_v) = runs["object"], runs["vectorized"]
+    _assert_traces_identical(tr_o, tr_v)
+    assert sim_o.measure_r_empirical() == sim_v.measure_r_empirical()
+    assert (sim_o.drops, sim_o.sent, sim_o.rewires) == \
+        (sim_v.drops, sim_v.sent, sim_v.rewires)
+
+
+@pytest.mark.parametrize("schedule", [Periodic(h=3), IncreasinglySparse(p=0.3)])
+def test_sparse_schedules_bit_identical(schedule):
+    """Jitter (per-message RNG fallback) + non-trivial schedules stay
+    bit-identical across engines."""
+    n, d = 8, 4
+    sc = lossy(n, 0.02, loss=0.15, jitter=0.05, seed=2)
+    runs = _run_engines(sc, "dda", n, d, T=150, seed=9, eval_every=4,
+                        schedule=schedule)
+    _assert_traces_identical(runs["object"][1], runs["vectorized"][1])
+
+
+def test_vectorized_pushsum_mass_audit_via_materialized_nodes():
+    """The vectorized engine's materialized node views satisfy the same
+    conservation invariant as real object-engine nodes."""
+    n, d = 8, 5
+    rng = np.random.default_rng(3)
+    y0 = rng.normal(size=(n, d))
+    _, _, eval_fn = _problem(n, d)
+    sim = NetSimulator(lossy(n, 0.01, loss=0.4, seed=1),
+                       lambda i, x, t: np.zeros(d), eval_fn,
+                       algorithm="pushsum", pushsum_y0=y0, seed=2,
+                       pushsum_w_floor=1e-12, engine="vectorized")
+    sim.run(np.zeros((n, d)), T=150, eval_every=50)
+    assert sim.drops > 0
+    y_total, w_total = pushsum_mass_audit(sim.nodes)
+    np.testing.assert_allclose(y_total, y0.sum(axis=0), atol=1e-9)
+    assert w_total == pytest.approx(n, abs=1e-9)
+
+
+def test_engine_arg_validation():
+    n, d = 4, 3
+    _, grad_fn, eval_fn = _problem(n, d)
+    with pytest.raises(ValueError):
+        NetSimulator(homogeneous(n, 0.01, k=2), grad_fn, eval_fn,
+                     engine="gpu")
+
+
+# -- batch-capability probes -------------------------------------------------
+
+
+def test_eval_probe_rejects_silently_broadcasting_eval_fn():
+    """The classic trap: a per-point eval_fn that does NOT crash on a
+    stacked batch but silently returns a wrong scalar. The probe must
+    reject it (bitwise verification against the loop) and keep the
+    per-node path, so both engines still agree."""
+    n, d = 8, 5
+    sc = homogeneous(n, 0.01, k=4, seed=0)
+    runs = _run_engines(sc, "dda", n, d, T=80)
+    _assert_traces_identical(runs["object"][1], runs["vectorized"][1])
+    assert runs["vectorized"][0]._eval_batch.mode == "loop"
+
+
+def test_batchable_eval_and_grad_probe_engage_and_match_loop():
+    n, d = 8, 5
+    _, grad_fn, eval_fn = _problem(n, d, batchable=True)
+    traces = {}
+    for engine in ("object", "vectorized"):
+        sim = NetSimulator(homogeneous(n, 0.01, k=4, seed=0), grad_fn,
+                           eval_fn, seed=5, engine=engine)
+        traces[engine] = sim.run(np.zeros((n, d)), T=120, eval_every=4)
+        assert sim._eval_batch.mode == "batch"
+    # grad probe only runs on the vectorized path
+    assert sim._grad_batch.mode == "batch"
+    _assert_traces_identical(traces["object"], traces["vectorized"])
+
+
+def test_grad_probe_defers_on_size_one_batches():
+    """A scalar-style grad_fn (`if t > 0` is valid on a 1-element array but
+    ambiguous on larger ones) must NOT get locked into batch mode by a
+    size-1 probe batch. One fast node makes the first due batch a
+    singleton; the probe must defer until a >= 2 batch, then reject."""
+    import dataclasses
+
+    from repro.netsim import NodeSpec
+
+    n, d = 8, 5
+    centers, _, eval_fn = _problem(n, d)
+
+    def scalar_grad(i, x, t):
+        if t > 0:  # ValueError on a multi-element t array
+            return 2.0 * (x - centers[i])
+        return np.zeros_like(x)
+
+    base = homogeneous(n, 0.01, k=4, seed=0)
+    specs = (NodeSpec(compute_scale=0.5),) + base.node_specs[1:]
+    sc = dataclasses.replace(base, node_specs=specs)
+    traces = {}
+    for engine in ("object", "vectorized"):
+        sim = NetSimulator(sc, scalar_grad, eval_fn, seed=5, engine=engine)
+        traces[engine] = sim.run(np.zeros((n, d)), T=60, eval_every=5)
+    assert sim._grad_batch.mode == "loop"
+    _assert_traces_identical(traces["object"], traces["vectorized"])
+
+
+def test_next_comm_step_batch_matches_scalar():
+    ts = np.arange(0, 60, dtype=np.int64)
+    for sched in [EveryIteration(), Periodic(h=1), Periodic(h=4),
+                  IncreasinglySparse(p=0.3)]:
+        batch = sched.next_comm_step_batch(ts)
+        scalar = [sched.next_comm_step(int(t)) for t in ts]
+        assert batch.tolist() == scalar
+
+
+# -- 1024-node smoke ---------------------------------------------------------
+
+
+def test_vectorized_1024_nodes_under_budget():
+    """A 1024-node, d=32 vectorized run must finish well under a CI-safe
+    wall-clock budget (the object engine takes ~2s for the same cell; the
+    budget would catch a regression to per-node dispatch)."""
+    n, d, T = 1024, 32, 15
+    _, grad_fn, eval_fn = _problem(n, d, batchable=True)
+    sim = NetSimulator(homogeneous(n, 0.01, k=4, seed=0), grad_fn, eval_fn,
+                       seed=0, engine="vectorized")
+    t0 = time.perf_counter()
+    trace = sim.run(np.zeros((n, d)), T=T, eval_every=5)
+    wall = time.perf_counter() - t0
+    assert wall < 10.0
+    assert trace.iters[-1] == T
+    assert trace.fvals[-1] < trace.fvals[0]
+    assert np.isfinite(trace.fvals).all()
+    m = sim.measure_r_empirical()
+    assert m.r == pytest.approx(0.01, rel=1e-6)
+
+
+# -- event queue backends ----------------------------------------------------
+
+
+def _drain_both(schedule_ops):
+    """Apply the same schedule/pop script to both backends; the popped
+    (time, seq, kind) sequences must be identical."""
+    out = {}
+    for backend in ("heap", "calendar"):
+        q = EventQueue(backend=backend)
+        popped = []
+        for op in schedule_ops:
+            if op[0] == "push":
+                q.schedule(max(op[1], q.now), str(op[2]))
+            else:
+                if not q.empty():
+                    ev = q.pop()
+                    popped.append((ev.time, ev.seq, ev.kind))
+        while not q.empty():
+            ev = q.pop()
+            popped.append((ev.time, ev.seq, ev.kind))
+        out[backend] = popped
+    assert out["heap"] == out["calendar"]
+    return out["heap"]
+
+
+def test_calendar_queue_matches_heap_seeded():
+    """Non-hypothesis version (runs even without the optional extra):
+    random interleaved push/pop scripts with heavy timestamp ties."""
+    rng = np.random.default_rng(0)
+    for trial in range(20):
+        ops = []
+        # coarse time grid => many exact ties, like the homogeneous netsim
+        for _ in range(rng.integers(5, 120)):
+            if rng.random() < 0.3:
+                ops.append(("pop",))
+            else:
+                t = float(rng.integers(0, 12)) * 0.25
+                ops.append(("push", t, f"k{rng.integers(0, 3)}"))
+        popped = _drain_both(ops)
+        times = [p[0] for p in popped]
+        assert times == sorted(times)
+
+
+def test_calendar_queue_resize_and_sparse_fastforward():
+    """Growth across resize thresholds and popping across large empty
+    stretches of the calendar (year-rotation fast-forward)."""
+    q = EventQueue(backend="calendar")
+    times = [float(i) * 997.0 for i in range(200)]  # sparse, forces jumps
+    for t in reversed(times):
+        q.schedule(t, "a")
+    assert len(q) == 200
+    popped = [q.pop().time for _ in range(200)]
+    assert popped == sorted(times)
+    assert q.empty()
+
+
+def test_calendar_queue_past_scheduling_raises():
+    q = EventQueue(backend="calendar")
+    q.schedule(5.0, "a")
+    assert q.pop().time == 5.0
+    with pytest.raises(ValueError):
+        q.schedule(1.0, "too-late")
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(
+    st.one_of(
+        st.tuples(st.just("push"),
+                  st.floats(min_value=0.0, max_value=50.0,
+                            allow_nan=False, allow_infinity=False),
+                  st.integers(min_value=0, max_value=4)),
+        st.tuples(st.just("pop")),
+    ),
+    max_size=200))
+def test_calendar_queue_property_total_order(ops):
+    """Property: for ANY interleaved schedule/pop script (including exact
+    duplicate timestamps), the calendar backend pops the exact same
+    (time, seq) total order as the heap backend."""
+    popped = _drain_both(ops)
+    assert popped == sorted(popped)
+
+
+if HAVE_HYPOTHESIS:
+    # quantized-time variant: maximizes same-bucket collisions
+    @settings(max_examples=100, deadline=None)
+    @given(st.lists(st.one_of(
+        st.tuples(st.just("push"),
+                  st.sampled_from([0.0, 0.5, 1.0, 1.5, 2.0, 64.0, 1e4]),
+                  st.just("k")),
+        st.tuples(st.just("pop"))), max_size=120))
+    def test_calendar_queue_property_tie_storm(ops):
+        _drain_both(ops)
