@@ -1,0 +1,233 @@
+"""The closed loop: measure (RTracker) -> predict (h_opt, lambda2) -> act
+(AdaptiveSchedule splice), plus straggler-aware mixing-weight refresh.
+
+`AdaptiveController` is the object a `NetSimulator(controller=...)` run
+threads through both execution engines. The engines call four hooks --
+`on_steps`, `on_messages`, `on_rewire`, `maybe_retune` -- and otherwise run
+their normal event loops; with no controller attached not a single extra
+branch executes on the hot path, which is what keeps the controller-off
+bit-identity guarantee intact (benchmarks/fig_adaptive.py --smoke gates it).
+
+`StragglerReweighter` keeps the controller's spectral input honest: the
+static lambda2 of the configured graph assumes every neighbor's message
+lands every round, but observed per-node step-time quantiles say otherwise
+on a straggler-ridden cluster. It folds on-time arrival probabilities into
+P exactly as `runtime.fault_tolerance.arrival_reweighted_matrix` (the
+expected `degraded_matrix` over Bernoulli arrivals), re-validates double
+stochasticity via `sinkhorn_project` (which raises rather than return a
+near-miss), and hands back `lambda2_fast` of the rebalanced matrix -- the
+effective mixing rate h_opt should be solved against.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from repro.adaptive.rtracker import RTracker
+from repro.adaptive.schedule import AdaptiveSchedule
+from repro.core.graphs import CommGraph
+from repro.core.tradeoff import lambda2_fast
+from repro.runtime.fault_tolerance import (arrival_reweighted_matrix,
+                                           sinkhorn_project)
+
+__all__ = ["AdaptiveController", "StragglerReweighter"]
+
+
+class StragglerReweighter:
+    """Fold observed per-node step-time quantiles into the mixing matrix.
+
+    Args:
+      deadline_factor: a message is modeled on-time when its sender's step
+        time is within `deadline_factor` times the cluster median (the
+        `fault_tolerance.StragglerModel.deadline` convention).
+      floor: lower clamp on arrival probability, keeping the reweighted
+        matrix irreducible even for an extreme straggler.
+    """
+
+    def __init__(self, graph: CommGraph, deadline_factor: float = 2.0,
+                 floor: float = 0.05, cache_rtol: float = 1e-3):
+        if deadline_factor <= 0.0:
+            raise ValueError("deadline_factor must be positive")
+        if not 0.0 < floor <= 1.0:
+            raise ValueError("floor must be in (0, 1]")
+        self.deadline_factor = deadline_factor
+        self.floor = floor
+        # skip the (Sinkhorn + eigendecomposition) refresh when the step
+        # means moved less than this relative amount since the last update
+        # -- EW means go stationary once the cluster's speeds are learned,
+        # and a sub-0.1% shift cannot move lambda2 meaningfully. 0 disables.
+        self.cache_rtol = cache_rtol
+        self.set_graph(graph)
+        self.last_P: np.ndarray | None = None
+        self.last_lam2: float | None = None
+        self.last_arrive_prob: np.ndarray | None = None
+
+    def set_graph(self, graph: CommGraph) -> None:
+        self.graph = graph
+        self._P0 = graph.mixing_matrix()
+        self._cached_q: np.ndarray | None = None  # topology changed
+
+    def update(self, step_means: np.ndarray) -> tuple[np.ndarray, float]:
+        """(effective P, its lambda2) from per-node EW step-time means.
+
+        Nodes not yet observed (NaN) count as median-speed. The arrival
+        model: node j's message lands on time with probability
+        min(1, deadline / step_time_j), deadline = factor * median -- a 4x
+        straggler under factor 2 is heard half the time.
+        """
+        q = np.asarray(step_means, dtype=np.float64)
+        if q.shape != (self._P0.shape[0],):
+            raise ValueError(
+                f"need one step-time mean per node ({self._P0.shape[0]}), "
+                f"got shape {q.shape}")
+        if (self._cached_q is not None
+                and np.allclose(q, self._cached_q, rtol=self.cache_rtol,
+                                atol=0.0, equal_nan=True)):
+            return self.last_P, self.last_lam2
+        self._cached_q = q.copy()
+        med = float(np.nanmedian(q))
+        if math.isnan(med) or med <= 0.0:
+            lam2 = lambda2_fast(self._P0)
+            self.last_P, self.last_lam2 = self._P0, lam2
+            self.last_arrive_prob = np.ones(len(q))
+            return self._P0, lam2
+        deadline = self.deadline_factor * med
+        with np.errstate(invalid="ignore", divide="ignore"):
+            a = deadline / q
+        a = np.clip(np.where(np.isnan(a), 1.0, a), self.floor, 1.0)
+        P_eff = sinkhorn_project(arrival_reweighted_matrix(self._P0, a))
+        lam2 = lambda2_fast(P_eff)
+        self.last_P, self.last_lam2, self.last_arrive_prob = P_eff, lam2, a
+        return P_eff, lam2
+
+
+class AdaptiveController:
+    """Online h controller for netsim runs.
+
+    Args:
+      schedule: the AdaptiveSchedule the run shares (also pass it -- or let
+        NetSimulator pick it up -- as the run's schedule).
+      update_every: sim-time between retunes (event-clock units; eq. (9)
+        normalization, so 1.0 = one full-data gradient on the reference
+        node).
+      halflife: RTracker EW window, in observations.
+      r0: prior for r before the first messages land (None = wait).
+      reweight: refresh lambda2 via StragglerReweighter each retune; when
+        False the configured graph's static lambda2 is used.
+      warmup_messages / warmup_steps: minimum observations before the first
+        retune -- an h spliced off two noisy flights would thrash.
+    """
+
+    def __init__(self, schedule: AdaptiveSchedule | None = None,
+                 update_every: float = 0.5, halflife: float = 64.0,
+                 r0: float | None = None, reweight: bool = True,
+                 warmup_messages: int = 8, warmup_steps: int = 8):
+        self.schedule = schedule if schedule is not None else AdaptiveSchedule()
+        if not isinstance(self.schedule, AdaptiveSchedule):
+            raise TypeError("AdaptiveController needs an AdaptiveSchedule")
+        if update_every <= 0.0:
+            raise ValueError("update_every must be positive")
+        self.update_every = update_every
+        self.halflife = halflife
+        self.r0 = r0
+        self.reweight = reweight
+        self.warmup_messages = warmup_messages
+        self.warmup_steps = warmup_steps
+        self.tracker: RTracker | None = None
+        self.reweighter: StragglerReweighter | None = None
+        # single-slot (graph, lam2) cache: only the CURRENT graph can hit,
+        # and holding the object rules out a recycled-id stale hit
+        self._lam2_cache: tuple[CommGraph, float] | None = None
+        self._next_update = update_every
+        self._n = 0
+        self._k = 0
+
+    # -- engine-facing hooks -------------------------------------------------
+
+    def bind(self, net) -> None:
+        """Attach to a Network at run start (re-binding resets the window
+        AND the schedule's splice history: a new run is a new cluster and a
+        new iteration timeline as far as the controller is concerned)."""
+        self._n = net.n
+        self._k = net.graph.degree
+        self.tracker = RTracker(net.n, halflife=self.halflife, r0=self.r0)
+        self.reweighter = (StragglerReweighter(net.graph)
+                           if self.reweight else None)
+        self._lam2_cache = None
+        self._graph = net.graph
+        self._next_update = self.update_every
+        self.schedule.reset()
+
+    def on_steps(self, nodes: np.ndarray, durations: np.ndarray) -> None:
+        self.tracker.observe_steps(nodes, durations)
+
+    def on_messages(self, flights: np.ndarray) -> None:
+        self.tracker.observe_messages(flights)
+
+    def on_rewire(self, graph: CommGraph) -> None:
+        self._graph = graph
+        self._k = graph.degree
+        if self.reweighter is not None:
+            self.reweighter.set_graph(graph)
+
+    def retune_due(self, now: float) -> bool:
+        """Cheap cadence test so engines only compute the (O(n)) iteration
+        frontier when a retune will actually be attempted."""
+        return now >= self._next_update
+
+    def maybe_retune(self, now: float, frontier: int) -> int | None:
+        """Run the predict->act half if the cadence is due.
+
+        `frontier` is the max in-flight iteration across STILL-ACTIVE
+        nodes. That is exactly the bound correctness needs: no splice ever
+        rewrites an iteration an active node has executed or in flight, so
+        cached next-comm answers and already-charged busy times stay valid
+        (engines refresh the rest). It is deliberately NOT the global max:
+        a finished node that ran ahead no longer constrains the future,
+        and using its T would freeze the controller for the stragglers'
+        entire remaining run. The flip side, accepted and documented: once
+        iteration ranges diverge (a fast node finished under the old
+        pattern), a later splice inside that range makes the schedule
+        forward-looking for the nodes still running -- the finished node's
+        actual communication history lives in its own `comm_iters`/trace
+        counters, not in post-hoc `schedule.H` queries. If the frontier
+        sits at or behind the latest splice point, the retune is skipped
+        (re-splicing there would also disturb the pattern ACTIVE nodes are
+        mid-way through) and resumes once the frontier catches up.
+
+        Returns the splice point when the emitted pattern changed (the
+        engine must then refresh cached next-comm answers beyond it), else
+        None.
+        """
+        if now < self._next_update:
+            return None
+        # advance the cadence even on a failed warmup: retune_due must go
+        # cheap-and-false again, or the engines would pay their O(n)
+        # frontier scan on EVERY step event for the whole warmup stretch
+        self._next_update = now + self.update_every
+        if not self.tracker.ready(self.warmup_messages, self.warmup_steps):
+            return None
+        r_hat = self.tracker.r_hat
+        if r_hat is None:
+            return None
+        cut = int(frontier)
+        # '<=': a cut EQUAL to the latest splice start would take set_h's
+        # replace-pending branch, which also rewrites (start, inf) -- and a
+        # since-finished node may have executed iterations there
+        if cut <= self.schedule.segments[-1][0]:
+            return None  # see docstring: wait for the frontier to catch up
+        if self.reweighter is not None:
+            _, lam2 = self.reweighter.update(self.tracker.step_means)
+        else:
+            lam2 = self._static_lam2()
+        changed = self.schedule.retune(cut, self._n, self._k, r_hat, lam2)
+        return cut if changed else None
+
+    def _static_lam2(self) -> float:
+        hit = self._lam2_cache
+        if hit is None or hit[0] is not self._graph:
+            hit = (self._graph, self._graph.lambda2())
+            self._lam2_cache = hit
+        return hit[1]

@@ -7,11 +7,13 @@ from repro.core.graphs import (CommGraph, GraphSequence, build_graph,
                                random_regular_expander, ring_graph,
                                spectral_gap, torus_graph)
 from repro.core.schedules import (CommSchedule, EveryIteration,
-                                  IncreasinglySparse, Periodic, c1_constant,
+                                  IncreasinglySparse, Periodic,
+                                  PiecewisePeriodic, c1_constant,
                                   ch_constant, cp_constant, make_schedule,
                                   optimal_stepsize_A)
 from repro.core.tradeoff import (TPU_V5E, HardwareSpec, derive_r_from_roofline,
-                                 h_opt, h_opt_int, iteration_cost, measure_r,
+                                 ew_alpha, ew_update, h_opt, h_opt_int,
+                                 iteration_cost, lambda2_fast, measure_r,
                                  n_opt_complete, predict_speedup,
                                  time_to_accuracy)
 from repro.core.consensus import (disagreement, mix_collective, mix_dense,

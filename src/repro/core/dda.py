@@ -26,6 +26,7 @@ Two execution modes:
 from __future__ import annotations
 
 import dataclasses
+import math
 from functools import partial
 from typing import Any, Callable, NamedTuple
 
@@ -44,6 +45,8 @@ __all__ = [
     "dda_mix_step",
     "DDASimulator",
     "SimTrace",
+    "TRACE_FIELDS",
+    "json_sanitize",
     "stepsize_sqrt",
     "trace_time_to_reach",
 ]
@@ -130,6 +133,29 @@ class SimTrace:
     fvals_consensus: list[float] = dataclasses.field(default_factory=list)
     # F at the consensus average xhat_bar (not what the paper plots, but
     # useful to separate optimization error from network disagreement)
+
+
+#: the canonical field list, derived from the dataclass so engine-equality
+#: assertions and benchmark writers can never drift from SimTrace itself
+TRACE_FIELDS = tuple(f.name for f in dataclasses.fields(SimTrace))
+
+
+def json_sanitize(obj):
+    """Strict-RFC JSON sanitizer for trace/result payloads: np scalars ->
+    Python numbers, inf/nan -> null. A diverged or never-reached-target run
+    is a legal result (tta = inf, blown-up fvals), and the files carrying
+    it -- benchmark --out JSON, the convergence tier's failed-run artifacts
+    -- must stay readable by jq/JSON.parse, which reject Infinity/NaN."""
+    if isinstance(obj, dict):
+        return {k: json_sanitize(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [json_sanitize(v) for v in obj]
+    if isinstance(obj, (float, np.floating)):
+        v = float(obj)
+        return v if math.isfinite(v) else None
+    if isinstance(obj, np.integer):
+        return int(obj)
+    return obj
 
 
 def trace_time_to_reach(trace: SimTrace, eps_value: float,

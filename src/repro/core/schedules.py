@@ -14,6 +14,7 @@ communication).
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import math
 from typing import Iterator
@@ -25,6 +26,7 @@ __all__ = [
     "EveryIteration",
     "Periodic",
     "IncreasinglySparse",
+    "PiecewisePeriodic",
     "make_schedule",
     "c1_constant",
     "ch_constant",
@@ -200,6 +202,158 @@ class IncreasinglySparse(CommSchedule):
 
     def constant(self, L: float, R: float, lam2: float) -> float:
         return cp_constant(L, R, lam2, self.p)
+
+
+class PiecewisePeriodic(CommSchedule):
+    """Periodic schedule whose interval h can be re-spliced forward in time.
+
+    This is the schedule-mutation protocol the closed-loop controller
+    (`repro.adaptive.AdaptiveSchedule`) builds on: the comm pattern is a
+    sequence of segments, each a plain `Periodic`-style pattern
+
+        comm steps of segment j:  t = a_j + m * h_j   (m >= 1, s_j < t <= e_j)
+
+    where `s_j` is the segment's start iteration, `e_j` the next segment's
+    start (inf for the last), and `a_j` the ANCHOR -- the last communication
+    step at or before `s_j` (1 before any communication has happened, so a
+    fresh instance with one segment reproduces `Periodic(h)` exactly,
+    including the t > 1 rule). Anchoring each splice at the previous comm
+    step preserves the "h cheap iterations between communications"
+    semantics across an h change instead of resetting the phase.
+
+    Mutation contract (`set_h`):
+      * append-only in time: `from_t` must be >= the latest segment start;
+        the pattern for iterations <= `from_t` NEVER changes, so answers
+        already handed out for past iterations stay valid.
+      * re-splicing at the same `from_t` replaces the pending segment.
+      * after any sequence of mutations the schedule is still a fixed
+        deterministic sequence: `H(t)` is non-decreasing,
+        `next_comm_step(t) > t`, and the batch query agrees with the
+        scalar path (property-tested in tests/test_adaptive.py).
+
+    All queries are closed-form per segment (no per-iteration scanning):
+    `H` and `next_comm_step` cost O(log #segments) and
+    `next_comm_step_batch` is pure array arithmetic plus at most one
+    segment-advance round per distinct segment touched -- the C_h/C_p
+    bookkeeping stays cheap for the vectorized engine's batch queries.
+    """
+
+    name: str = "piecewise"
+
+    def __init__(self, h: int = 1):
+        if h < 1:
+            raise ValueError("h must be >= 1")
+        self._h0 = int(h)
+        self.reset()
+
+    def reset(self) -> None:
+        """Discard every splice and return to the initial single-segment
+        pattern -- the 'new run, fresh history' hook (a fixed run's past is
+        immutable, but a NEW run starts its own timeline; the controller's
+        bind() calls this)."""
+        # parallel arrays: segment start, interval, anchor, H(start)
+        self._starts = [0]
+        self._hs = [self._h0]
+        self._anchors = [1]
+        self._H0 = [0]
+
+    # -- mutation protocol ---------------------------------------------------
+
+    @property
+    def h_current(self) -> int:
+        """Interval of the latest segment (the one future splices extend)."""
+        return self._hs[-1]
+
+    @property
+    def segments(self) -> list[tuple[int, int]]:
+        """[(start, h), ...] -- the splice history, for diagnostics."""
+        return list(zip(self._starts, self._hs))
+
+    def set_h(self, from_t: int, h: int) -> None:
+        """Splice a new interval: iterations > from_t follow `h`.
+
+        `from_t` must be at or beyond the latest existing splice point
+        (append-only; the past is immutable). Callers that drive live runs
+        pass the node-iteration frontier (max in-flight iteration), so no
+        already-made communication decision is ever rewritten.
+        """
+        from_t, h = int(from_t), int(h)
+        if h < 1:
+            raise ValueError("h must be >= 1")
+        if from_t < self._starts[-1]:
+            raise ValueError(
+                f"splice at {from_t} is before the latest segment start "
+                f"{self._starts[-1]} (mutations are append-only in time)")
+        if from_t == self._starts[-1]:
+            # replace the pending segment (same start => same anchor/H0)
+            self._hs[-1] = h
+            return
+        if h == self._hs[-1]:
+            return  # no-op splice
+        j = len(self._starts) - 1
+        a, hj = self._anchors[j], self._hs[j]
+        anchor = a + hj * ((from_t - a) // hj)  # last comm step <= from_t
+        self._starts.append(from_t)
+        self._hs.append(h)
+        self._anchors.append(anchor)
+        self._H0.append(self.H(from_t))
+
+    # -- queries (closed forms per segment) ----------------------------------
+
+    def _seg(self, t: int) -> int:
+        """Index of the segment containing iteration t (t > start)."""
+        return max(bisect.bisect_left(self._starts, t) - 1, 0)
+
+    def is_comm_step(self, t: int) -> bool:
+        if t <= 1:
+            return False
+        j = self._seg(t)
+        a = self._anchors[j]
+        return t > a and (t - a) % self._hs[j] == 0
+
+    def H(self, t: int) -> int:
+        if t <= 1:
+            return 0
+        j = self._seg(t)
+        s, h, a = self._starts[j], self._hs[j], self._anchors[j]
+        return self._H0[j] + (t - a) // h - max(s - a, 0) // h
+
+    def next_comm_step(self, t: int) -> int:
+        j = self._seg(max(t, 1))
+        while True:
+            s, h, a = self._starts[j], self._hs[j], self._anchors[j]
+            end = (self._starts[j + 1] if j + 1 < len(self._starts)
+                   else None)
+            base = max(t, s)
+            cand = a + h * max((base - a) // h + 1, 1)
+            if end is None or cand <= end:
+                return cand
+            j += 1
+
+    def next_comm_step_batch(self, t: np.ndarray) -> np.ndarray:
+        t = np.asarray(t, dtype=np.int64)
+        starts = np.asarray(self._starts, dtype=np.int64)
+        hs = np.asarray(self._hs, dtype=np.int64)
+        anchors = np.asarray(self._anchors, dtype=np.int64)
+        # segment ends; sentinel keeps every candidate in the last segment
+        ends = np.concatenate([starts[1:], [np.iinfo(np.int64).max]])
+        j = np.maximum(np.searchsorted(starts, np.maximum(t, 1),
+                                       side="left") - 1, 0)
+        last = len(starts) - 1
+        while True:
+            a, h = anchors[j], hs[j]
+            base = np.maximum(t, starts[j])
+            cand = a + h * np.maximum((base - a) // h + 1, 1)
+            over = (cand > ends[j]) & (j < last)
+            if not over.any():
+                return cand
+            j = j + over  # advance the overshooting rows one segment
+
+    def constant(self, L: float, R: float, lam2: float) -> float:
+        """Convergence constant of the CURRENT interval (eq. 18). A spliced
+        run's true constant is segment-dependent; this is the controller's
+        working value for the pattern it is emitting now."""
+        return ch_constant(L, R, lam2, self.h_current)
 
 
 def make_schedule(kind: str, *, h: int = 1, p: float = 0.3) -> CommSchedule:

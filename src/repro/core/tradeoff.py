@@ -23,7 +23,10 @@ from __future__ import annotations
 import dataclasses
 import math
 
+import numpy as np
+
 from repro.core import schedules as _sched
+from repro.core.graphs import lambda2 as _lambda2
 
 __all__ = [
     "HardwareSpec",
@@ -35,6 +38,9 @@ __all__ = [
     "n_opt_complete",
     "h_opt",
     "predict_speedup",
+    "ew_alpha",
+    "ew_update",
+    "lambda2_fast",
 ]
 
 
@@ -139,6 +145,46 @@ def h_opt_int(n: int, k: int, r: float, lam2: float) -> int:
     Matches the paper's Fig. 2 reading of eq. (21): r=0.00089, n=10 complete
     graph gives h_opt < 1 -> 'h_opt = 1' (communicate every iteration)."""
     return max(1, round(h_opt(n, k, r, lam2)))
+
+
+# ---------------------------------------------------------------------------
+# Incremental refresh helpers (closed-loop controllers, repro.adaptive)
+# ---------------------------------------------------------------------------
+
+def ew_alpha(halflife: float) -> float:
+    """Per-observation smoothing factor for an exponentially-weighted mean
+    whose influence halves every `halflife` observations."""
+    if halflife <= 0:
+        raise ValueError("halflife must be positive")
+    return 1.0 - 0.5 ** (1.0 / halflife)
+
+
+def ew_update(mean: float, batch_mean: float, batch_count: int,
+              alpha: float) -> float:
+    """Fold a batch of `batch_count` observations (summarized by their mean)
+    into a streaming EW mean in one step.
+
+    Equivalent to `batch_count` sequential updates against the batch mean;
+    against the individual values it differs only by the within-batch
+    ordering weights, which is the right trade for the vectorized netsim
+    engine (one update per event batch instead of one per message). A NaN
+    `mean` means "no prior" and adopts the batch mean directly.
+    """
+    if batch_count <= 0:
+        return mean
+    if math.isnan(mean):
+        return batch_mean
+    w = 1.0 - (1.0 - alpha) ** batch_count
+    return (1.0 - w) * mean + w * batch_mean
+
+
+def lambda2_fast(P) -> float:
+    """Second-largest eigenvalue magnitude of a stochastic matrix -- alias
+    of `core.graphs.lambda2`, which dispatches symmetric inputs to the
+    `eigvalsh` fast path. Kept under the tradeoff namespace because it is
+    the controller-facing half of the incremental r / lambda2 refresh API
+    (`ew_update` + `lambda2_fast` -> `h_opt`)."""
+    return _lambda2(P)
 
 
 def predict_speedup(n: int, k: int, r: float, lam2: float,

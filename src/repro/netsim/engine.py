@@ -34,13 +34,32 @@ loop:
     same scalar call the object node makes, then scattered to the batch;
   * `np.add.at` applies push-sum mass deltas unbuffered in event order.
 
-The one knowing divergence: the object engine interleaves message and
-step-reschedule queue insertions per node, while the vectorized engine
-inserts all of a batch's messages before its steps. The two orders can only
-be told apart when a message arrival ties a step time EXACTLY (same float),
-which no scenario preset produces (it needs link latency to equal a node's
-busy time to the last ulp). Everything else -- loss, stragglers, rewiring,
-partial batches, mid-batch trace records -- is exact.
+The engines' message and step-reschedule queue insertions interleave
+differently (per node vs whole-batch), but the event clock's
+(time, prio, seq) total order makes that unobservable: in-flight arrivals
+rank ahead of other events at their exact (strictly future) timestamp, so
+even a constructed latency == busy float tie pops identically under both
+engines (netsim.events; regression-tested with an exact tie in
+tests/test_netsim_engine.py). Everything else -- loss, stragglers,
+rewiring, partial batches, mid-batch trace records -- is exact.
+
+Closed-loop control
+-------------------
+Both engines thread an optional `repro.adaptive.AdaptiveController`
+(`NetSimulator(controller=...)`) through the loop: step durations and kept
+message flights feed its RTracker, rewires refresh its reweighter, and
+after each step event `maybe_retune` may splice a new interval into the
+shared AdaptiveSchedule at the ACTIVE-node iteration frontier. A splice
+invalidates cached `next_comm` answers beyond the splice point, so the
+engine refreshes exactly those from the mutated schedule; active nodes'
+in-flight iterations are always at or before the frontier, so no
+already-charged busy time or already-made communication decision is
+rewritten. (A node that already FINISHED may have run ahead of a later
+splice -- its executed history is recorded in its own counters and is
+deliberately not what post-hoc schedule queries describe; see
+AdaptiveController.maybe_retune.) With `controller=None` none of these
+branches run and the engines remain bit-identical to their uncontrolled
+behavior.
 
 Gradient / objective batching
 -----------------------------
@@ -249,6 +268,10 @@ class ObjectEngine:
             time_limit: float) -> SimTrace:
         sim, net = self.sim, self.net
         n = net.n
+        ctrl = sim.controller
+        if ctrl is not None:
+            ctrl.bind(net)  # resets the schedule's splice history, so it
+            # must run BEFORE nodes cache their next_comm answers
         self._make_nodes(x0_stack)
         rng = np.random.default_rng(sim.seed)
         q = EventQueue(backend="heap")
@@ -270,7 +293,9 @@ class ObjectEngine:
             if ev.kind == "step":
                 i = ev.data["node"]
                 node = self.nodes[i]
-                self.compute_times.append(net.local_step_time(i))
+                step_dur = net.local_step_time(i)
+                self.compute_times.append(step_dur)
+                n_flights = len(self.msg_flights)
                 msgs = node.finish_step(net)
                 for dst, payload in msgs:
                     self.sent += 1
@@ -292,18 +317,43 @@ class ObjectEngine:
                 if total_steps >= next_eval:
                     self._record(trace, q.now, total_steps)
                     next_eval += eval_every * n
+                if ctrl is not None:
+                    ctrl.on_steps(np.array([i]), np.array([step_dur]))
+                    ctrl.on_messages(
+                        np.asarray(self.msg_flights[n_flights:]))
+                    if ctrl.retune_due(q.now):
+                        # frontier over STILL-ACTIVE nodes: finished ones
+                        # no longer constrain the future pattern
+                        fr = max((nd.t for nd in self.nodes if nd.t < T),
+                                 default=None)
+                        cut = (ctrl.maybe_retune(q.now, fr + 1)
+                               if fr is not None else None)
+                        if cut is not None:
+                            self._refresh_next_comm(cut)
             elif ev.kind == "msg":
                 self.nodes[ev.data["dst"]].receive(ev.data["src"],
                                                    ev.data["payload"])
             elif ev.kind == "rewire":
                 net.rewire()
                 self.rewires += 1
+                if ctrl is not None:
+                    ctrl.on_rewire(net.graph)
                 if active > 0:
                     q.schedule_in(sim.scenario.rewire_every, "rewire")
 
         if not trace.iters or trace.iters[-1] * n < total_steps:
             self._record(trace, q.now, total_steps)
         return trace
+
+    def _refresh_next_comm(self, cut: int) -> None:
+        """A schedule splice at `cut` invalidated cached next-comm answers
+        beyond it; re-query the mutated schedule for exactly those. Values
+        at or before the cut are still correct (the past is immutable under
+        the mutation protocol)."""
+        sched = self.sim.schedule
+        for nd in self.nodes:
+            if nd.next_comm > cut:
+                nd.next_comm = sched.next_comm_step(nd.t)
 
     def _record(self, trace: SimTrace, now: float, total_steps: int) -> None:
         n = self.net.n
@@ -396,6 +446,7 @@ class VectorizedEngine:
         self._epoch_cache: dict[int, tuple] = {}
         self._proj = (_RowBatch(sim.projection)
                       if sim.projection is not None else None)
+        self._ctrl = None  # bound per-run in run()
 
     # -- observability (same contract as ObjectEngine's lists) --------------
 
@@ -489,6 +540,8 @@ class VectorizedEngine:
             return
         ks = np.nonzero(keep)[0]
         self._flight_chunks.append(flights[ks])
+        if self._ctrl is not None:
+            self._ctrl.on_messages(flights[ks])
         arrivals = self.q.now + extras[ks]
         times, inv = np.unique(arrivals, return_inverse=True)
         for u, tm in enumerate(times):
@@ -561,6 +614,10 @@ class VectorizedEngine:
             time_limit: float) -> SimTrace:
         sim = self.sim
         n = self.net.n
+        ctrl = self._ctrl = sim.controller
+        if ctrl is not None:
+            ctrl.bind(self.net)  # resets the schedule's splice history, so
+            # it must run BEFORE _init_state caches next_comm answers
         self._init_state(x0_stack)
         self._rebuild_topology()
         self.rng = np.random.default_rng(sim.seed)
@@ -589,12 +646,25 @@ class VectorizedEngine:
                        and q.peek().time == ev.time):
                     nodes = np.concatenate([nodes, q.pop().data["nodes"]])
                 self._on_steps(nodes, T, trace, eval_every * n)
+                if ctrl is not None and ctrl.retune_due(q.now):
+                    alive = self.t < T  # frontier over still-active nodes
+                    cut = (ctrl.maybe_retune(
+                        q.now, int(self.t[alive].max()) + 1)
+                        if alive.any() else None)
+                    if cut is not None:
+                        stale = self.next_comm > cut
+                        if stale.any():
+                            self.next_comm[stale] = \
+                                sim.schedule.next_comm_step_batch(
+                                    self.t[stale])
             elif ev.kind == "msgs":
                 self._on_msgs(ev.data)
             elif ev.kind == "rewire":
                 self.net.rewire()
                 self._rebuild_topology()
                 self.rewires += 1
+                if ctrl is not None:
+                    ctrl.on_rewire(self.net.graph)
                 if self.active > 0:
                     q.schedule_in(sim.scenario.rewire_every, "rewire")
 
@@ -628,6 +698,8 @@ class VectorizedEngine:
         sim, now = self.sim, self.q.now
         i = due
         self._compute_chunks.append(self.local_step[i])
+        if self._ctrl is not None:
+            self._ctrl.on_steps(i, self.local_step[i])
         t_old = self.t[i]
         t_new = t_old + 1
         grads = sim._grad_batch.batch_or_loop(i, self.x[i], t_old)

@@ -1,9 +1,30 @@
 """Discrete-event simulation clock: a priority queue of timestamped events.
 
 The netsim's single source of truth for time. Events are totally ordered by
-(time, seq): `seq` is a monotone insertion counter, so simultaneous events
-fire in schedule order and the whole simulation is deterministic for a fixed
-seed (no dict/hash iteration order anywhere on the hot path).
+(time, prio, seq): `prio` ranks event KINDS at equal timestamps (message
+arrivals before everything else -- see below), and `seq` is a monotone
+insertion counter, so simultaneous same-kind events fire in schedule order
+and the whole simulation is deterministic for a fixed seed (no dict/hash
+iteration order anywhere on the hot path).
+
+Why kind priority exists: the object engine interleaves message and
+step-reschedule insertions per node, while the vectorized engine inserts a
+whole batch's messages before its steps. Under pure (time, seq) order the
+two engines could disagree ONLY when a message arrival tied a FUTURE step
+completion to the exact float (link latency == remaining busy time to the
+ulp) -- the one documented seam of the vectorized fast path. Ranking
+in-flight arrivals ahead of other events at their (strictly future) target
+time makes the insertion interleaving unobservable and closes that seam:
+the engines are bit-identical even on constructed exact ties
+(tests/test_netsim_engine.py::test_exact_float_tie_msg_vs_step_bit_identical).
+
+The priority is deliberately NOT applied to a message scheduled at exactly
+`now` (a zero-remaining-flight delivery emitted while processing the
+current timestamp): simultaneous events must not causally affect each
+other, so such a message stays behind the steps already due at `now` --
+which is both engines' existing (and matching) behavior for the
+ubiquitous zero-latency case. Non-tied timestamps are ordered by time
+alone; all previously seeded traces are unchanged either way.
 
 Two interchangeable backends behind the same API:
 
@@ -21,9 +42,9 @@ Two interchangeable backends behind the same API:
                       the queue outgrows it, and the width is re-estimated
                       from observed inter-event gaps on each resize.
 
-Both backends produce the exact same (time, seq) total order, including the
-tie-breaking of simultaneous events -- property-tested against each other in
-tests/test_netsim_engine.py.
+Both backends produce the exact same (time, prio, seq) total order,
+including the tie-breaking of simultaneous events -- property-tested
+against each other in tests/test_netsim_engine.py.
 
 Time is in the paper's normalized units: 1.0 = one full-data gradient on the
 reference node (tradeoff.py eq. 9 normalization), so event timestamps are
@@ -41,9 +62,16 @@ from typing import Any
 __all__ = ["Event", "EventQueue"]
 
 
+#: kinds that jump the queue at equal (strictly future) timestamps: message
+#: arrivals. Every other kind -- and an arrival at exactly `now` -- gets
+#: priority 1, preserving plain seq order among themselves.
+_ARRIVAL_KINDS = frozenset({"msg", "msgs"})
+
+
 @dataclasses.dataclass(order=True, slots=True)
 class Event:
     time: float
+    prio: int
     seq: int
     kind: str = dataclasses.field(compare=False)
     data: dict[str, Any] = dataclasses.field(compare=False,
@@ -121,7 +149,7 @@ class _CalendarBackend:
     def _insert(self, ev: Event) -> None:
         day = self._day_of(ev.time)
         b = self._buckets[day % self._nb]
-        key = (ev.time, ev.seq, ev)
+        key = (ev.time, ev.prio, ev.seq, ev)
         if b and key < b[-1]:
             lo = self._starts[day % self._nb]
             bisect.insort(b, key, lo=lo)
@@ -198,14 +226,14 @@ class _CalendarBackend:
         if not self._count:
             raise IndexError("peek from an empty calendar queue")
         idx, s = self._head()
-        return self._buckets[idx][s][2]
+        return self._buckets[idx][s][-1]
 
     def pop(self) -> Event:
         if not self._count:
             raise IndexError("pop from an empty calendar queue")
         idx, s = self._head()
         b = self._buckets[idx]
-        ev = b[s][2]
+        ev = b[s][-1]
         self._starts[idx] = s + 1
         self._count -= 1
         # compact lazily so a drained prefix doesn't pin memory
@@ -222,7 +250,8 @@ class EventQueue:
     ordering cannot be violated by a buggy handler.
 
     `backend` selects the storage strategy ("heap" or "calendar", see module
-    docstring); both realize the identical (time, seq) total order.
+    docstring); both realize the identical (time, prio, seq) total order,
+    with prio derived from the event kind (message arrivals first).
     """
 
     def __init__(self, backend: str = "heap") -> None:
@@ -246,7 +275,8 @@ class EventQueue:
         if time < self.now:
             raise ValueError(
                 f"cannot schedule {kind!r} at {time} < now={self.now}")
-        ev = Event(float(time), self._seq, kind, data)
+        prio = 0 if (kind in _ARRIVAL_KINDS and time > self.now) else 1
+        ev = Event(float(time), prio, self._seq, kind, data)
         self._seq += 1
         self._q.push(ev)
         return ev

@@ -155,6 +155,18 @@ class PushSumDDANode(_NodeBase):
         # invariant are untouched) caps that amplification at 1/w_floor;
         # the estimate is conservatively damped instead, the same basin
         # guard as robust ratio-consensus clamps (z >= c*I).
+        #
+        # Quantified bias (tests/test_netsim.py::test_pushsum_w_floor_*):
+        # because only the denominator is clamped, the guarded estimate is
+        # EXACTLY the exact ratio damped per node,
+        #   z_floor = (y/w) * min(1, w / w_floor),
+        # so the relative bias is bounded by max(0, 1 - w/w_floor) -- at
+        # most 100%, always a shrink toward zero (never a sign flip or
+        # amplification), nonzero only while w dwells below the floor, and
+        # decaying as mixing pulls w back toward 1. What it buys: under 60%
+        # loss with gradient injection, the unguarded ratio (w_floor ~ 0)
+        # blows the objective up by > 1e6x while the default guard keeps
+        # the whole trajectory within ~10x of F(x0).
         self.w_floor = w_floor
         # cumulative mass SENT per out-link (dst -> totals)
         self.sigma_y: dict[int, np.ndarray] = {}

@@ -84,6 +84,13 @@ class NetSimulator:
         (b, d)`; e.g. `engine.jax_batch_grad(grad_fn)` for a jitted
         `jax.vmap` path. When absent, `grad_fn` itself is probed with a
         stacked batch and used batched only if bitwise-equal to the loop.
+      controller: optional `repro.adaptive.AdaptiveController` -- closes
+        the measure->predict->act loop online: both engines feed it step
+        durations and message flights and let it splice a re-solved h into
+        its AdaptiveSchedule at the iteration frontier. The controller's
+        schedule becomes the run's schedule (passing a different
+        `schedule=` too is an error); with `controller=None` the engines
+        run their uncontrolled (bit-identical) event loops.
     """
 
     def __init__(self, scenario: Scenario, grad_fn: GradFn,
@@ -95,11 +102,19 @@ class NetSimulator:
                  pushsum_y0: np.ndarray | None = None,
                  pushsum_w_floor: float = 0.5,
                  engine: str = "auto",
-                 batch_grad_fn: Callable | None = None):
+                 batch_grad_fn: Callable | None = None,
+                 controller=None):
         if algorithm not in ("dda", "pushsum"):
             raise ValueError(f"unknown algorithm {algorithm!r}")
         if engine not in _ENGINES:
             raise ValueError(f"unknown engine {engine!r} (one of {_ENGINES})")
+        if controller is not None:
+            if schedule is not None and schedule is not controller.schedule:
+                raise ValueError(
+                    "controller and schedule both given but disagree; pass "
+                    "the controller's schedule (or neither)")
+            schedule = controller.schedule
+        self.controller = controller
         self.scenario = scenario
         self.grad_fn = grad_fn
         self.eval_fn = eval_fn

@@ -163,6 +163,72 @@ def test_pushsum_dda_converges_under_loss():
     assert np.isfinite(trace.fvals).all()
 
 
+def test_pushsum_w_floor_bias_is_bounded_damping():
+    """Quantifies the w_floor ratio-guard bias (ROADMAP item).
+
+    The floor clamps only the DENOMINATOR of the ratio estimate, so the
+    sigma/rho mass dynamics are untouched (bitwise identical runs for any
+    floor) and the floored estimate is EXACTLY the exact ratio damped
+    per-node:  z_floor_i = (y_i / w_i) * min(1, w_i / w_floor).
+    The relative bias is therefore bounded by max(0, 1 - w_i / w_floor),
+    nonzero only while held weight dwells below the floor, and vanishes as
+    push-sum mixes w_i back toward 1 -- a bounded, transient damping toward
+    zero, in exchange for the divergence protection the companion test
+    below measures."""
+    rng = np.random.default_rng(3)
+    y0 = rng.normal(size=(N, D)) * 2.0
+    _, _, eval_fn = _quadratic_problem()
+    floor = 0.5
+
+    def run(w_floor):
+        sim = NetSimulator(lossy(N, R, loss=0.5, seed=1),
+                           lambda i, x, t: np.zeros(D), eval_fn,
+                           algorithm="pushsum", pushsum_y0=y0, seed=2,
+                           pushsum_w_floor=w_floor)
+        sim.run(np.zeros((N, D)), T=120, eval_every=40)
+        y = np.stack([nd.y for nd in sim.nodes])
+        w = np.array([nd.w for nd in sim.nodes])
+        return y, w
+
+    y_f, w_f = run(floor)
+    y_e, w_e = run(1e-12)
+    # 1. the guard never touches the mass bookkeeping
+    np.testing.assert_array_equal(y_f, y_e)
+    np.testing.assert_array_equal(w_f, w_e)
+    assert (w_f < floor).any()  # heavy loss actually exercised the clamp
+    # 2. bias identity: floored estimate == exact ratio * damping factor
+    z_exact = y_f / w_f[:, None]
+    z_floor = y_f / np.maximum(w_f, floor)[:, None]
+    damp = np.minimum(1.0, w_f / floor)
+    np.testing.assert_allclose(z_floor, z_exact * damp[:, None], rtol=1e-9)
+    # 3. documented bound: relative bias <= 1 - w/floor where binding
+    rel_bias = np.linalg.norm(z_floor - z_exact, axis=1) \
+        / np.maximum(np.linalg.norm(z_exact, axis=1), 1e-300)
+    np.testing.assert_allclose(rel_bias, np.maximum(0.0, 1.0 - damp),
+                               atol=1e-9)
+    assert rel_bias.max() <= 1.0
+
+
+def test_pushsum_w_floor_prevents_divergence_under_heavy_loss():
+    """The other side of the tradeoff: with gradient injection under 60%
+    loss, the unguarded ratio (w_floor ~ 0) amplifies fresh gradients by
+    1/w and the primal feedback loop blows up by many orders of magnitude;
+    the default guard keeps the whole trajectory bounded."""
+    centers, grad_fn, eval_fn = _quadratic_problem()
+    f0 = eval_fn(np.zeros(D))
+
+    def run(w_floor):
+        sim = NetSimulator(lossy(N, R, loss=0.6, seed=1), grad_fn, eval_fn,
+                           algorithm="pushsum", seed=2,
+                           pushsum_w_floor=w_floor,
+                           a_fn=lambda t: 0.2 / math.sqrt(max(t, 1.0)))
+        trace = sim.run(np.zeros((N, D)), T=400, eval_every=20)
+        return max(abs(f) for f in trace.fvals)
+
+    assert run(0.5) < 10.0 * f0          # guarded: stays in the basin
+    assert run(1e-12) > 1e6 * f0         # unguarded: catastrophic blow-up
+
+
 # -- core hooks the netsim relies on ---------------------------------------
 
 

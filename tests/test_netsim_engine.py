@@ -9,14 +9,12 @@ import numpy as np
 import pytest
 
 from _hyp import HAVE_HYPOTHESIS, given, settings, st
+from repro.core.dda import TRACE_FIELDS
 from repro.core.schedules import (EveryIteration, IncreasinglySparse,
                                   Periodic)
 from repro.netsim import (EventQueue, NetSimulator, adversarial, homogeneous,
                           lossy, pushsum_mass_audit, quadratic_consensus as
                           _problem)
-
-TRACE_FIELDS = ("iters", "sim_time", "fvals", "fvals_consensus", "comms",
-                "disagreement")
 
 
 def _run_engines(scenario, algorithm, n, d, T=200, seed=5, eval_every=3,
@@ -83,6 +81,56 @@ def test_vectorized_pushsum_mass_audit_via_materialized_nodes():
     y_total, w_total = pushsum_mass_audit(sim.nodes)
     np.testing.assert_allclose(y_total, y0.sum(axis=0), atol=1e-9)
     assert w_total == pytest.approx(n, abs=1e-9)
+
+
+def test_exact_float_tie_msg_vs_step_bit_identical():
+    """Regression for the closed float-time-tie seam: serialization-free
+    links whose latency EXACTLY equals the homogeneous busy time (1/n) make
+    every communication's message arrival tie the receivers' next step
+    completion to the ulp. The engines' message/step insertion orders
+    differ, so under the old (time, seq)-only event order the object engine
+    let a later-in-batch node's message leapfrog an earlier node's step and
+    the traces diverged; the (time, prio, seq) order (in-flight arrivals
+    first at their strictly-future timestamp) makes them bit-identical."""
+    import dataclasses
+
+    from repro.core.graphs import complete_graph
+    from repro.netsim import LinkModel, NodeSpec, Scenario
+
+    n, d = 6, 4
+    sc = Scenario(name="tie", topology=complete_graph(n),
+                  link=LinkModel(latency=1.0 / n, bandwidth=math.inf),
+                  node_specs=tuple(NodeSpec() for _ in range(n)),
+                  message_bytes=8.0)
+    for schedule in (EveryIteration(), Periodic(h=2)):
+        runs = _run_engines(sc, "dda", n, d, T=60, seed=1, eval_every=4,
+                            schedule=schedule)
+        _assert_traces_identical(runs["object"][1], runs["vectorized"][1])
+    # heterogeneous variant: a 2x straggler keeps producing exact ties
+    # (tie requires latency == busy; use the straggler's busy time)
+    sc2 = dataclasses.replace(
+        sc, link=LinkModel(latency=2.0 / n, bandwidth=math.inf),
+        node_specs=(NodeSpec(compute_scale=2.0),) + sc.node_specs[1:])
+    runs = _run_engines(sc2, "dda", n, d, T=60, seed=1, eval_every=4)
+    _assert_traces_identical(runs["object"][1], runs["vectorized"][1])
+
+
+def test_arrival_priority_only_on_strictly_future_ties():
+    """A message scheduled at exactly `now` must NOT leapfrog events
+    already due at `now` (simultaneous events are causally independent);
+    one scheduled for a strictly future time must beat a same-time step."""
+    q = EventQueue(backend="heap")
+    q.schedule(1.0, "step", node=0)
+    q.schedule(1.0, "msg", src=1, dst=0)   # future tie: arrival first
+    assert [q.pop().kind for _ in range(2)] == ["msg", "step"]
+    q.schedule(2.0, "step", node=0)
+    assert q.pop().time == 2.0             # now == 2.0
+    q.schedule(3.0, "step", node=1)
+    q.schedule(3.0, "step", node=2)
+    assert q.pop().data["node"] == 1       # now == 3.0, node 2 still due
+    q.schedule(3.0, "msg", src=0, dst=2)   # at-now delivery: stays behind
+    ev1, ev2 = q.pop(), q.pop()
+    assert (ev1.kind, ev2.kind) == ("step", "msg")
 
 
 def test_engine_arg_validation():
