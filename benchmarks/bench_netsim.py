@@ -8,6 +8,11 @@ Before timing anything it re-verifies the engine-equivalence contract
 (bit-identical traces on a seeded adversarial scenario) so a fast-but-wrong
 engine can never post a number.
 
+Every cell is a declarative `ExperimentSpec` through `repro.run()`; the
+reported wall_s is `RunResult.wall_s`, which times exactly the engine's
+`run()` (construction and probe setup excluded, as the hand-wired bench
+always did).
+
 Results land in BENCH_netsim.json (see benchmarks/README.md for the schema),
 seeding the repo's netsim perf trajectory: CI runs `--smoke` on every push
 and uploads the JSON as an artifact.
@@ -26,59 +31,67 @@ import time
 
 import numpy as np
 
-from repro.netsim import (NetSimulator, adversarial, homogeneous,
-                          quadratic_consensus)
+from repro.experiments import ExperimentSpec, run as run_spec
 
 DEFAULT_SIZES = (64, 256, 1024)
 
 
-def build_problem(n: int, d: int, seed: int = 0):
-    """Quadratic consensus problem with BATCH-capable grad and eval (the
+def cell_spec(n: int, d: int, T: int, r: float, k: int, algorithm: str,
+              engine: str, seed: int, eval_every: int,
+              *, scenario: str = "homogeneous", **knobs) -> ExperimentSpec:
+    """One bench cell. The problem is the BATCH-capable quadratic (the
     canonical netsim.problems one), so the engines' bitwise-verified batch
     probes engage and per-node Python evaluation disappears from the hot
     path."""
-    _, grad_fn, eval_fn = quadratic_consensus(n, d, seed, batchable=True)
-    return grad_fn, eval_fn
+    topology = ({"kind": "expander_sequence", "params": {"k": k, "seed": seed}}
+                if knobs.get("rewire_every") else
+                {"kind": "expander", "params": {"k": k, "seed": seed}})
+    return ExperimentSpec(
+        name=f"bench_netsim_{scenario}",
+        problem={"kind": "quadratic_consensus",
+                 "params": {"n": n, "d": d, "seed": seed,
+                            "batchable": True}},
+        topology=topology,
+        schedule={"kind": "every"},
+        backends=[{"kind": "netsim",
+                   "params": {"scenario": scenario, "engine": engine,
+                              "algorithm": algorithm, **knobs}}],
+        T=T, eval_every=eval_every, seed=seed, r=r)
 
 
 def check_equivalence(n: int, d: int, T: int, r: float, seed: int) -> dict:
     """Seeded adversarial scenario (loss + straggler + rewire): both engines
     must produce bit-identical traces and r-measurements, per algorithm."""
-    grad_fn, eval_fn = build_problem(n, d, seed)
     out = {}
     for algorithm in ("dda", "pushsum"):
-        traces, meas = {}, {}
+        res = {}
         for engine in ("object", "vectorized"):
-            sc = adversarial(n, r, loss=0.2, slow_factor=3.0, n_slow=2,
-                             rewire_every=0.8, seed=seed)
-            sim = NetSimulator(sc, grad_fn, eval_fn, algorithm=algorithm,
-                               seed=seed, engine=engine)
-            traces[engine] = sim.run(np.zeros((n, d)), T=T, eval_every=5)
-            meas[engine] = sim.measure_r_empirical()
-        a, b = traces["object"], traces["vectorized"]
+            spec = cell_spec(n, d, T, r, 4, algorithm, engine, seed,
+                             eval_every=5, scenario="adversarial",
+                             loss=0.2, slow_factor=3.0, n_slow=2,
+                             rewire_every=0.8)
+            res[engine] = run_spec(spec)
+        a, b = res["object"].trace, res["vectorized"].trace
         out[algorithm] = bool(
             a.iters == b.iters and a.sim_time == b.sim_time
             and a.fvals == b.fvals and a.fvals_consensus == b.fvals_consensus
             and a.comms == b.comms and a.disagreement == b.disagreement
-            and meas["object"] == meas["vectorized"])
+            and res["object"].r_measurement
+            == res["vectorized"].r_measurement)
     return out
 
 
 def bench_cell(n: int, d: int, T: int, r: float, k: int, algorithm: str,
                engine: str, seed: int, eval_every: int,
                repeats: int) -> dict:
-    grad_fn, eval_fn = build_problem(n, d, seed)
-    sc = homogeneous(n, r, k=k, seed=seed)
-    x0 = np.zeros((n, d))
-    best = float("inf")
+    spec = cell_spec(n, d, T, r, k, algorithm, engine, seed, eval_every)
+    best = None
     for _ in range(repeats):  # best-of: robust to background load spikes
-        sim = NetSimulator(sc, grad_fn, eval_fn, algorithm=algorithm,
-                           seed=seed, engine=engine)
-        t0 = time.perf_counter()
-        trace = sim.run(x0, T=T, eval_every=eval_every)
-        best = min(best, time.perf_counter() - t0)
-    wall = best
-    events = n * T + sim.sent
+        res = run_spec(spec)
+        if best is None or res.wall_s < best.wall_s:
+            best = res
+    wall = best.wall_s
+    events = n * T + best.extras["sent"]
     return {
         "n": n, "d": d, "T": T, "k": k, "r": r,
         "algorithm": algorithm, "engine": engine,
@@ -86,8 +99,8 @@ def bench_cell(n: int, d: int, T: int, r: float, k: int, algorithm: str,
         "events": int(events),
         "wall_s": round(wall, 4),
         "events_per_s": round(events / wall, 1),
-        "final_f": float(trace.fvals[-1]),
-        "final_disagreement": float(trace.disagreement[-1]),
+        "final_f": float(best.trace.fvals[-1]),
+        "final_disagreement": float(best.trace.disagreement[-1]),
     }
 
 

@@ -12,11 +12,11 @@ Periodic(h) schedules on the `scenarios.adversarial` preset (packet loss +
 4x stragglers on a complete graph, the regime where offline h is least
 trustworthy): every run shares the problem, stepsize, seed, and target
 accuracy; the score is simulated wall-clock (event time) to target. The
-adaptive trajectory starts at h0 = 1 (aggressive mixing while the
-disagreement transient decays and r is still unmeasured), splices to
-h_opt(n, k, r_hat, lambda2_eff) within one communication round, then grows
-with (1 + H)^p -- tracking the lower envelope of the fixed-h error curves,
-which no constant h can do.
+whole race is declarative: one base `ExperimentSpec`, the fixed grid via
+`run_sweep(spec, "schedule.params.h", grid)`, the adaptive run by swapping
+in the adaptive schedule + controller components -- and the traces are
+bit-identical to the pre-redesign hand-wired runs (gated in
+tests/test_experiments_migration.py).
 
 Knobs (see --help): --n, --d, --T, --r, --loss, --straggler, --n-slow,
 --grid, --h0, --p, --update-every, --eps-frac, --eval-every, --seed,
@@ -37,43 +37,45 @@ import json
 import math
 import sys
 
-import numpy as np
-
-from repro.adaptive import AdaptiveController, AdaptiveSchedule
-from repro.core.dda import TRACE_FIELDS, json_sanitize, trace_time_to_reach
-from repro.core.schedules import Periodic
-from repro.netsim import NetSimulator, adversarial, quadratic_consensus
+from repro.core.dda import TRACE_FIELDS, json_sanitize
+from repro.experiments import ExperimentSpec, run as run_spec, run_sweep
+from repro.experiments.components import problems
 
 
-def build(args):
-    """(scenario, problem closures, eps target) shared by every run."""
-    centers, grad_fn, eval_fn = quadratic_consensus(args.n, args.d,
-                                                    seed=args.seed)
-    # the optimum is the centroid; asking the objective itself keeps the
-    # target honest if the problem is ever rescaled
-    fstar = float(eval_fn(centers.mean(axis=0)))
-    f0 = eval_fn(np.zeros(args.d))
-    eps_value = fstar + args.eps_frac * (f0 - fstar)
-    sc = adversarial(args.n, args.r, loss=args.loss,
-                     slow_factor=args.straggler, n_slow=args.n_slow,
-                     k=args.k, seed=args.seed)
-    return sc, grad_fn, eval_fn, fstar, eps_value
+def base_spec(args, h: int) -> ExperimentSpec:
+    """One fixed-Periodic(h) run on the adversarial preset, as a spec."""
+    return ExperimentSpec(
+        name="fig_adaptive",
+        problem={"kind": "quadratic_consensus",
+                 "params": {"n": args.n, "d": args.d, "seed": args.seed}},
+        topology={"kind": "expander",
+                  "params": {"k": args.k, "seed": args.seed}},
+        schedule={"kind": "periodic", "params": {"h": h}},
+        backends=[{"kind": "netsim",
+                   "params": {"scenario": "adversarial", "loss": args.loss,
+                              "slow_factor": args.straggler,
+                              "n_slow": args.n_slow}}],
+        stepsize={"kind": "inv_sqrt", "params": {"A": args.a_scale}},
+        T=args.T, eval_every=args.eval_every, seed=args.seed, r=args.r,
+        eps_frac=args.eps_frac, time_limit=args.time_limit)
 
 
-def run_one(args, sc, grad_fn, eval_fn, schedule=None, ctrl=None,
-            engine="auto"):
-    a_fn = (lambda t: args.a_scale / math.sqrt(max(t, 1.0)))
-    sim = NetSimulator(sc, grad_fn, eval_fn, a_fn=a_fn, schedule=schedule,
-                       controller=ctrl, seed=args.seed, engine=engine)
-    trace = sim.run(np.zeros((args.n, args.d)), args.T,
-                    eval_every=args.eval_every, time_limit=args.time_limit)
-    return sim, trace
+def adaptive_spec(args) -> ExperimentSpec:
+    """The closed-loop run: adaptive schedule + controller components."""
+    spec = base_spec(args, h=1)
+    return ExperimentSpec.from_dict({
+        **spec.to_dict(),
+        "schedule": {"kind": "adaptive",
+                     "params": {"h0": args.h0, "p": args.p}},
+        "controller": {"kind": "adaptive",
+                       "params": {"update_every": args.update_every,
+                                  "warmup_messages": 4,
+                                  "warmup_steps": 4}},
+    })
 
 
-def make_controller(args):
-    return AdaptiveController(
-        AdaptiveSchedule(h0=args.h0, p=args.p),
-        update_every=args.update_every, warmup_messages=4, warmup_steps=4)
+def _tta(res) -> float:
+    return math.inf if res.time_to_target is None else res.time_to_target
 
 
 def main(argv=None) -> int:
@@ -108,43 +110,43 @@ def main(argv=None) -> int:
                     help="run the acceptance gate and exit")
     args = ap.parse_args(argv)
 
-    sc, grad_fn, eval_fn, fstar, eps_value = build(args)
     if args.smoke:
-        return smoke(args, sc, grad_fn, eval_fn, eps_value)
+        return smoke(args)
 
-    results = {"benchmark": "fig_adaptive", "scenario": sc.name,
+    prob = problems.build("quadratic_consensus", n=args.n, d=args.d,
+                          seed=args.seed)
+    fstar = prob.fstar
+    results = {"benchmark": "fig_adaptive",
                "config": vars(args), "fstar": fstar,
-               "eps_value": eps_value, "fixed": [], "adaptive": None}
+               "eps_value": prob.eps_value(args.eps_frac),
+               "fixed": [], "adaptive": None}
     print("schedule,h,tta,final_gap,r_emp")
-    for h in args.grid:
-        sim, tr = run_one(args, sc, grad_fn, eval_fn,
-                          schedule=Periodic(h=h))
-        tta = trace_time_to_reach(tr, eps_value)
+    fixed = run_sweep(base_spec(args, h=args.grid[0]),
+                      "schedule.params.h", args.grid)
+    for h, res in zip(args.grid, fixed):
         # a run can end inside --time-limit before any message flew
         # (huge h, tiny T): report nan rather than abort the sweep
-        r_emp = (sim.measure_r_empirical().r
-                 if sim.msg_flights and sim.compute_times else math.nan)
-        results["fixed"].append({"h": h, "tta": tta,
-                                 "final_gap": tr.fvals[-1] - fstar,
+        r_emp = (res.r_measurement.r if res.r_measurement is not None
+                 else math.nan)
+        results["fixed"].append({"h": h, "tta": _tta(res),
+                                 "final_gap": res.trace.fvals[-1] - fstar,
                                  "r_emp": r_emp})
-        print(f"periodic,{h},{tta:.1f},{tr.fvals[-1] - fstar:.3f},"
-              f"{r_emp:.4f}")
+        print(f"periodic,{h},{_tta(res):.1f},"
+              f"{res.trace.fvals[-1] - fstar:.3f},{r_emp:.4f}")
 
-    ctrl = make_controller(args)
-    sim, tr = run_one(args, sc, grad_fn, eval_fn, ctrl=ctrl)
-    tta = trace_time_to_reach(tr, eps_value)
-    r_hat = ctrl.tracker.r_hat  # None until a message has been observed
+    res_ad = run_spec(adaptive_spec(args))
+    ex = res_ad.extras
     results["adaptive"] = {
-        "tta": tta, "final_gap": tr.fvals[-1] - fstar,
-        "h_final": ctrl.schedule.h_current,
-        "h_opt_hat": ctrl.schedule.h_opt_hat,
-        "r_hat": r_hat,
-        "lam2_eff": ctrl.reweighter.last_lam2,
-        "retunes": [(rt.from_t, rt.h) for rt in ctrl.schedule.retunes]}
-    print(f"adaptive,{ctrl.schedule.h_current},{tta:.1f},"
-          f"{tr.fvals[-1] - fstar:.3f},"
+        "tta": _tta(res_ad), "final_gap": res_ad.trace.fvals[-1] - fstar,
+        "h_final": ex["h_final"], "h_opt_hat": ex["h_opt_hat"],
+        "r_hat": ex["r_hat"],
+        "lam2_eff": ex.get("lam2_eff"), "retunes": ex["retunes"]}
+    r_hat = ex["r_hat"]  # None until a message has been observed
+    print(f"adaptive,{ex['h_final']},{_tta(res_ad):.1f},"
+          f"{res_ad.trace.fvals[-1] - fstar:.3f},"
           f"{math.nan if r_hat is None else r_hat:.4f}")
-    print(f"# retune path: {results['adaptive']['retunes']}")
+    print(f"# retune path: {ex['retunes']}")
+    results["scenario"] = res_ad.extras["scenario"]
     if args.out:
         with open(args.out, "w") as f:
             json.dump(json_sanitize(results), f, indent=2, allow_nan=False)
@@ -152,22 +154,21 @@ def main(argv=None) -> int:
     return 0
 
 
-def smoke(args, sc, grad_fn, eval_fn, eps_value) -> int:
+def smoke(args) -> int:
     ok = True
 
     # gate 1: the closed loop beats every fixed h in the grid
-    fixed = {}
-    for h in args.grid:
-        _, tr = run_one(args, sc, grad_fn, eval_fn, schedule=Periodic(h=h))
-        fixed[h] = trace_time_to_reach(tr, eps_value)
-    ctrl = make_controller(args)
-    _, tr = run_one(args, sc, grad_fn, eval_fn, ctrl=ctrl)
-    tta_ad = trace_time_to_reach(tr, eps_value)
+    fixed = {h: _tta(res)
+             for h, res in zip(args.grid,
+                               run_sweep(base_spec(args, h=args.grid[0]),
+                                         "schedule.params.h", args.grid))}
+    res_ad = run_spec(adaptive_spec(args))
+    tta_ad = _tta(res_ad)
     best_h = min(fixed, key=fixed.get)
     line = (f"[smoke] adaptive tta={tta_ad:.1f} vs best fixed "
             f"h={best_h} tta={fixed[best_h]:.1f} "
             f"(grid {{h: tta}} = { {h: round(v, 1) for h, v in fixed.items()} }, "
-            f"retunes {[(rt.from_t, rt.h) for rt in ctrl.schedule.retunes]})")
+            f"retunes {res_ad.extras['retunes']})")
     if not math.isfinite(tta_ad) or any(tta_ad >= v for v in fixed.values()):
         ok = False
         line += "  FAIL(adaptive not strictly fastest)"
@@ -176,12 +177,12 @@ def smoke(args, sc, grad_fn, eval_fn, eps_value) -> int:
     # gate 2: with the controller off, both engines stay bit-identical
     # (short run; the hook points must be unobservable when unused)
     short = argparse.Namespace(**{**vars(args), "T": 300, "eval_every": 5,
-                                  "time_limit": math.inf})
-    tr_by_engine = {}
-    for engine in ("object", "vectorized"):
-        _, tr_e = run_one(short, sc, grad_fn, eval_fn,
-                          schedule=Periodic(h=2), engine=engine)
-        tr_by_engine[engine] = tr_e
+                                  "time_limit": None})
+    spec2 = base_spec(short, h=2)
+    tr_by_engine = {
+        engine: run_spec(
+            spec2.with_value("backends.0.params.engine", engine)).trace
+        for engine in ("object", "vectorized")}
     same = all(getattr(tr_by_engine["object"], f)
                == getattr(tr_by_engine["vectorized"], f)
                for f in TRACE_FIELDS)

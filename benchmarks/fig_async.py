@@ -13,6 +13,10 @@ per cell of the (loss, straggler) grid:
     via core.tradeoff.time_to_accuracy (exact for a lossless homogeneous
     cluster; the grid shows where reality departs from the model).
 
+Every cell is one declarative `ExperimentSpec` run through `repro.run()`
+(the unified experiment API); the pre-redesign hand-wired traces are
+reproduced bit-identically (gated in tests/test_experiments_migration.py).
+
 Knobs (see --help): --n, --T, --r, --k, --loss, --straggler, --eval-every,
 --seed, --schedule/--h, --pushsum, --smoke.
 
@@ -25,75 +29,67 @@ scenarios must produce strictly slower traces. Exits nonzero on failure.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import math
 import sys
 
 import numpy as np
 
-from repro.core import (EveryIteration, iteration_cost, make_schedule,
-                        time_to_accuracy)
+from repro.core import iteration_cost, make_schedule, time_to_accuracy
 from repro.data.pipeline import nonsmooth_quadratic_problem
-from repro.netsim import NetSimulator, homogeneous, lossy, straggler
+from repro.experiments import ExperimentSpec, run as run_spec
+from repro.experiments.components import (nonsmooth_centralized_optimum,
+                                          problems)
 
 
 def build_problem(n: int, M: int, d: int, seed: int):
-    """Paper V.B non-smooth quadratics, in pure numpy (the netsim is
-    host-side; no need to round-trip each per-node subgradient through jax)."""
+    """Deprecated shim: the paper V.B closures now live in
+    `repro.experiments.components` (problem kind "nonsmooth"); kept for
+    callers that still want the raw closures."""
+    prob = problems.build("nonsmooth", n=n, M=M, d=d, seed=seed)
     centers = nonsmooth_quadratic_problem(n, M, d, seed,
                                           center_scale=1.5).astype(np.float64)
-
-    def grad_fn(i, x, t):
-        diff = x[None, None, :] - centers[i]          # (M, 2, d)
-        q = np.sum(diff * diff, axis=-1)              # (M, 2)
-        pick = np.argmax(q, axis=-1)                  # (M,)
-        chosen = np.take_along_axis(
-            diff, pick[:, None, None], axis=1)[:, 0]  # (M, d)
-        return 2.0 * np.sum(chosen, axis=0)
-
-    def eval_fn(x):
-        diff = x[None, None, None, :] - centers       # (n, M, 2, d)
-        q = np.sum(diff * diff, axis=-1)
-        return float(np.mean(np.sum(np.max(q, axis=-1), axis=-1)))
-
-    return centers, grad_fn, eval_fn
+    return centers, prob.grad_fn, prob.eval_fn
 
 
 def centralized_optimum(centers: np.ndarray, iters: int = 800) -> float:
-    """Reference F* via centralized subgradient descent on the mean
-    objective (mirrors NonsmoothQuadratics.optimum_value)."""
-    n, M, _, d = centers.shape
-
-    def full_grad(x):
-        diff = x[None, None, None, :] - centers
-        q = np.sum(diff * diff, axis=-1)
-        pick = np.argmax(q, axis=-1)
-        chosen = np.take_along_axis(diff, pick[..., None, None],
-                                    axis=2)[:, :, 0]
-        return 2.0 * np.sum(chosen, axis=(0, 1)) / n
-
-    def value(x):
-        diff = x[None, None, None, :] - centers
-        q = np.sum(diff * diff, axis=-1)
-        return float(np.mean(np.sum(np.max(q, axis=-1), axis=-1)))
-
-    x = np.zeros(d)
-    best = value(x)
-    lr0 = 1.0 / (4.0 * M)
-    for t in range(1, iters + 1):
-        x = x - (lr0 / math.sqrt(t)) * full_grad(x)
-        if t % 50 == 0:
-            best = min(best, value(x))
-    return best
+    """Deprecated shim for
+    `repro.experiments.components.nonsmooth_centralized_optimum`."""
+    return nonsmooth_centralized_optimum(centers, iters)
 
 
-def run_cell(scenario, grad_fn, eval_fn, d, schedule, T, eval_every, seed,
-             a_scale, algorithm="dda"):
-    a_fn = (lambda t: a_scale / math.sqrt(max(t, 1.0)))
-    sim = NetSimulator(scenario, grad_fn, eval_fn, a_fn=a_fn,
-                       schedule=schedule, algorithm=algorithm, seed=seed)
-    trace = sim.run(np.zeros((scenario.n, d)), T, eval_every=eval_every)
-    return sim, trace
+def _schedule_component(kind: str, h: int) -> dict:
+    return {"kind": kind, "params": ({"h": h} if kind == "periodic" else {})}
+
+
+def cell_spec(args, *, scenario: str, knobs: dict,
+              schedule_kind: str | None = None) -> ExperimentSpec:
+    """One (scenario, schedule) grid cell as a declarative spec."""
+    a_scale = 1.0 / (4.0 * args.M)  # empirical stepsize, as in fig2_sparse
+    algorithm = "pushsum" if args.pushsum else "dda"
+    return ExperimentSpec(
+        name=f"fig_async_{scenario}",
+        problem={"kind": "nonsmooth",
+                 "params": {"n": args.n, "M": args.M, "d": args.d,
+                            "seed": args.seed}},
+        topology={"kind": "expander",
+                  "params": {"k": args.k, "seed": args.seed}},
+        schedule=_schedule_component(schedule_kind or args.schedule, args.h),
+        backends=[{"kind": "netsim",
+                   "params": {"scenario": scenario,
+                              "algorithm": algorithm, **knobs}}],
+        stepsize={"kind": "inv_sqrt", "params": {"A": a_scale}},
+        T=args.T, eval_every=args.eval_every, seed=args.seed, r=args.r,
+        eps_frac=0.05)  # 5% of the initial gap, as the paper reads Fig. 1
+
+
+def _scenario_for(loss_p: float, factor: float) -> tuple[str, dict]:
+    if factor > 1.0 and loss_p > 0.0:
+        return "adversarial", {"loss": loss_p, "slow_factor": factor}
+    if factor > 1.0:
+        return "straggler", {"slow_factor": factor}
+    if loss_p > 0.0:
+        return "lossy", {"loss": loss_p}
+    return "homogeneous", {}
 
 
 def main(argv=None) -> int:
@@ -121,55 +117,35 @@ def main(argv=None) -> int:
                     help="run the acceptance check and exit")
     args = ap.parse_args(argv)
 
-    n, d = args.n, args.d
-    centers, grad_fn, eval_fn = build_problem(n, args.M, d, args.seed)
-    fstar = centralized_optimum(centers)
-    f0 = eval_fn(np.zeros(d))
-    eps_value = fstar + 0.05 * (f0 - fstar)   # 5% of the initial gap
-    schedule = make_schedule(args.schedule, h=args.h)
-    algorithm = "pushsum" if args.pushsum else "dda"
-    # empirical stepsize: the bound-optimal A is too conservative at these
-    # sizes; one global multiplier, as in fig2_sparse
-    a_scale = 1.0 / (4.0 * args.M)
-    common = dict(d=d, schedule=schedule, T=args.T,
-                  eval_every=args.eval_every, seed=args.seed,
-                  a_scale=a_scale, algorithm=algorithm)
-
     if args.smoke:
-        return smoke(args, grad_fn, eval_fn, eps_value, common)
+        return smoke(args)
 
+    from repro.experiments.components import topologies
+    # the ACTUAL degree, not args.k: kregular_expander silently returns the
+    # complete graph (degree n-1) whenever n <= k
+    degree = topologies.build("expander", n=args.n, k=args.k,
+                              seed=args.seed).degree
     print("scenario,loss,straggler,tta,final_F,r_emp,tau_model,drop_rate")
     for loss_p in args.loss:
         for factor in args.straggler:
-            if factor > 1.0 and loss_p > 0.0:
-                sc = dataclasses.replace(
-                    lossy(n, args.r, loss=loss_p, k=args.k, seed=args.seed),
-                    name=f"lossy{loss_p:g}_strag{factor:g}",
-                    node_specs=straggler(n, args.r, slow_factor=factor,
-                                         k=args.k, seed=args.seed).node_specs)
-            elif factor > 1.0:
-                sc = straggler(n, args.r, slow_factor=factor, k=args.k,
-                               seed=args.seed)
-            elif loss_p > 0.0:
-                sc = lossy(n, args.r, loss=loss_p, k=args.k, seed=args.seed)
-            else:
-                sc = homogeneous(n, args.r, k=args.k, seed=args.seed)
-            sim, trace = run_cell(sc, grad_fn, eval_fn, **common)
-            tta = sim.time_to_reach(trace, eps_value)
-            m = sim.measure_r_empirical()
+            scenario, knobs = _scenario_for(loss_p, factor)
+            res = run_spec(cell_spec(args, scenario=scenario, knobs=knobs))
+            tr = res.trace
+            tta = (math.inf if res.time_to_target is None
+                   else res.time_to_target)
+            m = res.r_measurement
             # flat-model wall clock for the empirically needed iterations
-            T_eps = next((it for it, f in zip(trace.iters, trace.fvals)
-                          if f <= eps_value), None)
-            g = sim.net.graph
-            tau_model = (T_eps * iteration_cost(n, g.degree, m.r)
+            T_eps = next((it for it, f in zip(tr.iters, tr.fvals)
+                          if f <= res.eps_value), None)
+            tau_model = (T_eps * iteration_cost(args.n, degree, m.r)
                          if T_eps else float("inf"))
-            print(f"{sc.name},{loss_p:g},{factor:g},{tta:.3f},"
-                  f"{trace.fvals[-1]:.3f},{m.r:.5f},{tau_model:.3f},"
-                  f"{m.drop_rate:.3f}")
+            print(f"{res.extras['scenario']},{loss_p:g},{factor:g},"
+                  f"{tta:.3f},{tr.fvals[-1]:.3f},{m.r:.5f},"
+                  f"{tau_model:.3f},{m.drop_rate:.3f}")
     return 0
 
 
-def smoke(args, grad_fn, eval_fn, eps_value, common) -> int:
+def smoke(args) -> int:
     """Acceptance: lossless homogeneous event trace matches the flat time
     model (eq. 9/10) within 15%; lossy + straggler are strictly slower.
 
@@ -179,35 +155,36 @@ def smoke(args, grad_fn, eval_fn, eps_value, common) -> int:
     every iteration, so --schedule/--pushsum are pinned here rather than
     silently producing a spurious FAIL.
     """
-    if (not isinstance(common["schedule"], EveryIteration)
-            or common["algorithm"] != "dda"):
+    if args.schedule != "every" or args.pushsum:
         print("[smoke] note: acceptance check runs with --schedule every "
               "and stale-gossip dda; ignoring other flags")
-        common = {**common, "schedule": make_schedule("every"),
-                  "algorithm": "dda"}
+        args = argparse.Namespace(**{**vars(args), "schedule": "every",
+                                     "pushsum": False})
     n = args.n
-    sc0 = homogeneous(n, args.r, k=args.k, seed=args.seed)
-    sim0, tr0 = run_cell(sc0, grad_fn, eval_fn, **common)
-    tta0 = sim0.time_to_reach(tr0, eps_value)
+    res0 = run_spec(cell_spec(args, scenario="homogeneous", knobs={}))
+    tr0 = res0.trace
+    tta0 = (math.inf if res0.time_to_target is None else res0.time_to_target)
     T_eps = next((it for it, f in zip(tr0.iters, tr0.fvals)
-                  if f <= eps_value), None)
+                  if f <= res0.eps_value), None)
     ok = True
     if T_eps is None or not math.isfinite(tta0):
-        print(f"[smoke] FAIL: homogeneous run never reached eps={eps_value:.3f}"
-              f" (final F {tr0.fvals[-1]:.3f})")
+        print(f"[smoke] FAIL: homogeneous run never reached "
+              f"eps={res0.eps_value:.3f} (final F {tr0.fvals[-1]:.3f})")
         return 1
 
     # express the model's wall clock through time_to_accuracy: pick the
     # eps whose iteration count T = (C/eps)^2 equals the observed T_eps,
     # so the comparison isolates the TIME AXIS (the netsim's claim), not
     # the conservatism of the bound constants
-    g = sim0.net.graph
+    from repro.experiments.components import topologies
+    schedule = make_schedule("every")
+    g = topologies.build("expander", n=n, k=args.k, seed=args.seed)
     lam2 = g.lambda2()
-    m = sim0.measure_r_empirical()
-    C = common["schedule"].constant(1.0, 1.0, lam2)
+    m = res0.r_measurement
+    C = schedule.constant(1.0, 1.0, lam2)
     eps_eff = C / math.sqrt(T_eps)
     tau_pred = time_to_accuracy(eps_eff, n, g.degree, m.r, lam2,
-                                schedule=common["schedule"])
+                                schedule=schedule)
     rel = abs(tta0 - tau_pred) / tau_pred
     line = (f"[smoke] homogeneous: tta={tta0:.3f} model tau={tau_pred:.3f} "
             f"rel_err={rel:.3%} r_emp={m.r:.5f} (configured {args.r:g})")
@@ -216,15 +193,13 @@ def smoke(args, grad_fn, eval_fn, eps_value, common) -> int:
         line += "  FAIL(>15%)"
     print(line)
 
-    for name, sc in [
-        ("lossy", lossy(n, args.r, loss=0.2, k=args.k, seed=args.seed)),
-        ("straggler", straggler(n, args.r, slow_factor=4.0, k=args.k,
-                                seed=args.seed)),
-    ]:
-        sim, tr = run_cell(sc, grad_fn, eval_fn, **common)
-        tta = sim.time_to_reach(tr, eps_value)
+    for scenario, knobs in [("lossy", {"loss": 0.2}),
+                            ("straggler", {"slow_factor": 4.0})]:
+        res = run_spec(cell_spec(args, scenario=scenario, knobs=knobs))
+        tta = (math.inf if res.time_to_target is None
+               else res.time_to_target)
         slower = tta > tta0
-        print(f"[smoke] {name}: tta={tta:.3f} vs homogeneous {tta0:.3f} "
+        print(f"[smoke] {scenario}: tta={tta:.3f} vs homogeneous {tta0:.3f} "
               f"{'slower OK' if slower else 'FAIL(not slower)'}")
         ok = ok and slower
 

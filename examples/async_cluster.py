@@ -1,6 +1,6 @@
 """[beyond paper] Asynchronous cluster simulation with empirical r recovery.
 
-    PYTHONPATH=src:. python examples/async_cluster.py
+    PYTHONPATH=src python examples/async_cluster.py
 
 Runs the paper's non-smooth problem (section V.B) on a simulated 8-node
 expander cluster under four conditions -- ideal, 20% packet loss, one 4x
@@ -8,45 +8,59 @@ straggler, and a topology rewired every 2 time units -- then closes the
 loop the way the paper does on its real cluster: measure r from the
 observed event timeline and derive n_opt (eq. 11), h_opt (eq. 21) and
 tau(eps) (eq. 10) from the measurement.
+
+Each condition is the SAME declarative spec with a different netsim
+scenario component -- `repro.run()` returns the trace, the RMeasurement
+and the closed-loop predictions in one `RunResult`.
 """
 
-import numpy as np
+import math
 
-from benchmarks.fig_async import (build_problem, centralized_optimum,
-                                  run_cell)
-from repro.core import EveryIteration
-from repro.netsim import (homogeneous, lossy, straggler,
-                          time_varying_expander)
+import repro
+from repro.experiments.components import problems
 
 
 def main():
     n, M, d, r, T = 8, 30, 20, 0.01, 1000
-    centers, grad_fn, eval_fn = build_problem(n, M, d, seed=0)
-    fstar = centralized_optimum(centers)
-    f0 = eval_fn(np.zeros(d))
-    eps_value = fstar + 0.05 * (f0 - fstar)
-    common = dict(d=d, schedule=EveryIteration(), T=T, eval_every=2,
-                  seed=0, a_scale=1.0 / (4.0 * M))
+    a_scale = 1.0 / (4.0 * M)
+    base = repro.ExperimentSpec(
+        name="async_cluster",
+        problem={"kind": "nonsmooth",
+                 "params": {"n": n, "M": M, "d": d, "seed": 0}},
+        topology={"kind": "expander", "params": {"k": 4, "seed": 0}},
+        schedule={"kind": "every"},
+        backends=[{"kind": "netsim", "params": {"scenario": "homogeneous"}}],
+        stepsize={"kind": "inv_sqrt", "params": {"A": a_scale}},
+        T=T, eval_every=2, seed=0, r=r, eps_frac=0.05)
 
-    scenarios = [
-        homogeneous(n, r, seed=0),
-        lossy(n, r, loss=0.2, seed=0),
-        straggler(n, r, slow_factor=4.0, seed=0),
-        time_varying_expander(n, r, rewire_every=2.0, seed=0),
+    conditions = [
+        {"scenario": "homogeneous"},
+        {"scenario": "lossy", "loss": 0.2},
+        {"scenario": "straggler", "slow_factor": 4.0},
+        {"scenario": "time_varying", "rewire_every": 2.0},
     ]
-    print(f"F* = {fstar:.2f}; time-to-5%-gap target F <= {eps_value:.2f}\n")
-    sims = []
-    for sc in scenarios:
-        sim, trace = run_cell(sc, grad_fn, eval_fn, **common)
-        sims.append(sim)
-        tta = sim.time_to_reach(trace, eps_value)
-        print(f"{sc.name:18s} tta={tta:8.2f}  final_F={trace.fvals[-1]:8.2f} "
-              f"comms={trace.comms[-1]:4d}  rewires={sim.rewires}")
+    prob = problems.build("nonsmooth", n=n, M=M, d=d, seed=0)
+    eps_value = prob.eps_value(0.05)
+    print(f"F* = {prob.fstar:.2f}; time-to-5%-gap target "
+          f"F <= {eps_value:.2f}\n")
+    results = []
+    for cond in conditions:
+        spec = base.with_value("backends.0.params", dict(cond))
+        if cond["scenario"] == "time_varying":
+            spec = spec.with_value("topology.kind", "expander_sequence")
+        res = repro.run(spec)
+        results.append(res)
+        tta = (math.inf if res.time_to_target is None
+               else res.time_to_target)
+        print(f"{res.extras['scenario']:18s} tta={tta:8.2f}  "
+              f"final_F={res.trace.fvals[-1]:8.2f} "
+              f"comms={res.trace.comms[-1]:4d}  "
+              f"rewires={res.extras['rewires']}")
 
     # closed loop: measured r -> the paper's design rules (the homogeneous
-    # run above already holds the observed timeline)
-    pred = sims[0].predict(eps=0.1)
-    m = pred["measurement"]
+    # run's RunResult already carries the measurement and the predictions)
+    pred = results[0].predictions
+    m = results[0].r_measurement
     print(f"\nempirical r = {pred['r_empirical']:.5f} "
           f"(t_msg={m.t_msg:.4f}, t_grad_full={m.t_grad_full:.4f}, "
           f"{m.n_messages} msgs)")

@@ -1,63 +1,63 @@
-"""Quickstart: distributed dual averaging on a convex problem, comparing
-communication topologies and schedules in the paper's time model.
+"""Quickstart: one declarative spec, swept across topologies and schedules.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Solves a distributed least-squares problem with 16 consensus nodes and
-prints time-to-accuracy for complete graph vs k-regular expander vs ring,
-at h=1 and with the paper's increasingly-sparse t^0.3 schedule.
+Solves a distributed least-squares problem with 16 consensus nodes through
+the unified experiment API (`repro.ExperimentSpec` -> `repro.run()`),
+printing time-to-accuracy for complete graph vs k-regular expander vs ring,
+at h=1 and with the paper's increasingly-sparse t^0.3 schedule. The grid is
+two `run_sweep` calls over the same base spec -- compare with the
+hand-wired loops this file had before the experiments API existed.
 """
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (DDASimulator, EveryIteration, IncreasinglySparse,
-                        build_graph, h_opt_int, n_opt_complete)
+import repro
+from repro.core import h_opt_int, n_opt_complete
+from repro.core.dda import trace_time_to_reach
+from repro.experiments.components import problems, topologies
 
 
 def main():
-    n, d, m_per_node = 16, 64, 200
-    rng = np.random.default_rng(0)
-    # node-specific least squares: f_i(x) = ||A_i x - b_i||^2, solutions
-    # differ per node so consensus is required.
-    A = jnp.asarray(rng.normal(size=(n, m_per_node, d)) / np.sqrt(d))
-    x_true = jnp.asarray(rng.normal(size=(d,)))
-    b = jnp.einsum("nmd,d->nm", A, x_true) + jnp.asarray(
-        rng.normal(scale=0.1 + 0.5 * rng.random((n, 1)),
-                   size=(n, m_per_node)))
+    n, d, m_per_node, seed = 16, 64, 200, 0
+    r = 0.02  # assumed comm/compute tradeoff for this demo
 
-    def subgrad(x_stack, t, key):
-        res = jnp.einsum("nmd,nd->nm", A, x_stack) - b
-        return 2.0 * jnp.einsum("nmd,nm->nd", A, res)
-
-    def objective(x):
-        res = jnp.einsum("nmd,d->nm", A, x) - b
-        return jnp.mean(jnp.sum(res * res, axis=1))
-
-    # centralized optimum for the accuracy target
-    Af = np.asarray(A).reshape(n * m_per_node, d)
-    bf = np.asarray(b).reshape(-1)
-    x_star, *_ = np.linalg.lstsq(Af, bf, rcond=None)
-    f_star = float(objective(jnp.asarray(x_star)))
+    # build the problem once (the registry is deterministic: the specs
+    # below rebuild the exact same instance per run) to derive the target
+    # and the paper's stepsize scale A = R/(L sqrt(31)) from measured L
+    prob = problems.build("least_squares", n=n, d=d,
+                          m_per_node=m_per_node, seed=seed)
+    f_star = prob.fstar
     target = 1.5 * f_star
-    # stepsize: the paper's A = R/(L sqrt(31)) scale with measured L
-    g0 = subgrad(jnp.zeros((n, d)), 0, None)
+    g0 = prob.subgrad_stack(jnp.zeros((n, d)), 0, None)
     L = float(jnp.mean(jnp.linalg.norm(g0, axis=1)))
     A_scale = 24.0 / (L * np.sqrt(31.0))
-    r = 0.02  # assumed comm/compute tradeoff for this demo
     print(f"r={r} -> n_opt(complete)={n_opt_complete(r):.1f}, "
           f"h_opt(n=16,k=4 expander)={h_opt_int(16, 4, r, 0.36)}; "
           f"F*={f_star:.2f}")
 
-    for topo in ("complete", "expander4", "ring"):
-        for sched_name, sched in (("h1", EveryIteration()),
-                                  ("t^0.3", IncreasinglySparse(p=0.3))):
-            g = build_graph(topo, n)
-            sim = DDASimulator(subgrad, jax.jit(objective), g, sched,
-                               a_fn=lambda t: A_scale / jnp.sqrt(t), r=r)
-            tr = sim.run(jnp.zeros((n, d)), 800, eval_every=50)
-            tta = sim.time_to_reach(tr, target)
+    base = repro.ExperimentSpec(
+        name="quickstart",
+        problem={"kind": "least_squares",
+                 "params": {"n": n, "d": d, "m_per_node": m_per_node,
+                            "seed": seed}},
+        topology={"kind": "complete"},
+        schedule={"kind": "every"},
+        backends=[{"kind": "dense"}],
+        stepsize={"kind": "sqrt", "params": {"A": A_scale}},
+        T=800, eval_every=50, seed=seed, r=r)
+
+    for topo in ("complete", "expander", "ring"):
+        spec_t = base.with_value("topology.kind", topo)
+        g = topologies.build(topo, n=n)
+        for sched_name, sched in (("h1", {"kind": "every"}),
+                                  ("t^0.3", {"kind": "sparse",
+                                             "params": {"p": 0.3}})):
+            res = repro.run(repro.ExperimentSpec.from_dict(
+                {**spec_t.to_dict(), "schedule": sched}))
+            tr = res.trace
+            tta = trace_time_to_reach(tr, target)
             print(f"{topo:10s} {sched_name:6s} k={g.degree:2d} "
                   f"lam2={g.lambda2():.3f} comms={tr.comms[-1]:4d} "
                   f"time_to_1.5F*={tta:8.2f} final_F={tr.fvals[-1]:.4f}")

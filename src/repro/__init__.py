@@ -1,0 +1,26 @@
+"""repro: reproduction of "Communication/Computation Tradeoffs in
+Consensus-Based Distributed Optimization", grown into a multi-backend
+JAX system.
+
+The package root re-exports the experiment API lazily (PEP 562), so
+`import repro; repro.run(spec)` works without paying the full experiment
+stack on `import repro.core`-style imports.
+"""
+
+_EXPERIMENT_API = (
+    "ComponentSpec",
+    "ExperimentSpec",
+    "RunResult",
+    "run",
+    "run_all",
+    "run_sweep",
+)
+
+__all__ = list(_EXPERIMENT_API)
+
+
+def __getattr__(name):
+    if name in _EXPERIMENT_API:
+        from repro import experiments
+        return getattr(experiments, name)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")

@@ -27,13 +27,15 @@ clusters the closed loop beats every fixed Periodic(h) in a swept grid on
 simulated wall-clock to target accuracy.
 """
 
-from repro.adaptive.controller import AdaptiveController, StragglerReweighter
+from repro.adaptive.controller import (AdaptiveController, DenseController,
+                                       StragglerReweighter)
 from repro.adaptive.rtracker import DenseRTracker, RTracker
 from repro.adaptive.schedule import AdaptiveSchedule, Retune
 
 __all__ = [
     "AdaptiveController",
     "AdaptiveSchedule",
+    "DenseController",
     "DenseRTracker",
     "RTracker",
     "Retune",

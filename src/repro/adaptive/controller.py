@@ -32,7 +32,7 @@ from repro.core.tradeoff import lambda2_fast
 from repro.runtime.fault_tolerance import (arrival_reweighted_matrix,
                                            sinkhorn_project)
 
-__all__ = ["AdaptiveController", "StragglerReweighter"]
+__all__ = ["AdaptiveController", "DenseController", "StragglerReweighter"]
 
 
 class StragglerReweighter:
@@ -123,16 +123,25 @@ class AdaptiveController:
     def __init__(self, schedule: AdaptiveSchedule | None = None,
                  update_every: float = 0.5, halflife: float = 64.0,
                  r0: float | None = None, reweight: bool = True,
-                 warmup_messages: int = 8, warmup_steps: int = 8):
+                 warmup_messages: int = 8, warmup_steps: int = 8,
+                 reweight_gossip: bool = False):
         self.schedule = schedule if schedule is not None else AdaptiveSchedule()
         if not isinstance(self.schedule, AdaptiveSchedule):
             raise TypeError("AdaptiveController needs an AdaptiveSchedule")
         if update_every <= 0.0:
             raise ValueError("update_every must be positive")
+        if reweight_gossip and not reweight:
+            raise ValueError("reweight_gossip needs reweight=True (the "
+                             "effective P comes from the StragglerReweighter)")
         self.update_every = update_every
         self.halflife = halflife
         self.r0 = r0
         self.reweight = reweight
+        # Apply the reweighter's effective P to the ACTUAL stale-gossip
+        # mixing (Network.mix_weights), not just to the lambda2 estimate
+        # h_opt is solved against. Stale-gossip DDA only: push-sum's mass
+        # splitting is its own weighting scheme (NetSimulator validates).
+        self.reweight_gossip = reweight_gossip
         self.warmup_messages = warmup_messages
         self.warmup_steps = warmup_steps
         self.tracker: RTracker | None = None
@@ -157,6 +166,9 @@ class AdaptiveController:
                            if self.reweight else None)
         self._lam2_cache = None
         self._graph = net.graph
+        self._net = net
+        if self.reweight_gossip:
+            net.mix_weights = None  # fresh run: no weights learned yet
         self._next_update = self.update_every
         self.schedule.reset()
 
@@ -171,6 +183,10 @@ class AdaptiveController:
         self._k = graph.degree
         if self.reweighter is not None:
             self.reweighter.set_graph(graph)
+        if self.reweight_gossip:
+            # the learned P refers to the OLD edge set; fall back to the
+            # configured uniform weights until the next retune relearns it
+            self._net.mix_weights = None
 
     def retune_due(self, now: float) -> bool:
         """Cheap cadence test so engines only compute the (O(n)) iteration
@@ -219,7 +235,9 @@ class AdaptiveController:
         if cut <= self.schedule.segments[-1][0]:
             return None  # see docstring: wait for the frontier to catch up
         if self.reweighter is not None:
-            _, lam2 = self.reweighter.update(self.tracker.step_means)
+            P_eff, lam2 = self.reweighter.update(self.tracker.step_means)
+            if self.reweight_gossip:
+                self._net.mix_weights = P_eff
         else:
             lam2 = self._static_lam2()
         changed = self.schedule.retune(cut, self._n, self._k, r_hat, lam2)
@@ -231,3 +249,82 @@ class AdaptiveController:
             hit = (self._graph, self._graph.lambda2())
             self._lam2_cache = hit
         return hit[1]
+
+
+class DenseController:
+    """Wall-clock twin of `AdaptiveController` for the dense synchronous
+    mode (`DDASimulator` segments, or a real shard_map launcher step).
+
+    The dense mode has no event timeline -- only whole-iteration wall-clock
+    durations -- so the measure half is `DenseRTracker` (inverts the eq. 9
+    cost model from comm vs plain iteration timings) and there is no
+    straggler reweighting (every node IS the same host). The act half is the
+    same `AdaptiveSchedule` splice protocol; the driver
+    (`repro.experiments.runner`, dense backend) times uniform-comm chunks,
+    feeds `observe`, and calls `maybe_retune(frontier)` at trace-segment
+    boundaries, where `frontier` is the number of iterations already
+    executed -- the synchronous analogue of the netsim's in-flight frontier.
+
+    Args:
+      schedule: the AdaptiveSchedule the run shares.
+      halflife: DenseRTracker EW window, in observed iterations.
+      retune_every: minimum iterations between accepted retunes (None =
+        retune whenever the driver asks).
+      warmup_comm / warmup_plain: minimum timed iterations of each kind
+        before the first retune (one noisy jit-compile segment would
+        otherwise set h). warmup_plain defaults to 1 because an h0 = 1
+        cold start has exactly ONE plain iteration (t = 1) until the first
+        retune raises h -- a larger default would deadlock the loop.
+    """
+
+    def __init__(self, schedule: AdaptiveSchedule | None = None,
+                 halflife: float = 32.0, retune_every: int | None = None,
+                 warmup_comm: int = 2, warmup_plain: int = 1):
+        self.schedule = schedule if schedule is not None else AdaptiveSchedule()
+        if not isinstance(self.schedule, AdaptiveSchedule):
+            raise TypeError("DenseController needs an AdaptiveSchedule")
+        if retune_every is not None and retune_every < 1:
+            raise ValueError("retune_every must be >= 1")
+        self.halflife = halflife
+        self.retune_every = retune_every
+        self.warmup_comm = warmup_comm
+        self.warmup_plain = warmup_plain
+        self.tracker = None
+        self._lam2 = 0.0
+        self._n = 0
+        self._k = 0
+        self._last_retune_t = 0
+
+    def bind(self, n: int, k: int, lam2: float) -> None:
+        """Attach to a run's graph; resets the window and splice history."""
+        from repro.adaptive.rtracker import DenseRTracker
+        self._n, self._k, self._lam2 = n, max(k, 1), float(lam2)
+        self.tracker = DenseRTracker(n, max(k, 1), halflife=self.halflife)
+        self._last_retune_t = 0
+        self.schedule.reset()
+
+    def observe(self, wall_seconds: float, was_comm: bool) -> None:
+        self.tracker.observe_iteration(wall_seconds, was_comm)
+
+    def maybe_retune(self, frontier: int) -> bool:
+        """Re-solve h_opt from the streamed wall-clock r_hat and splice at
+        `frontier` (iterations already executed; the splice only shapes the
+        future). Returns True when the emitted pattern changed."""
+        if (self.tracker is None
+                or self.tracker.n_comm < self.warmup_comm
+                or self.tracker.n_plain < self.warmup_plain):
+            return False
+        if (self.retune_every is not None
+                and frontier - self._last_retune_t < self.retune_every):
+            return False
+        r_hat = self.tracker.r_hat
+        if r_hat is None:
+            return False
+        cut = int(frontier)
+        if cut <= self.schedule.segments[-1][0]:
+            return False  # same append-only guard as the netsim controller
+        changed = self.schedule.retune(cut, self._n, self._k, r_hat,
+                                       self._lam2)
+        if changed:
+            self._last_retune_t = cut
+        return changed

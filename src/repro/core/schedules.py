@@ -356,14 +356,35 @@ class PiecewisePeriodic(CommSchedule):
         return ch_constant(L, R, lam2, self.h_current)
 
 
-def make_schedule(kind: str, *, h: int = 1, p: float = 0.3) -> CommSchedule:
-    if kind in ("every", "h1"):
-        return EveryIteration()
-    if kind == "periodic":
-        return Periodic(h=h)
-    if kind == "sparse":
-        return IncreasinglySparse(p=p)
-    raise ValueError(f"unknown schedule {kind!r}")
+def make_schedule(kind: str, *, h: int | None = None,
+                  p: float | None = None, **kwargs) -> CommSchedule:
+    """Build a schedule by kind -- a thin shim over the
+    `repro.experiments.components.schedules` registry.
+
+    The ad-hoc kind branching that used to live here is deprecated: it
+    could not construct `PiecewisePeriodic` (or `repro.adaptive`'s
+    AdaptiveSchedule), and every new schedule needed an edit in two places.
+    Now the registry is the single source of kinds ("every"/"h1",
+    "periodic", "sparse", "piecewise", "adaptive", ...). This function only
+    preserves the legacy calling convention: callers may pass both `h` and
+    `p` and each kind takes what it accepts (`make_schedule("every",
+    h=args.h)` stays legal, as the benchmark CLIs rely on), with the
+    registry builders' own defaults (h=1, p=0.3) when omitted. Any OTHER
+    kwarg is forwarded verbatim, so typos fail loudly. New code should use
+    the registry (or an ExperimentSpec schedule component) directly.
+    """
+    from repro.experiments.components import schedules as _registry
+    try:
+        name = _registry.canonical(kind)
+    except KeyError as e:  # legacy contract: unknown kind is a ValueError
+        raise ValueError(str(e)) from None
+    legacy = {}
+    if h is not None:
+        legacy["h"] = h
+    if p is not None:
+        legacy["p"] = p
+    legacy = _registry.accepted(name, legacy)
+    return _registry.build(name, **legacy, **kwargs)
 
 
 # ---------------------------------------------------------------------------

@@ -117,6 +117,13 @@ def time_to_accuracy(
     if isinstance(schedule, _sched.Periodic):
         T = (C / eps) ** 2
         return T * (1.0 / n + k * r / schedule.h)
+    if isinstance(schedule, _sched.PiecewisePeriodic):
+        # a spliced schedule's true tau is segment-dependent; quote the
+        # pattern it is emitting NOW (h_current), consistent with
+        # PiecewisePeriodic.constant -- this is the controller's working
+        # prediction, refreshed every retune
+        T = (C / eps) ** 2
+        return T * (1.0 / n + k * r / schedule.h_current)
     if isinstance(schedule, _sched.IncreasinglySparse):
         p = schedule.p
         if p >= 0.5:

@@ -1,0 +1,54 @@
+"""One experiment API: declarative `ExperimentSpec` -> `repro.run()`.
+
+The paper's whole point is comparing ONE algorithm across regimes -- n,
+k-regular expander vs complete graph, schedule h(t), measured tradeoff r --
+yet the repo grew three execution modes with three incompatible front doors
+(dense `DDASimulator`, event-driven `NetSimulator`, the shard_map
+launcher). This package makes the comparison declarative:
+
+    import repro
+
+    spec = repro.ExperimentSpec(
+        name="expander_periodic",
+        problem={"kind": "quadratic_consensus",
+                 "params": {"n": 16, "d": 10}},
+        topology={"kind": "expander", "params": {"k": 4}},
+        schedule={"kind": "periodic", "params": {"h": 2}},
+        backends=[{"kind": "netsim", "params": {"scenario": "homogeneous",
+                                                "engine": "auto"}}],
+        stepsize={"kind": "inv_sqrt", "params": {"A": 0.5}},
+        T=2000, eval_every=5, r=0.05, eps_frac=0.02)
+
+    result = repro.run(spec)                     # -> RunResult
+    grid = repro.run_sweep(spec, "schedule.params.h", [1, 2, 4, 8])
+
+Components resolve through string-keyed registries (problems, topologies,
+schedules, stepsizes, backends), specs round-trip through JSON exactly
+(checked-in manifests under benchmarks/manifests/ ARE the experiments), and
+every backend returns the same canonical `RunResult` (trace + wall-clock +
+empirical r + the paper's h_opt/n_opt/tau predictions).
+"""
+
+from repro.experiments.components import (LMProblem, Problem, problems,
+                                          schedules, stepsizes, topologies)
+from repro.experiments.registry import Registry
+from repro.experiments.result import RunResult
+from repro.experiments.runner import backends, run, run_all, run_sweep
+from repro.experiments.spec import ComponentSpec, ExperimentSpec
+
+__all__ = [
+    "ComponentSpec",
+    "ExperimentSpec",
+    "LMProblem",
+    "Problem",
+    "Registry",
+    "RunResult",
+    "backends",
+    "problems",
+    "run",
+    "run_all",
+    "run_sweep",
+    "schedules",
+    "stepsizes",
+    "topologies",
+]

@@ -1,0 +1,92 @@
+"""CLI: run checked-in experiment manifests.
+
+    PYTHONPATH=src python -m repro.experiments run benchmarks/manifests/complete_every.json \
+        [--backend netsim] [--out results/run_smoke]
+    PYTHONPATH=src python -m repro.experiments list
+
+`run` executes the manifest on every backend it declares (or just
+`--backend`), prints one summary line per run, and (with --out) writes each
+`RunResult` as `<out>/<spec.name>__<backend-kind>[-<engine>].json` -- the
+artifact the CI run-smoke job uploads. `list` prints the registries, i.e.
+every kind a manifest may name.
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+from repro.experiments import (ExperimentSpec, backends, problems, run,
+                               schedules, stepsizes, topologies)
+
+
+def _result_tag(result) -> str:
+    tag = result.backend.kind
+    engine = result.backend.params.get("engine") or result.extras.get("engine")
+    if result.backend.kind == "netsim" and engine:
+        tag += f"-{engine}"
+    if result.backend.params.get("dryrun"):
+        tag += "-dryrun"
+    return tag
+
+
+def _cmd_run(args) -> int:
+    spec = ExperimentSpec.from_file(args.manifest)
+    targets = (spec.backends if args.backend is None
+               else [b for b in spec.backends if b.kind == args.backend])
+    if not targets:
+        print(f"[experiments] manifest {spec.name!r} declares no backend "
+              f"{args.backend!r} (has {[b.kind for b in spec.backends]})")
+        return 2
+    out_dir = pathlib.Path(args.out) if args.out else None
+    if out_dir is not None:
+        out_dir.mkdir(parents=True, exist_ok=True)
+    tags_used: dict[str, int] = {}
+    for backend in targets:
+        result = run(spec, backend=backend)
+        final = result.trace.fvals[-1] if result.trace.fvals else None
+        tta = result.time_to_target
+        tag = _result_tag(result)
+        # two declared backends can share a tag (same kind+engine, params
+        # differing elsewhere); suffix instead of silently clobbering
+        n_seen = tags_used.get(tag, 0)
+        tags_used[tag] = n_seen + 1
+        if n_seen:
+            tag = f"{tag}-{n_seen + 1}"
+        print(f"[experiments] {spec.name} on {tag}: "
+              f"wall={result.wall_s:.2f}s "
+              f"final_F={'n/a' if final is None else f'{final:.4g}'} "
+              f"tta={'n/a' if tta is None else f'{tta:.4g}'}")
+        if out_dir is not None:
+            path = out_dir / f"{spec.name}__{tag}.json"
+            path.write_text(result.to_json())
+            print(f"[experiments] wrote {path}")
+    return 0
+
+
+def _cmd_list(_args) -> int:
+    for reg in (problems, topologies, schedules, stepsizes, backends):
+        print(f"{reg.kind} kinds: {', '.join(reg.names())}")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.experiments",
+                                 description=__doc__.split("\n")[0])
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    runp = sub.add_parser("run", help="run a spec manifest")
+    runp.add_argument("manifest", help="path to an ExperimentSpec JSON")
+    runp.add_argument("--backend", default=None,
+                      help="only this declared backend kind")
+    runp.add_argument("--out", default=None,
+                      help="directory for RunResult JSON artifacts")
+    runp.set_defaults(fn=_cmd_run)
+    listp = sub.add_parser("list", help="print the component registries")
+    listp.set_defaults(fn=_cmd_list)
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,363 @@
+"""Component registries: problems, topologies, schedules, stepsizes.
+
+Each registry maps a string kind + JSON-able kwargs (exactly what a
+`ComponentSpec` carries) to a built component. Problems bundle BOTH
+execution styles -- per-node numpy closures for the event-driven netsim and
+stacked jax closures for the dense simulator -- so one spec runs unchanged
+on every backend that can host its problem class.
+
+Bit-identity note: the numpy closures here are the exact code previously
+inlined in `benchmarks/fig_async.py` / `netsim.problems`, moved -- not
+rewritten -- so the migrated benchmark drivers reproduce their pre-redesign
+seeded traces bit-for-bit (gated in tests/test_experiments_migration.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.core import graphs as _graphs
+from repro.core import schedules as _sched
+from repro.core.dda import stepsize_sqrt
+from repro.experiments.registry import Registry
+from repro.netsim.problems import quadratic_consensus as _quadratic
+
+__all__ = [
+    "Problem",
+    "LMProblem",
+    "problems",
+    "topologies",
+    "schedules",
+    "stepsizes",
+]
+
+problems = Registry("problem")
+topologies = Registry("topology")
+schedules = Registry("schedule")
+stepsizes = Registry("stepsize")
+
+
+# ---------------------------------------------------------------------------
+# problems
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Problem:
+    """One distributed problem instance, in both execution styles.
+
+    netsim/dense front halves:
+      grad_fn:       per-node numpy `(i, x_i, t) -> g` (NetSimulator).
+      eval_fn:       numpy `x -> float` full objective (NetSimulator).
+      subgrad_stack: jax `(x_stack, t, key) -> g_stack` (DDASimulator).
+      objective:     jax `x -> scalar` full objective (DDASimulator).
+
+    `fstar_fn` computes (or looks up) the centralized optimum F*; it can be
+    expensive (subgradient descent for the non-smooth problem), so it is
+    called lazily and cached by `fstar`.
+    """
+
+    name: str
+    n: int
+    d: int
+    grad_fn: Callable[[int, np.ndarray, int], np.ndarray]
+    eval_fn: Callable[[np.ndarray], float]
+    subgrad_stack: Callable | None = None
+    objective: Callable | None = None
+    fstar_fn: Callable[[], float] | None = None
+    _fstar: float | None = dataclasses.field(default=None, repr=False)
+
+    @property
+    def fstar(self) -> float:
+        if self._fstar is None:
+            if self.fstar_fn is None:
+                raise ValueError(f"problem {self.name!r} has no known F*")
+            self._fstar = float(self.fstar_fn())
+        return self._fstar
+
+    def f0(self) -> float:
+        """F at the canonical start x0 = 0."""
+        return float(self.eval_fn(np.zeros(self.d)))
+
+    def eps_value(self, eps_frac: float) -> float:
+        """Accuracy target F* + eps_frac * (F(0) - F*)."""
+        return self.fstar + float(eps_frac) * (self.f0() - self.fstar)
+
+
+@dataclasses.dataclass(frozen=True)
+class LMProblem:
+    """Marker problem for the `launch` backend: the 'problem' is consensus
+    data-parallel LM training of a registry architecture, not a convex
+    objective -- dense/netsim backends reject it."""
+
+    arch: str
+    variant: str = "smoke"
+    batch_per_node: int = 8
+    seq_len: int = 64
+
+
+@problems.register("quadratic_consensus", aliases=("quadratic",))
+def _quadratic_problem(n: int, d: int, seed: int = 0,
+                       batchable: bool = False) -> Problem:
+    """`netsim.problems.quadratic_consensus` plus its dense jax half.
+    `batchable` selects the eval form exactly as the netsim tests/bench do
+    (the non-batchable form is what fig_adaptive's seeded traces used)."""
+    centers, grad_fn, eval_fn = _quadratic(n, d, seed=seed,
+                                           batchable=batchable)
+    cbar = centers.mean(axis=0)
+    spread = float(np.mean(np.sum(centers ** 2, axis=1))
+                   - np.sum(cbar ** 2))
+
+    import jax.numpy as jnp
+    centers_j = jnp.asarray(centers)
+    cbar_j = jnp.asarray(cbar)
+
+    def subgrad_stack(x_stack, t, key):
+        return 2.0 * (x_stack - centers_j)
+
+    def objective(x):
+        return jnp.sum((x - cbar_j) ** 2) + spread
+
+    return Problem(name="quadratic_consensus", n=n, d=d,
+                   grad_fn=grad_fn, eval_fn=eval_fn,
+                   subgrad_stack=subgrad_stack, objective=objective,
+                   fstar_fn=lambda: float(eval_fn(centers.mean(axis=0))))
+
+
+def _nonsmooth_centers(n: int, M: int, d: int, seed: int) -> np.ndarray:
+    from repro.data.pipeline import nonsmooth_quadratic_problem
+    return nonsmooth_quadratic_problem(n, M, d, seed,
+                                       center_scale=1.5).astype(np.float64)
+
+
+def nonsmooth_centralized_optimum(centers: np.ndarray,
+                                  iters: int = 800) -> float:
+    """Reference F* via centralized subgradient descent on the mean
+    objective (moved verbatim from benchmarks/fig_async.py; mirrors
+    NonsmoothQuadratics.optimum_value)."""
+    n, M, _, d = centers.shape
+
+    def full_grad(x):
+        diff = x[None, None, None, :] - centers
+        q = np.sum(diff * diff, axis=-1)
+        pick = np.argmax(q, axis=-1)
+        chosen = np.take_along_axis(diff, pick[..., None, None],
+                                    axis=2)[:, :, 0]
+        return 2.0 * np.sum(chosen, axis=(0, 1)) / n
+
+    def value(x):
+        diff = x[None, None, None, :] - centers
+        q = np.sum(diff * diff, axis=-1)
+        return float(np.mean(np.sum(np.max(q, axis=-1), axis=-1)))
+
+    x = np.zeros(d)
+    best = value(x)
+    lr0 = 1.0 / (4.0 * M)
+    for t in range(1, iters + 1):
+        x = x - (lr0 / math.sqrt(t)) * full_grad(x)
+        if t % 50 == 0:
+            best = min(best, value(x))
+    return best
+
+
+@problems.register("nonsmooth")
+def _nonsmooth_problem(n: int, M: int = 30, d: int = 20,
+                       seed: int = 0) -> Problem:
+    """Paper section V.B non-smooth quadratics, f_i = sum_j max(l1, l2).
+    Numpy closures moved verbatim from benchmarks/fig_async.build_problem;
+    the jax half mirrors benchmarks/paper_problems.NonsmoothQuadratics."""
+    centers = _nonsmooth_centers(n, M, d, seed)
+
+    def grad_fn(i, x, t):
+        diff = x[None, None, :] - centers[i]          # (M, 2, d)
+        q = np.sum(diff * diff, axis=-1)              # (M, 2)
+        pick = np.argmax(q, axis=-1)                  # (M,)
+        chosen = np.take_along_axis(
+            diff, pick[:, None, None], axis=1)[:, 0]  # (M, d)
+        return 2.0 * np.sum(chosen, axis=0)
+
+    def eval_fn(x):
+        diff = x[None, None, None, :] - centers       # (n, M, 2, d)
+        q = np.sum(diff * diff, axis=-1)
+        return float(np.mean(np.sum(np.max(q, axis=-1), axis=-1)))
+
+    import jax.numpy as jnp
+    centers_j = jnp.asarray(centers)
+
+    def subgrad_stack(x_stack, t, key):
+        diff = x_stack[:, None, None, :] - centers_j      # (n, M, 2, d)
+        q = jnp.sum(diff * diff, axis=-1)                 # (n, M, 2)
+        pick = jnp.argmax(q, axis=-1)                     # (n, M)
+        chosen = jnp.take_along_axis(
+            diff, pick[..., None, None], axis=2)[:, :, 0]  # (n, M, d)
+        return 2.0 * jnp.sum(chosen, axis=1)
+
+    def objective(x):
+        diff = x[None, None, None, :] - centers_j
+        q = jnp.sum(diff * diff, axis=-1)
+        return jnp.mean(jnp.sum(jnp.max(q, axis=-1), axis=-1))
+
+    return Problem(name="nonsmooth", n=n, d=d, grad_fn=grad_fn,
+                   eval_fn=eval_fn, subgrad_stack=subgrad_stack,
+                   objective=objective,
+                   fstar_fn=lambda: nonsmooth_centralized_optimum(centers))
+
+
+@problems.register("least_squares")
+def _least_squares_problem(n: int, d: int = 64, m_per_node: int = 200,
+                           seed: int = 0) -> Problem:
+    """Node-specific least squares (the quickstart problem): f_i(x) =
+    ||A_i x - b_i||^2 with per-node solutions, so consensus is required."""
+    rng = np.random.default_rng(seed)
+    A = rng.normal(size=(n, m_per_node, d)) / np.sqrt(d)
+    x_true = rng.normal(size=(d,))
+    b = np.einsum("nmd,d->nm", A, x_true) + rng.normal(
+        scale=0.1 + 0.5 * rng.random((n, 1)), size=(n, m_per_node))
+
+    def grad_fn(i, x, t):
+        res = A[i] @ x - b[i]
+        return 2.0 * (A[i].T @ res)
+
+    def eval_fn(x):
+        res = np.einsum("nmd,d->nm", A, x) - b
+        return float(np.mean(np.sum(res * res, axis=1)))
+
+    import jax.numpy as jnp
+    A_j, b_j = jnp.asarray(A), jnp.asarray(b)
+
+    def subgrad_stack(x_stack, t, key):
+        res = jnp.einsum("nmd,nd->nm", A_j, x_stack) - b_j
+        return 2.0 * jnp.einsum("nmd,nm->nd", A_j, res)
+
+    def objective(x):
+        res = jnp.einsum("nmd,d->nm", A_j, x) - b_j
+        return jnp.mean(jnp.sum(res * res, axis=1))
+
+    def fstar():
+        x_star, *_ = np.linalg.lstsq(A.reshape(n * m_per_node, d),
+                                     b.reshape(-1), rcond=None)
+        return eval_fn(x_star)
+
+    return Problem(name="least_squares", n=n, d=d, grad_fn=grad_fn,
+                   eval_fn=eval_fn, subgrad_stack=subgrad_stack,
+                   objective=objective, fstar_fn=fstar)
+
+
+@problems.register("lm")
+def _lm_problem(arch: str, variant: str = "smoke", batch_per_node: int = 8,
+                seq_len: int = 64) -> LMProblem:
+    return LMProblem(arch=arch, variant=variant,
+                     batch_per_node=batch_per_node, seq_len=seq_len)
+
+
+# ---------------------------------------------------------------------------
+# topologies (n comes from the problem; params carry the shape knobs)
+# ---------------------------------------------------------------------------
+
+
+@topologies.register("complete")
+def _complete(n: int) -> _graphs.CommGraph:
+    return _graphs.complete_graph(n)
+
+
+@topologies.register("ring")
+def _ring(n: int) -> _graphs.CommGraph:
+    return _graphs.ring_graph(n)
+
+
+@topologies.register("torus")
+def _torus(n: int) -> _graphs.CommGraph:
+    return _graphs.torus_graph(n)
+
+
+@topologies.register("hypercube")
+def _hypercube(n: int) -> _graphs.CommGraph:
+    return _graphs.hypercube_graph(n)
+
+
+@topologies.register("expander")
+def _expander(n: int, k: int = 4, seed: int = 0) -> _graphs.CommGraph:
+    return _graphs.kregular_expander(n, k=k, seed=seed)
+
+
+@topologies.register("rregular")
+def _rregular(n: int, k: int = 4, seed: int = 0) -> _graphs.CommGraph:
+    return _graphs.random_regular_expander(n, k=k, seed=seed)
+
+
+@topologies.register("expander_sequence")
+def _expander_seq(n: int, k: int = 4, length: int = 4,
+                  seed: int = 0) -> _graphs.GraphSequence:
+    return _graphs.expander_sequence(n, k=k, length=length, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# schedules (the registry `core.schedules.make_schedule` now routes through)
+# ---------------------------------------------------------------------------
+
+
+@schedules.register("every", aliases=("h1",))
+def _every() -> _sched.CommSchedule:
+    return _sched.EveryIteration()
+
+
+@schedules.register("periodic")
+def _periodic(h: int = 1) -> _sched.CommSchedule:
+    return _sched.Periodic(h=h)
+
+
+@schedules.register("sparse")
+def _sparse(p: float = 0.3) -> _sched.CommSchedule:
+    return _sched.IncreasinglySparse(p=p)
+
+
+@schedules.register("piecewise")
+def _piecewise(h: int = 1) -> _sched.CommSchedule:
+    return _sched.PiecewisePeriodic(h=h)
+
+
+@schedules.register("adaptive")
+def _adaptive(h0: int = 1, p: float = 0.0, h_max: int = 512):
+    from repro.adaptive.schedule import AdaptiveSchedule
+    return AdaptiveSchedule(h0=h0, p=p, h_max=h_max)
+
+
+# ---------------------------------------------------------------------------
+# stepsizes
+# ---------------------------------------------------------------------------
+
+
+@stepsizes.register("sqrt")
+def _sqrt(A: float = 1.0, q: float = 0.5) -> Callable:
+    """a(t) = A / max(t, 1)^q -- `core.dda.stepsize_sqrt`, the canonical
+    jax/numpy-generic default shared by every execution mode."""
+    return stepsize_sqrt(A, q)
+
+
+@stepsizes.register("inv_sqrt")
+def _inv_sqrt(A: float = 1.0) -> Callable:
+    """a(t) = A / sqrt(max(t, 1)) via `math.sqrt` on host floats -- the
+    exact closure the netsim benchmarks historically inlined (kept distinct
+    from "sqrt" because `x ** 0.5` and `math.sqrt(x)` are not guaranteed
+    bit-equal, and the migration gate compares traces bitwise). Host-only:
+    not traceable, so the dense backend rejects it."""
+    def a(t):
+        return A / math.sqrt(max(t, 1.0))
+    return a
+
+
+def build_component(registry: Registry, kind: str,
+                    params: dict[str, Any], **extra: Any) -> Any:
+    """Build `kind` from `registry` with spec params plus runner-provided
+    context (e.g. the problem's n for topologies). Spec params win conflicts
+    loudly: a manifest must not silently override runner context."""
+    clash = set(params) & set(extra)
+    if clash:
+        raise ValueError(
+            f"{registry.kind} {kind!r} params {sorted(clash)} are "
+            f"runner-provided and cannot be set in the spec")
+    return registry.build(kind, **params, **extra)

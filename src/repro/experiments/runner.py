@@ -1,0 +1,510 @@
+"""`run(spec) -> RunResult`: one dispatcher over all three execution modes.
+
+The three front doors this replaces -- `core.dda.DDASimulator` (dense,
+synchronous, one device), `netsim.NetSimulator` (event-driven async
+cluster), `launch.train.train_consensus_lm` (shard_map consensus LM
+training) -- stay as the engines; this module only WIRES them from an
+`ExperimentSpec`, so benchmarks and examples declare experiments as data
+instead of hand-assembling problems, topologies, schedules and traces per
+mode. Every build happens fresh per call: specs are immutable, runs are
+deterministic for a fixed spec (netsim backends bit-identically so), and
+mutable schedule state can never leak between runs.
+
+Backends (the `backends` registry):
+
+  * "dense"  -- DDASimulator on the stacked jax path. With a
+    "dense_adaptive" controller the segment loop is driven here, timing
+    uniform-comm chunks and feeding `adaptive.DenseController` so h retunes
+    from WALL-CLOCK iteration timings (the eq. 9 inversion of
+    DenseRTracker).
+  * "netsim" -- NetSimulator on a scenario preset (params pick the preset
+    and its knobs, plus engine / algorithm / adaptive controller).
+  * "launch" -- train_consensus_lm on a host mesh (params pick mesh shape,
+    optimizer knobs; the problem must be the "lm" kind). `dryrun: true`
+    compiles both step programs and runs zero steps.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+from repro.core.dda import (DDASimulator, SimTrace, trace_time_to_reach)
+from repro.core import consensus as _cons
+from repro.core import tradeoff as _tradeoff
+from repro.core.graphs import CommGraph, GraphSequence
+from repro.experiments import components as C
+from repro.experiments.registry import Registry
+from repro.experiments.result import RunResult
+from repro.experiments.spec import ComponentSpec, ExperimentSpec
+
+__all__ = ["backends", "run", "run_all", "run_sweep"]
+
+backends = Registry("backend")
+
+#: eps the closed-loop predictions are quoted at (L = R = 1 units), matching
+#: `NetSimulator.predict`'s convention
+PREDICT_EPS = 0.1
+
+
+# ---------------------------------------------------------------------------
+# shared build helpers
+# ---------------------------------------------------------------------------
+
+
+#: built problems, keyed by canonical (kind, params) JSON. Problem builders
+#: are deterministic and their closures stateless, so instances are safely
+#: shared across runs; what the cache buys is F* -- `Problem.fstar` is
+#: lazily computed and instance-cached, and for the non-smooth problem it
+#: is an 800-iteration centralized subgradient descent that a sweep grid
+#: would otherwise redo per cell. Bounded FIFO: sweeps revisit few kinds.
+_PROBLEM_CACHE: dict[str, Any] = {}
+_PROBLEM_CACHE_MAX = 32
+
+
+def _build_problem(spec: ExperimentSpec):
+    import json as _json
+    key = _json.dumps([spec.problem.kind,
+                       sorted(spec.problem.params.items())])
+    hit = _PROBLEM_CACHE.get(key)
+    if hit is None:
+        hit = C.build_component(C.problems, spec.problem.kind,
+                                spec.problem.params)
+        if len(_PROBLEM_CACHE) >= _PROBLEM_CACHE_MAX:
+            _PROBLEM_CACHE.pop(next(iter(_PROBLEM_CACHE)))
+        _PROBLEM_CACHE[key] = hit
+    return hit
+
+
+def _build_topology(spec: ExperimentSpec, n: int):
+    return C.build_component(C.topologies, spec.topology.kind,
+                             spec.topology.params, n=n)
+
+
+def _build_schedule(spec: ExperimentSpec):
+    return C.build_component(C.schedules, spec.schedule.kind,
+                             spec.schedule.params)
+
+
+def _build_stepsize(spec: ExperimentSpec):
+    return C.build_component(C.stepsizes, spec.stepsize.kind,
+                             spec.stepsize.params)
+
+
+def _require(condition: bool, msg: str) -> None:
+    if not condition:
+        raise ValueError(msg)
+
+
+def _eps_value(spec: ExperimentSpec, problem) -> float | None:
+    if spec.eps_frac is None:
+        return None
+    return problem.eps_value(spec.eps_frac)
+
+
+def _target_fields(trace: SimTrace, eps_value: float | None
+                   ) -> tuple[float | None, float | None]:
+    if eps_value is None:
+        return None, None
+    tta = trace_time_to_reach(trace, eps_value)
+    return eps_value, (None if math.isinf(tta) else tta)
+
+
+# ---------------------------------------------------------------------------
+# dense backend
+# ---------------------------------------------------------------------------
+
+
+@backends.register("dense")
+def _run_dense(spec: ExperimentSpec, backend: ComponentSpec) -> RunResult:
+    import jax.numpy as jnp
+
+    params = dict(backend.params)
+    compress_keep = params.pop("compress_keep", None)
+    _require(not params, f"dense backend has unknown params {sorted(params)}")
+
+    problem = _build_problem(spec)
+    _require(isinstance(problem, C.Problem),
+             f"dense backend cannot run problem kind {spec.problem.kind!r}")
+    _require(problem.subgrad_stack is not None,
+             f"problem {problem.name!r} has no stacked jax subgradient")
+    _require(spec.stepsize.kind != "inv_sqrt",
+             'stepsize "inv_sqrt" is host-only; use "sqrt" on dense')
+    graph = _build_topology(spec, problem.n)
+    _require(isinstance(graph, CommGraph),
+             "dense backend needs a fixed CommGraph topology "
+             "(time-varying sequences are netsim-only)")
+    _require(spec.time_limit is None,
+             "time_limit is event-clock only (netsim backends)")
+    schedule = _build_schedule(spec)
+    a_fn = _build_stepsize(spec)
+
+    import jax
+    sim = DDASimulator(problem.subgrad_stack, jax.jit(problem.objective),
+                       graph, schedule, a_fn=a_fn, r=spec.r,
+                       compress_keep=compress_keep)
+    x0 = jnp.zeros((problem.n, problem.d))
+    extras: dict[str, Any] = {}
+
+    if spec.controller is not None:
+        _require(spec.controller.kind == "dense_adaptive",
+                 f"dense backend needs a 'dense_adaptive' controller, got "
+                 f"{spec.controller.kind!r}")
+        from repro.adaptive import AdaptiveSchedule, DenseController
+        _require(isinstance(schedule, AdaptiveSchedule),
+                 "a controller run needs schedule kind 'adaptive'")
+        ctrl = DenseController(schedule, **spec.controller.params)
+        t0 = time.perf_counter()
+        trace = _dense_adaptive_run(sim, ctrl, x0, spec.T, spec.eval_every,
+                                    spec.seed)
+        wall = time.perf_counter() - t0
+        extras["retunes"] = [(rt.from_t, rt.h) for rt in schedule.retunes]
+        extras["h_final"] = schedule.h_current
+        extras["r_hat"] = ctrl.tracker.r_hat
+    else:
+        t0 = time.perf_counter()
+        trace = sim.run(x0, spec.T, eval_every=spec.eval_every,
+                        seed=spec.seed)
+        wall = time.perf_counter() - t0
+
+    eps_value, tta = _target_fields(trace, _eps_value(spec, problem))
+    lam2 = graph.lambda2()
+    predictions = {
+        "r": spec.r,
+        "n_opt": _tradeoff.n_opt_complete(spec.r),
+        "h_opt": _tradeoff.h_opt_int(graph.n, graph.degree, spec.r, lam2),
+        "tau_eps": _tradeoff.time_to_accuracy(
+            PREDICT_EPS, graph.n, graph.degree, spec.r, lam2,
+            schedule=schedule),
+    }
+    return RunResult(spec=spec, backend=backend, trace=trace, wall_s=wall,
+                     eps_value=eps_value, time_to_target=tta,
+                     predictions=predictions, extras=extras)
+
+
+def _dense_adaptive_run(sim: DDASimulator, ctrl, x0, T: int,
+                        eval_every: int, seed: int,
+                        timer: Callable[[], float] = time.perf_counter
+                        ) -> SimTrace:
+    """DDASimulator.run with the measure->predict->act loop on wall-clock.
+
+    Mirrors the plain segment loop but splits each evaluation segment into
+    uniform-comm chunks, times every chunk on the host clock (blocking on
+    device completion), feeds `DenseController.observe`, and lets the
+    controller splice a re-solved h at each segment boundary -- the
+    frontier is `done`, the number of iterations already executed, so the
+    splice only shapes masks not yet built. Chunk lengths vary with h, so
+    the jitted segment recompiles per new length; the controller's warmup
+    keeps those compile spikes out of the first retune (tests inject a fake
+    `timer` for determinism).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    n, k = sim.graph.n, sim.graph.degree
+    ctrl.bind(n, k, sim.graph.lambda2())
+    sched = sim.schedule
+    z = jnp.zeros_like(x0)
+    x = x0
+    xhat = x0
+    res = jnp.zeros_like(x0)
+    t = jnp.asarray(0.0, jnp.float32)
+    trace = SimTrace([], [], [], [], [])
+    sim_time = 0.0
+    comm_total = 0
+    root = jax.random.PRNGKey(seed)
+
+    done = 0
+    warmed: set[int] = set()
+    while done < T:
+        seg_end = min(done + eval_every, T)
+        while done < seg_end:
+            comm = sched.is_comm_step(done + 1)
+            chunk = 1
+            while (done + chunk < seg_end
+                   and sched.is_comm_step(done + chunk + 1) == comm):
+                chunk += 1
+            mask = np.full(chunk, comm)
+            keys = jax.random.split(jax.random.fold_in(root, done), chunk)
+            if chunk not in warmed:
+                # first use of this chunk LENGTH pays the jit trace+compile
+                # (shape-keyed; the comm mask is data). Timing that call
+                # would poison t_plain/t_comm by orders of magnitude --
+                # with h0=1 the single t=1 plain chunk is the ONLY plain
+                # sample, and a compile-inflated t_plain latches r_hat at 0
+                # forever. Warm the cache on a discarded duplicate call
+                # (pure function; costs one chunk of compute), then time.
+                warmed.add(chunk)
+                jax.block_until_ready(sim._segment(
+                    z, x, xhat, res, t, jnp.asarray(mask), keys))
+            t0 = timer()
+            z, x, xhat, res, t = sim._segment(
+                z, x, xhat, res, t, jnp.asarray(mask), keys)
+            jax.block_until_ready(xhat)
+            per_iter = max(timer() - t0, 0.0) / chunk
+            for _ in range(chunk):
+                ctrl.observe(per_iter, comm)
+            done += chunk
+            if comm:
+                comm_total += chunk
+                sim_time += chunk * (1.0 / n + k * sim.r)
+            else:
+                sim_time += chunk * (1.0 / n)
+        xbar = jnp.mean(xhat, axis=0)
+        trace.iters.append(done)
+        trace.sim_time.append(sim_time)
+        trace.fvals.append(float(jnp.mean(jax.vmap(sim.eval_fn)(xhat))))
+        trace.fvals_consensus.append(float(sim.eval_fn(xbar)))
+        trace.comms.append(comm_total)
+        trace.disagreement.append(float(_cons.disagreement(z)))
+        if done < T:  # a splice at the frontier T would shape zero
+            ctrl.maybe_retune(done)  # iterations: don't record phantoms
+    return trace
+
+
+# ---------------------------------------------------------------------------
+# netsim backend
+# ---------------------------------------------------------------------------
+
+_SCENARIO_KNOBS = {
+    "homogeneous": (),
+    "lossy": ("loss", "jitter"),
+    "straggler": ("slow_factor", "n_slow"),
+    "adversarial": ("loss", "slow_factor", "n_slow", "rewire_every"),
+    "time_varying": ("rewire_every", "loss"),
+}
+
+
+def _build_scenario(kind: str, n: int, r: float, topology,
+                    message_bytes: float, knobs: dict[str, Any]):
+    from repro.netsim import scenarios as S
+    allowed = _SCENARIO_KNOBS.get(kind)
+    if allowed is None:
+        raise KeyError(f"unknown scenario {kind!r}; have "
+                       f"{sorted(_SCENARIO_KNOBS)}")
+    unknown = set(knobs) - set(allowed)
+    if unknown:
+        raise ValueError(f"scenario {kind!r} has unknown knobs "
+                         f"{sorted(unknown)} (allowed: {list(allowed)})")
+    builder = {"homogeneous": S.homogeneous, "lossy": S.lossy,
+               "straggler": S.straggler, "adversarial": S.adversarial,
+               "time_varying": S.time_varying_expander}[kind]
+    if kind == "time_varying" and "rewire_every" not in knobs:
+        raise ValueError("time_varying scenario needs rewire_every")
+    return builder(n, r, message_bytes=message_bytes, graph=topology,
+                   **knobs)
+
+
+@backends.register("netsim")
+def _run_netsim(spec: ExperimentSpec, backend: ComponentSpec) -> RunResult:
+    from repro.netsim import NetSimulator
+
+    params = dict(backend.params)
+    scenario_kind = params.pop("scenario", "homogeneous")
+    engine = params.pop("engine", "auto")
+    algorithm = params.pop("algorithm", "dda")
+    message_bytes = params.pop("message_bytes", None)
+    pushsum_w_floor = params.pop("pushsum_w_floor", 0.5)
+    knobs = {k: params.pop(k)
+             for k in list(params)
+             if k in {"loss", "jitter", "slow_factor", "n_slow",
+                      "rewire_every"}}
+    _require(not params,
+             f"netsim backend has unknown params {sorted(params)}")
+
+    problem = _build_problem(spec)
+    _require(isinstance(problem, C.Problem),
+             f"netsim backend cannot run problem kind {spec.problem.kind!r}")
+    topology = _build_topology(spec, problem.n)
+    if scenario_kind == "time_varying" or knobs.get("rewire_every"):
+        _require(isinstance(topology, GraphSequence),
+                 "a rewiring scenario needs an 'expander_sequence' topology")
+
+    if message_bytes is None:
+        from repro.netsim.scenarios import DEFAULT_MESSAGE_BYTES
+        message_bytes = DEFAULT_MESSAGE_BYTES
+    scenario = _build_scenario(scenario_kind, problem.n, spec.r, topology,
+                               message_bytes, knobs)
+    a_fn = _build_stepsize(spec)
+    schedule = _build_schedule(spec)
+
+    ctrl = None
+    if spec.controller is not None:
+        _require(spec.controller.kind == "adaptive",
+                 f"netsim backend needs an 'adaptive' controller, got "
+                 f"{spec.controller.kind!r}")
+        from repro.adaptive import AdaptiveController, AdaptiveSchedule
+        _require(isinstance(schedule, AdaptiveSchedule),
+                 "a controller run needs schedule kind 'adaptive'")
+        ctrl = AdaptiveController(schedule, **spec.controller.params)
+
+    sim = NetSimulator(scenario, problem.grad_fn, problem.eval_fn,
+                       a_fn=a_fn,
+                       schedule=None if ctrl is not None else schedule,
+                       algorithm=algorithm, seed=spec.seed,
+                       pushsum_w_floor=pushsum_w_floor,
+                       engine=engine, controller=ctrl)
+    x0 = np.zeros((problem.n, problem.d))
+    time_limit = math.inf if spec.time_limit is None else spec.time_limit
+    t0 = time.perf_counter()
+    trace = sim.run(x0, spec.T, eval_every=spec.eval_every,
+                    time_limit=time_limit)
+    wall = time.perf_counter() - t0
+
+    eps_value, tta = _target_fields(trace, _eps_value(spec, problem))
+    measurement = None
+    predictions = None
+    if sim.msg_flights and sim.compute_times:
+        predictions = sim.predict(eps=PREDICT_EPS)
+        measurement = predictions.pop("measurement")
+    extras: dict[str, Any] = {
+        "engine": sim._engine_inst.name,
+        "scenario": scenario.name,
+        "sent": sim.sent, "drops": sim.drops, "rewires": sim.rewires,
+    }
+    if ctrl is not None:
+        extras["retunes"] = [(rt.from_t, rt.h)
+                             for rt in ctrl.schedule.retunes]
+        extras["h_final"] = ctrl.schedule.h_current
+        extras["h_opt_hat"] = ctrl.schedule.h_opt_hat
+        extras["r_hat"] = ctrl.tracker.r_hat
+        if ctrl.reweighter is not None:
+            extras["lam2_eff"] = ctrl.reweighter.last_lam2
+        extras["reweight_gossip"] = ctrl.reweight_gossip
+    return RunResult(spec=spec, backend=backend, trace=trace, wall_s=wall,
+                     eps_value=eps_value, time_to_target=tta,
+                     r_measurement=measurement, predictions=predictions,
+                     extras=extras)
+
+
+# ---------------------------------------------------------------------------
+# launch backend
+# ---------------------------------------------------------------------------
+
+
+@backends.register("launch")
+def _run_launch(spec: ExperimentSpec, backend: ComponentSpec) -> RunResult:
+    import jax
+
+    from repro.launch.mesh import make_mesh
+    from repro.launch.train import train_consensus_lm
+    from repro.models import registry as _models
+    from repro.optim import adamw, cosine_lr
+
+    params = dict(backend.params)
+    mesh_shape = tuple(params.pop("mesh", None) or (1, 1, 1))
+    dryrun = params.pop("dryrun", False)
+    lr = params.pop("lr", 3e-4)
+    mix_target = params.pop("mix_target", "params")
+    log_every = params.pop("log_every", 0)
+    _require(not params,
+             f"launch backend has unknown params {sorted(params)}")
+
+    problem = _build_problem(spec)
+    _require(isinstance(problem, C.LMProblem),
+             'launch backend needs the "lm" problem kind')
+    _require(len(mesh_shape) == 3, "mesh must be (pod, data, model)")
+    _require(spec.controller is None,
+             "the launch backend has no controller hook yet (ROADMAP)")
+    # reject spec fields this backend cannot honor rather than silently
+    # dropping them -- the other backends validate the same way
+    _require(spec.eps_frac is None,
+             "launch has no F* to target; eps_frac is dense/netsim-only")
+    _require(spec.time_limit is None,
+             "time_limit is event-clock only (netsim backends)")
+    _require(spec.stepsize == ComponentSpec("sqrt", {"A": 1.0}),
+             "the launch optimizer's LR schedule is the backend's 'lr' "
+             "param; leave spec.stepsize at its default")
+    n_pods = mesh_shape[0]
+    if int(np.prod(mesh_shape)) > jax.device_count():
+        raise ValueError(
+            f"mesh {mesh_shape} needs {int(np.prod(mesh_shape))} devices, "
+            f"have {jax.device_count()} (set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=... before "
+            f"any jax import, as launch/dryrun.py does)")
+    mesh = make_mesh(mesh_shape, ("pod", "data", "model"))
+    graph = _build_topology(spec, n_pods)
+    _require(isinstance(graph, CommGraph),
+             "launch backend needs a fixed CommGraph topology")
+    schedule = _build_schedule(spec)
+
+    cfg = _models.get_config(problem.arch, problem.variant)
+    optimizer = adamw(cosine_lr(lr, max(spec.T, 1)))
+    t0 = time.perf_counter()
+    report = train_consensus_lm(
+        cfg, optimizer, mesh, steps=spec.T, schedule=schedule, graph=graph,
+        r_estimate=spec.r, batch_per_node=problem.batch_per_node,
+        seq_len=problem.seq_len, seed=spec.seed, log_every=log_every,
+        mix_target=mix_target, dryrun=dryrun)
+    wall = time.perf_counter() - t0
+
+    # fold the per-step losses into the canonical trace shape at the spec's
+    # eval cadence; sim_time is the closed-form eq. 9/19 charge
+    n, k = graph.n, graph.degree
+    trace = SimTrace([], [], [], [], [])
+    for step in range(spec.eval_every, report.steps + 1, spec.eval_every):
+        H = schedule.H(step)
+        trace.iters.append(step)
+        trace.sim_time.append(step * (1.0 / n) + H * k * spec.r)
+        trace.fvals.append(float(report.losses[step - 1]))
+        # the recorded loss is already the pod-mean, which is the closest
+        # thing this mode has to F at the consensus average; keep the
+        # column populated so all six SimTrace fields stay row-aligned
+        trace.fvals_consensus.append(float(report.losses[step - 1]))
+        trace.comms.append(H)
+        trace.disagreement.append(0.0)
+    extras = {"arch": problem.arch, "variant": problem.variant,
+              "mesh": list(mesh_shape), "comm_rounds": report.comm_rounds,
+              "sim_time_units": report.sim_time_units, **report.extras}
+    return RunResult(spec=spec, backend=backend, trace=trace, wall_s=wall,
+                     extras=extras)
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+
+def _resolve_backend(spec: ExperimentSpec,
+                     backend: int | str | ComponentSpec | None
+                     ) -> ComponentSpec:
+    if backend is None:
+        return spec.backends[0]
+    if isinstance(backend, ComponentSpec):
+        return backend
+    if isinstance(backend, int):
+        return spec.backends[backend]
+    for b in spec.backends:
+        if b.kind == backend:
+            return b
+    # a kind the spec does not declare is still runnable (explicit ask)
+    if backend in backends:
+        return ComponentSpec(backend)
+    raise KeyError(f"unknown backend {backend!r}; spec declares "
+                   f"{[b.kind for b in spec.backends]}, registry has "
+                   f"{backends.names()}")
+
+
+def run(spec: ExperimentSpec,
+        backend: int | str | ComponentSpec | None = None) -> RunResult:
+    """Run one spec on one backend (default: the first it declares)."""
+    b = _resolve_backend(spec, backend)
+    return backends.builder(b.kind)(spec, b)
+
+
+def run_all(spec: ExperimentSpec) -> list[RunResult]:
+    """Run a spec on EVERY backend it declares, in declaration order."""
+    return [run(spec, b) for b in spec.backends]
+
+
+def run_sweep(spec: ExperimentSpec, axis: str, values: Sequence[Any],
+              backend: int | str | ComponentSpec | None = None
+              ) -> list[RunResult]:
+    """One run per value of a dotted-path axis -- the paper's grids as one
+    call: `run_sweep(spec, "schedule.params.h", [1, 2, 4, 8, 16])`,
+    `run_sweep(spec, "problem.params.n", [4, 8, 16])`,
+    `run_sweep(spec, "r", [0.001, 0.01, 0.1])`."""
+    return [run(spec.with_value(axis, v), backend=backend) for v in values]

@@ -40,27 +40,45 @@ class TrainReport:
     comm_rounds: int
     sim_time_units: float
     resumed_from: int | None = None
+    # backend-specific observability (dryrun compile stats, wall timings);
+    # surfaced as RunResult.extras by the repro.experiments launch backend
+    extras: dict = dataclasses.field(default_factory=dict)
 
 
 def train_consensus_lm(cfg: ModelConfig, optimizer: Optimizer, mesh,
                        *, steps: int = 100,
                        schedule: CommSchedule | None = None,
                        topology: str = "complete",
+                       graph: CommGraph | None = None,
                        r_estimate: float = 0.05,
                        batch_per_node: int = 8,
+                       seq_len: int = 64,
                        ckpt_dir: str | None = None,
                        ckpt_every: int = 50,
                        seed: int = 0,
                        log_every: int = 10,
-                       mix_target: str = "params") -> TrainReport:
+                       mix_target: str = "params",
+                       dryrun: bool = False) -> TrainReport:
     """Run consensus DP training of `cfg` on `mesh` (axes pod, data, model).
 
     Returns per-step losses plus the simulated time-unit accounting
-    (1/n per iteration + k*r per communication round, paper eq. 9/19)."""
+    (1/n per iteration + k*r per communication round, paper eq. 9/19).
+
+    `graph` overrides the `topology` name with a prebuilt CommGraph (the
+    repro.experiments runner resolves topologies through its registry and
+    hands the built graph in; n must equal the mesh's pod-axis size).
+    `dryrun` lowers + compiles both step programs (cheap local, fused
+    local+mix) and returns after ZERO training steps with the compile
+    timings in `extras` -- the CI smoke mode for the launch backend.
+    """
     schedule = schedule or EveryIteration()
     axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     n_pods = axis_sizes.get("pod", 1)
-    graph = build_graph(topology, n_pods)
+    if graph is None:
+        graph = build_graph(topology, n_pods)
+    elif graph.n != n_pods:
+        raise ValueError(f"graph has n={graph.n} but the mesh has "
+                         f"{n_pods} pods")
     k = graph.degree
 
     local, mix, fused = make_consensus_steps(
@@ -94,9 +112,23 @@ def train_consensus_lm(cfg: ModelConfig, optimizer: Optimizer, mesh,
                             out_shardings=(psh, ssh, None),
                             donate_argnums=(0, 1))
 
-        streams = [TokenStream(cfg.vocab_size, 64, batch_per_node,
+        streams = [TokenStream(cfg.vocab_size, seq_len, batch_per_node,
                                node_index=i, num_nodes=n_pods, seed=seed)
                    for i in range(n_pods)]
+
+        if dryrun:
+            nexts = [next(s) for s in streams]
+            batch = {"tokens": jnp.stack([b["tokens"] for b in nexts]),
+                     "labels": jnp.stack([b["labels"] for b in nexts])}
+            extras = {"dryrun": True, "n_pods": n_pods, "k": k}
+            for name, fn in (("local", jit_local), ("fused", jit_fused)):
+                t0 = time.time()
+                fn.lower(params, opt_state, batch).compile()
+                extras[f"{name}_compile_s"] = round(time.time() - t0, 2)
+            for s in streams:
+                s.close()
+            return TrainReport(steps=0, losses=[], comm_rounds=0,
+                               sim_time_units=0.0, extras=extras)
 
         mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
         start_step = 0

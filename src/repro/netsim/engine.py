@@ -447,6 +447,7 @@ class VectorizedEngine:
         self._proj = (_RowBatch(sim.projection)
                       if sim.projection is not None else None)
         self._ctrl = None  # bound per-run in run()
+        self._mw_cache: tuple | None = None  # (W, S_in, Wslot, Wdiag)
 
     # -- observability (same contract as ObjectEngine's lists) --------------
 
@@ -741,6 +742,32 @@ class VectorizedEngine:
                                                   self.send_busy[ai], 0.0)
             self._schedule_steps(ai, now + busy)
 
+    def _mix_weight_slots(self) -> tuple[np.ndarray, np.ndarray] | None:
+        """Per-slot stale-mix weights from `Network.mix_weights`, or None
+        when no reweighted P is installed (the uniform fast path).
+
+        Returns ((n, k) slot weights, (n,) self weights). `W[i, src]` is the
+        TOTAL (i, src) pair weight, so a src occupying several permutation
+        slots gets W / multiplicity per slot -- the exact convention
+        `AsyncDDANode._stale_mix` applies, keeping the engines equivalent.
+        Cached on the (W, S_in) object pair: a retune installs a new W, a
+        rewire a new S_in; both invalidate.
+        """
+        W = self.net.mix_weights
+        if W is None:
+            return None
+        hit = self._mw_cache
+        if hit is None or hit[0] is not W or hit[1] is not self.S_in:
+            rows = np.arange(self.n)[:, None]
+            Wslot = np.asarray(W, dtype=np.float64)[rows, self.S_in]
+            mult = np.zeros((self.n, self.k), dtype=np.int64)
+            for slot in range(self.k):
+                mult[:, slot] = (self.S_in
+                                 == self.S_in[:, slot][:, None]).sum(axis=1)
+            self._mw_cache = hit = (W, self.S_in, Wslot / mult,
+                                    np.diag(W).astype(np.float64))
+        return hit[2], hit[3]
+
     def _comm_dda(self, ci: np.ndarray, stamps: np.ndarray,
                   grads: np.ndarray) -> None:
         """Communication iteration for a batch of stale-gossip DDA nodes:
@@ -750,19 +777,37 @@ class VectorizedEngine:
         # batched stale mix: accumulate in-neighbor slots in slot order,
         # folding never-delivered neighbors back into the self weight
         g = self.graph
-        acc = np.zeros_like(buf)
-        missing = np.zeros(len(ci), dtype=np.int64)
-        for slot in range(k):
-            srcs = self.S_in[ci, slot]
-            st = self.stamp[ci, srcs]
-            has = st > 0
-            if has.any():
-                rows = self.val.eid[ci, srcs]
-                vals = self.val.y[np.where(has, rows, 0)]
-                acc += np.where(self._col(has), vals, 0.0)
-            missing += ~has
-        sw = g.self_weight + missing * g.edge_weight
-        mixed = stale_combine_batch(self.z[ci], g.edge_weight * acc, sw)
+        mw = self._mix_weight_slots()
+        if mw is None:
+            acc = np.zeros_like(buf)
+            missing = np.zeros(len(ci), dtype=np.int64)
+            for slot in range(k):
+                srcs = self.S_in[ci, slot]
+                st = self.stamp[ci, srcs]
+                has = st > 0
+                if has.any():
+                    rows = self.val.eid[ci, srcs]
+                    vals = self.val.y[np.where(has, rows, 0)]
+                    acc += np.where(self._col(has), vals, 0.0)
+                missing += ~has
+            sw = g.self_weight + missing * g.edge_weight
+            mixed = stale_combine_batch(self.z[ci], g.edge_weight * acc, sw)
+        else:
+            Wslot, Wdiag = mw
+            acc = np.zeros_like(buf)
+            sw = Wdiag[ci].copy()
+            for slot in range(k):
+                srcs = self.S_in[ci, slot]
+                st = self.stamp[ci, srcs]
+                has = st > 0
+                w = Wslot[ci, slot]
+                if has.any():
+                    rows = self.val.eid[ci, srcs]
+                    vals = self.val.y[np.where(has, rows, 0)]
+                    acc += np.where(self._col(has),
+                                    self._col(w) * vals, 0.0)
+                sw += np.where(has, 0.0, w)
+            mixed = stale_combine_batch(self.z[ci], acc, sw)
         self.z[ci] = mixed + grads
         srcs = np.repeat(ci, k)
         dsts = self.S_out[ci].ravel()

@@ -114,6 +114,16 @@ class Network:
             raise ValueError(
                 f"need {n} node specs, got {len(self.node_specs)}")
         self._out_cache: dict[int, list[list[int]]] = {}
+        # Optional (n, n) override of the stale-gossip mixing weights: when
+        # set (by an AdaptiveController with reweight_gossip=True), row i of
+        # this matrix replaces the graph's uniform self/edge weights in the
+        # nodes' stale mix -- the straggler-aware effective P acts on the
+        # ACTUAL gossip, not just on the lambda2 estimate. None (the
+        # default) keeps the configured uniform weights and the engines'
+        # bit-identity contract untouched. Must be row-stochastic with the
+        # current graph's support; weight of undelivered neighbors still
+        # folds into the self weight, so rows stay convex combinations.
+        self.mix_weights: np.ndarray | None = None
 
     @property
     def n(self) -> int:

@@ -103,17 +103,39 @@ class AsyncDDANode(_NodeBase):
 
     def _stale_mix(self, net: Network) -> np.ndarray:
         g = net.graph
+        W = net.mix_weights
+        if W is None:
+            acc = np.zeros_like(self.z)
+            missing = 0
+            for src in net.in_neighbors(self.i):
+                entry = self.inbox.get(src)
+                if entry is None:
+                    missing += 1
+                else:
+                    acc += entry[1]
+            # fold undelivered neighbors' weight into self: row stays
+            # stochastic
+            sw = g.self_weight + missing * g.edge_weight
+            return stale_combine(self.z, g.edge_weight * acc, sw)
+        # reweighted gossip: per-edge weights W[i, src] instead of the
+        # uniform edge weight. W[i, src] is the TOTAL weight of the (i, src)
+        # pair, so a src occupying multiple permutation slots contributes
+        # W[i, src] / multiplicity per slot -- identical totals either way,
+        # and the same convention the vectorized engine applies.
+        in_nb = net.in_neighbors(self.i)
+        mult: dict[int, int] = {}
+        for src in in_nb:
+            mult[src] = mult.get(src, 0) + 1
         acc = np.zeros_like(self.z)
-        missing = 0
-        for src in net.in_neighbors(self.i):
+        sw = float(W[self.i, self.i])
+        for src in in_nb:
+            w = float(W[self.i, src]) / mult[src]
             entry = self.inbox.get(src)
             if entry is None:
-                missing += 1
+                sw += w
             else:
-                acc += entry[1]
-        # fold undelivered neighbors' weight into self: row stays stochastic
-        sw = g.self_weight + missing * g.edge_weight
-        return stale_combine(self.z, g.edge_weight * acc, sw)
+                acc += w * entry[1]
+        return stale_combine(self.z, acc, sw)
 
     def finish_step(self, net: Network) -> list[tuple[int, Any]]:
         t_new = self.t + 1

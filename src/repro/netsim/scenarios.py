@@ -6,6 +6,9 @@ A `Scenario` bundles everything the driver needs about the *cluster*
 parameterized by the paper's r: the per-message transmit time in full-grad
 units, realized as link bandwidth = message_bytes / r so that a lossless
 homogeneous run reproduces eq. (9)'s 1/n + k*r per-iteration cost exactly.
+Every preset accepts `graph=` to override its default topology with a
+prebuilt CommGraph/GraphSequence -- the repro.experiments runner resolves
+topologies through its registry and hands the built graph in.
 
 Presets:
   * homogeneous            -- identical nodes, perfect links (the paper's
@@ -87,14 +90,15 @@ def homogeneous(n: int, r: float, k: int = 4, seed: int = 0,
 
 def straggler(n: int, r: float, slow_factor: float = 4.0, n_slow: int = 1,
               k: int = 4, seed: int = 0,
-              message_bytes: float = DEFAULT_MESSAGE_BYTES) -> Scenario:
+              message_bytes: float = DEFAULT_MESSAGE_BYTES,
+              graph: CommGraph | GraphSequence | None = None) -> Scenario:
     if not 0 <= n_slow <= n:
         raise ValueError(f"n_slow must be in [0, {n}]")
     specs = tuple(NodeSpec.slowed(slow_factor) if i < n_slow else NodeSpec()
                   for i in range(n))
     return Scenario(
         name=f"straggler{slow_factor:g}x{n_slow}",
-        topology=_graph(n, k, seed),
+        topology=graph if graph is not None else _graph(n, k, seed),
         link=_link_for_r(r, message_bytes),
         node_specs=specs,
         message_bytes=message_bytes)
@@ -102,10 +106,11 @@ def straggler(n: int, r: float, slow_factor: float = 4.0, n_slow: int = 1,
 
 def lossy(n: int, r: float, loss: float = 0.2, k: int = 4, seed: int = 0,
           jitter: float = 0.0,
-          message_bytes: float = DEFAULT_MESSAGE_BYTES) -> Scenario:
+          message_bytes: float = DEFAULT_MESSAGE_BYTES,
+          graph: CommGraph | GraphSequence | None = None) -> Scenario:
     return Scenario(
         name=f"lossy{loss:g}",
-        topology=_graph(n, k, seed),
+        topology=graph if graph is not None else _graph(n, k, seed),
         link=_link_for_r(r, message_bytes, jitter=jitter, loss=loss),
         node_specs=tuple(NodeSpec() for _ in range(n)),
         message_bytes=message_bytes)
@@ -115,14 +120,17 @@ def adversarial(n: int, r: float, loss: float = 0.2,
                 slow_factor: float = 4.0, n_slow: int = 1,
                 rewire_every: float | None = None,
                 k: int = 4, length: int = 4, seed: int = 0,
-                message_bytes: float = DEFAULT_MESSAGE_BYTES) -> Scenario:
+                message_bytes: float = DEFAULT_MESSAGE_BYTES,
+                graph: CommGraph | GraphSequence | None = None) -> Scenario:
     """Loss + stragglers + (optionally) a time-varying topology, together."""
     if not 0 <= n_slow <= n:
         raise ValueError(f"n_slow must be in [0, {n}]")
     specs = tuple(NodeSpec.slowed(slow_factor) if i < n_slow else NodeSpec()
                   for i in range(n))
     topology: CommGraph | GraphSequence
-    if rewire_every is not None:
+    if graph is not None:
+        topology = graph
+    elif rewire_every is not None:
         topology = expander_sequence(n, k=k, length=length, seed=seed)
     else:
         topology = _graph(n, k, seed)
@@ -138,11 +146,13 @@ def adversarial(n: int, r: float, loss: float = 0.2,
 def time_varying_expander(n: int, r: float, rewire_every: float,
                           k: int = 4, length: int = 4, seed: int = 0,
                           loss: float = 0.0,
-                          message_bytes: float = DEFAULT_MESSAGE_BYTES
+                          message_bytes: float = DEFAULT_MESSAGE_BYTES,
+                          graph: CommGraph | GraphSequence | None = None
                           ) -> Scenario:
     return Scenario(
         name=f"timevarying_T{rewire_every:g}",
-        topology=expander_sequence(n, k=k, length=length, seed=seed),
+        topology=(graph if graph is not None
+                  else expander_sequence(n, k=k, length=length, seed=seed)),
         link=_link_for_r(r, message_bytes, loss=loss),
         node_specs=tuple(NodeSpec() for _ in range(n)),
         message_bytes=message_bytes,

@@ -113,6 +113,11 @@ class NetSimulator:
                 raise ValueError(
                     "controller and schedule both given but disagree; pass "
                     "the controller's schedule (or neither)")
+            if (getattr(controller, "reweight_gossip", False)
+                    and algorithm != "dda"):
+                raise ValueError(
+                    "reweight_gossip applies to the stale-gossip mix only; "
+                    "push-sum's mass splitting is its own weighting scheme")
             schedule = controller.schedule
         self.controller = controller
         self.scenario = scenario
