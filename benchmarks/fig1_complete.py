@@ -6,6 +6,14 @@ on THIS host, model t_msg with the paper's ethernet bandwidth (11 MB/s), and
 verify the same law: the fastest n in simulated time-to-accuracy matches
 1/sqrt(r) for OUR measured r.
 
+Every cell is a declarative `ExperimentSpec` through `repro.run()` (the
+"metric_learning" problems-registry kind carries the jax objective,
+subgradient and PSD projection that used to be hand-wired here); only the
+host-side r measurement and the eps_frac * F(0) accuracy target stay in the
+driver. The spec-vs-hand-wired equivalence is gated bit-identically in
+tests/test_experiments_migration.py, and benchmarks/manifests/
+fig1_complete.json checks in one smoke-sized cell.
+
 Outputs CSV rows: n, time_to_eps, final_F; plus the r/n_opt summary.
 """
 
@@ -17,35 +25,57 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.paper_problems import MetricLearning
-from repro.core import (DDASimulator, EveryIteration, complete_graph,
-                        n_opt_complete)
+from repro.core import n_opt_complete
+from repro.core.dda import trace_time_to_reach
+from repro.experiments import ExperimentSpec, run as run_spec
+from repro.experiments.components import problems
 
 PAPER_ETHERNET_BPS = 11e6  # ~11 MB/s per node (paper section V)
 
 
-def measure_r(problem: MetricLearning, bandwidth_bps: float) -> tuple[float, float]:
+def measure_r(m_pairs: int, d: int, seed: int,
+              bandwidth_bps: float) -> tuple[float, float]:
     """t_grad measured on this host (full-data subgradient, 1 node);
     t_msg = bytes/bandwidth (transmit + receive => 2x)."""
-    sub = MetricLearning(problem.u, problem.v, problem.s, 1).make_subgrad()
-    x = jnp.zeros((1, problem.dim))
-    g = jax.jit(lambda xx: sub(xx, 0, None))
+    prob1 = problems.build("metric_learning", n=1, m_pairs=m_pairs,
+                           d_feat=d, seed=seed)
+    x = jnp.zeros((1, prob1.d))
+    g = jax.jit(lambda xx: prob1.subgrad_stack(xx, 0, None))
     g(x).block_until_ready()
     t0 = time.perf_counter()
     reps = 5
     for _ in range(reps):
         g(x).block_until_ready()
     t_grad = (time.perf_counter() - t0) / reps
-    t_msg = 2.0 * problem.message_bytes() / bandwidth_bps
+    t_msg = 2.0 * (prob1.d * 8) / bandwidth_bps  # doubles, as in the paper
     return t_msg / t_grad, t_grad
+
+
+def cell_spec(n: int, m_pairs: int, d: int, T: int, A: float, r: float,
+              seed: int, eval_every: int = 10,
+              compress_keep: float | None = None) -> ExperimentSpec:
+    """One Fig. 1 cell: n-node complete graph, communicate every iteration,
+    stepsize a(t) = A / sqrt(t) with the driver's measured scale."""
+    backend_params = ({}
+                      if compress_keep is None
+                      else {"compress_keep": compress_keep})
+    return ExperimentSpec(
+        name="fig1_complete",
+        problem={"kind": "metric_learning",
+                 "params": {"n": n, "m_pairs": m_pairs, "d_feat": d,
+                            "seed": seed}},
+        topology={"kind": "complete"},
+        schedule={"kind": "every"},
+        backends=[{"kind": "dense", "params": backend_params}],
+        stepsize={"kind": "sqrt", "params": {"A": A}},
+        T=T, eval_every=eval_every, seed=seed, r=r)
 
 
 def run(m_pairs: int = 200_000, d: int = 24, n_max: int = 14, T: int = 300,
         eps_frac: float = 0.12, bandwidth_bps: float = PAPER_ETHERNET_BPS,
         seed: int = 0, verbose: bool = True, compress_keep: float = None,
         r_override: float = None):
-    problem_full = MetricLearning.build(m_pairs, d, 1, seed)
-    r, t_grad = measure_r(problem_full, bandwidth_bps)
+    r, t_grad = measure_r(m_pairs, d, seed, bandwidth_bps)
     if compress_keep is not None:
         # [beyond paper] top-k+EF message compression cuts wire bytes
         # (values + indices), and with them r -- paper eq. 11 then predicts
@@ -55,36 +85,28 @@ def run(m_pairs: int = 200_000, d: int = 24, n_max: int = 14, T: int = 300,
     if r_override is not None:
         r = r_override
     nopt = n_opt_complete(r)
-    f0 = float(problem_full.full_objective(jnp.zeros(problem_full.dim)))
+    prob1 = problems.build("metric_learning", n=1, m_pairs=m_pairs,
+                           d_feat=d, seed=seed)
+    f0 = prob1.f0()
     eps_target = eps_frac * f0
     # paper-optimal stepsize scale (eq. 18 with h=1, lam2=0): A = R/(L*sqrt(31))
-    g0 = problem_full.make_subgrad()(jnp.zeros((1, problem_full.dim)), 0, None)
+    g0 = prob1.subgrad_stack(jnp.zeros((1, prob1.d)), 0, None)
     L = float(jnp.linalg.norm(g0[0]))
     A_scale = 10.0 / (L * np.sqrt(31.0))
 
     rows = []
     for n in range(1, n_max + 1):
-        prob = MetricLearning(problem_full.u, problem_full.v,
-                              problem_full.s, n)
         # paper eq. (2) normalization: node subgradients are LOCAL sums over
         # m/n pairs, so the consensus direction shrinks ~1/n vs the n=1 run;
         # scaling a(t) by n keeps the effective step n-invariant.
-        sim = DDASimulator(
-            prob.make_subgrad(),
-            jax.jit(prob.full_objective),
-            complete_graph(n),
-            EveryIteration(),
-            a_fn=lambda t, n=n: n * A_scale / jnp.sqrt(t),
-            projection=prob.projection,
-            r=r, compress_keep=compress_keep)
-        x0 = jnp.zeros((n, prob.dim))
-        trace = sim.run(x0, T, eval_every=10, seed=seed)
-        tta = sim.time_to_reach(trace, eps_target)
+        res = run_spec(cell_spec(n, m_pairs, d, T, n * A_scale, r, seed,
+                                 compress_keep=compress_keep))
+        tta = trace_time_to_reach(res.trace, eps_target)
         rows.append({"n": n, "time_to_eps": tta,
-                     "final_F": trace.fvals[-1]})
+                     "final_F": res.trace.fvals[-1]})
         if verbose:
             print(f"[fig1] n={n:2d} time_to_eps={tta:9.3f} "
-                  f"final_F={trace.fvals[-1]:9.3f}", flush=True)
+                  f"final_F={res.trace.fvals[-1]:9.3f}", flush=True)
 
     finite = [row for row in rows if np.isfinite(row["time_to_eps"])]
     best_n = (min(finite, key=lambda row: row["time_to_eps"])["n"]

@@ -10,6 +10,10 @@ directly and run DDA with exact mixing -- identical time-model semantics.
 (Lossy top-k+EF message compression is the beyond-paper alternative; it is
 exercised in benchmarks/fig1_complete.run(compress_keep=...) and unit
 tested for convergence in tests/test_dda.py.)
+
+Like fig1_complete, every cell is an `ExperimentSpec` through `repro.run()`
+(this driver only rescales the measured r before delegating);
+benchmarks/manifests/fig1_reduced.json checks in the low-r smoke cell.
 """
 
 from __future__ import annotations
@@ -21,10 +25,8 @@ PCA_BYTE_RATIO = (87 * 87 + 1) / (784 * 784 + 1)  # the paper's reduction
 
 def run(m_pairs: int = 200_000, d: int = 24, n_max: int = 14, T: int = 300,
         seed: int = 0, verbose: bool = True):
-    base = fig1_complete.measure_r(
-        __import__("benchmarks.paper_problems", fromlist=["MetricLearning"]
-                   ).MetricLearning.build(m_pairs, d, 1, seed),
-        fig1_complete.PAPER_ETHERNET_BPS)[0]
+    base = fig1_complete.measure_r(m_pairs, d, seed,
+                                   fig1_complete.PAPER_ETHERNET_BPS)[0]
     return fig1_complete.run(
         m_pairs=m_pairs, d=d, n_max=n_max, T=T, seed=seed, verbose=verbose,
         r_override=base * PCA_BYTE_RATIO)

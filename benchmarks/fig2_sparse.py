@@ -13,52 +13,76 @@ Claims reproduced (EXPERIMENTS.md section 'Fig 2'):
 Stepsizes are schedule-optimized per the paper (A = 2R^2/C_sched, eq.
 18/31) with a uniform empirical multiplier compensating the conservative
 bound constants.
+
+Every cell is a declarative `ExperimentSpec` through `repro.run()` on the
+registry "nonsmooth" problem (the same `data.pipeline` centers the old
+hand-wired NonsmoothQuadratics built from); the wiring equivalence is
+gated bit-identically in tests/test_experiments_migration.py and
+benchmarks/manifests/fig2_sparse.json checks in the p=0.3 regime.
 """
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.paper_problems import NonsmoothQuadratics
-from repro.core import (DDASimulator, EveryIteration, IncreasinglySparse,
-                        Periodic, complete_graph, h_opt_int)
+from repro.core import h_opt_int
+from repro.core.schedules import (EveryIteration, IncreasinglySparse,
+                                  Periodic)
+from repro.experiments import ExperimentSpec, run as run_spec
+from repro.experiments.components import problems
 
 R_PAPER = 0.00089  # the paper's measured r for this problem
 R_HIGH = 0.01      # a higher-r regime showing the eq. (20) crossover
 
+SCHEDULES = {
+    "h1": ({"kind": "every"}, EveryIteration()),
+    "h2": ({"kind": "periodic", "params": {"h": 2}}, Periodic(h=2)),
+    "p03": ({"kind": "sparse", "params": {"p": 0.3}},
+            IncreasinglySparse(p=0.3)),
+    "p1": ({"kind": "sparse", "params": {"p": 1.0}},
+           IncreasinglySparse(p=1.0)),
+}
+
+
+def cell_spec(n_nodes: int, M: int, d: int, T: int, schedule: dict,
+              A: float, r: float, seed: int,
+              eval_every: int = 20) -> ExperimentSpec:
+    """One Fig. 2 cell: complete graph, schedule-optimized stepsize."""
+    return ExperimentSpec(
+        name="fig2_sparse",
+        problem={"kind": "nonsmooth",
+                 "params": {"n": n_nodes, "M": M, "d": d, "seed": seed}},
+        topology={"kind": "complete"},
+        schedule=schedule,
+        backends=[{"kind": "dense"}],
+        stepsize={"kind": "sqrt", "params": {"A": A}},
+        T=T, eval_every=eval_every, seed=seed, r=r)
+
 
 def run(n_nodes: int = 10, M: int = 150, d: int = 100, T: int = 300,
         seed: int = 0, verbose: bool = True, mult: float = 4.0):
-    prob = NonsmoothQuadratics.build(n_nodes, M, d, seed, center_scale=1.5)
-    graph = complete_graph(n_nodes)
-    fstar = prob.optimum_value(iters=1500)
+    prob = problems.build("nonsmooth", n=n_nodes, M=M, d=d, seed=seed)
+    fstar = prob.fstar
 
-    xc = np.asarray(prob.centers).mean(axis=(0, 1, 2))
+    from repro.experiments.components import nonsmooth_centers
+    centers = nonsmooth_centers(n_nodes, M, d, seed)
+    xc = centers.mean(axis=(0, 1, 2))
     R_est = float(np.linalg.norm(xc)) + 1.0
-    g0 = prob.make_subgrad()(jnp.zeros((n_nodes, d)), 0, None)
+    g0 = prob.subgrad_stack(jnp.zeros((n_nodes, d)), 0, None)
     L = float(jnp.mean(jnp.linalg.norm(g0, axis=1)))
 
-    schedules = {
-        "h1": EveryIteration(),
-        "h2": Periodic(h=2),
-        "p03": IncreasinglySparse(p=0.3),
-        "p1": IncreasinglySparse(p=1.0),
-    }
     results = {}
-    summary = {"h_opt_theory": h_opt_int(n_nodes, graph.degree, R_PAPER, 0.0),
+    summary = {"h_opt_theory": h_opt_int(n_nodes, n_nodes - 1, R_PAPER, 0.0),
                "f_star": fstar, "regimes": {}}
     for r in (R_PAPER, R_HIGH):
         reg = {}
-        for name, sched in schedules.items():
-            C = sched.constant(L, R_est, 0.0)  # lam2 = 0 (complete graph)
+        for name, (sched_comp, sched_obj) in SCHEDULES.items():
+            C = sched_obj.constant(L, R_est, 0.0)  # lam2 = 0 (complete)
             A_scale = mult * 2.0 * R_est * R_est / C
-            sim = DDASimulator(
-                prob.make_subgrad(), jax.jit(prob.full_objective), graph,
-                sched, a_fn=lambda t, A=A_scale: A / jnp.sqrt(t), r=r)
-            trace = sim.run(jnp.zeros((n_nodes, d)), T, eval_every=20,
-                            seed=seed)
+            res = run_spec(cell_spec(n_nodes, M, d, T, sched_comp, A_scale,
+                                     r, seed))
+            trace = res.trace
             thr = fstar + 0.01 * abs(fstar)
             tta = next((t for t, f in zip(trace.sim_time, trace.fvals)
                         if f <= thr), float("inf"))

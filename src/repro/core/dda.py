@@ -12,9 +12,14 @@ z_i(t) = z_i(t-1) + g_i(t-1)  (paper IV.A).
 
 Two execution modes:
 
-  * `DDASimulator` -- stacked (n, ...) arrays on one device; mixing by dense
-    P matmul. Bit-faithful to the paper's algorithm; used for the paper's
-    experiments (benchmarks/fig*) and as the oracle for the distributed mode.
+  * `DDASimulator` -- stacked (n, ...) arrays on one device. Mixing is the
+    dense P matmul oracle or, for k-regular graphs, the sparse fast path
+    (neighbor-index gather + the fused `kernels.ops.gossip_gather_mix`
+    accumulation, O(nkd) instead of O(n^2 d)); the whole run executes as
+    ONE compiled scan over precomputed comm-mask data (see `run`), with
+    `run_batch` vmapping sweep lanes. Bit-faithful to the paper's
+    algorithm; used for the paper's experiments (benchmarks/fig*) and as
+    the oracle for the distributed mode.
   * `dda_local_step` / `dda_mix_step` -- per-shard pytree updates with
     `mix_collective` over a mesh axis, used by the production launcher. Both
     are pure and jit/shard_map friendly; the schedule (which step type to run)
@@ -28,7 +33,7 @@ from __future__ import annotations
 import dataclasses
 import math
 from functools import partial
-from typing import Any, Callable, NamedTuple
+from typing import Any, Callable, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -183,18 +188,44 @@ class DDASimulator:
     Args:
       subgrad_fn: (x_stack[n, ...], t) -> g_stack[n, ...]; node i's
         subgradient of f_i at x_i. Deterministic (batch) or stochastic.
-      eval_fn: x[...] -> scalar F(x) on the FULL objective.
+      eval_fn: x[...] -> scalar F(x) on the FULL objective. Must be
+        jax-traceable: the default scanned loop evaluates the trace
+        device-side (use `run(..., loop="segment")` for a host-only
+        eval_fn).
       graph: communication topology (mixing matrix P taken from it).
       schedule: communication schedule (every / periodic-h / sparse-p).
       a_fn: stepsize a(t).
       projection: optional Proj_X applied after the prox step (stacked).
       r: communication/computation tradeoff for the simulated time axis.
+      compress_keep: top-k + error-feedback message compression ratio
+        ([beyond paper]; forces the dense mix, which models the compressed
+        transmissions).
+      mix: "auto" | "dense" | "sparse" mixing realization. "dense" is the
+        P @ z matmul oracle (the seed path; O(n^2 d)). "sparse" is the
+        k-regular fast path: a neighbor-index gather + the fused
+        `kernels.ops.gossip_gather_mix` accumulation (O(n k d)) -- the
+        paper's degree-scaling communication argument applied to the
+        simulator's own memory traffic. "auto" picks sparse whenever the
+        graph's permutation edge set is materially sparser than complete
+        (k + 1 < n), compression is off, and any `mix_weights` override is
+        supported on the edge set; it falls back to dense otherwise (the
+        resolved choice is exposed as `self.mix_mode`).
+      mix_weights: optional (n, n) mixing-matrix override (e.g. the
+        straggler-reweighted effective P from
+        `AdaptiveController(reweight_gossip=True)`). The sparse path folds
+        it into per-edge weight vectors (slot weight W[i, src] /
+        multiplicity, the netsim engines' convention); a matrix with
+        weight OUTSIDE the graph's edge-plus-diagonal support cannot be
+        gathered along edges, so it automatically falls back to the dense
+        matmul ("non-regular" in the kernel's sense).
     """
 
     def __init__(self, subgrad_fn, eval_fn, graph: CommGraph,
                  schedule: CommSchedule | None = None,
                  a_fn=None, projection=None, r: float = 0.0,
-                 compress_keep: float | None = None):
+                 compress_keep: float | None = None,
+                 mix: str = "auto",
+                 mix_weights: np.ndarray | None = None):
         self.subgrad_fn = subgrad_fn
         self.eval_fn = eval_fn
         self.graph = graph
@@ -203,16 +234,30 @@ class DDASimulator:
         self.projection = projection
         self.r = float(r)
         self.compress_keep = compress_keep
-        self._P = jnp.asarray(graph.mixing_matrix(), jnp.float32)
+        self.mix_weights = (None if mix_weights is None
+                            else np.asarray(mix_weights, np.float64))
+        self.mix_mode = self._resolve_mix_mode(mix)
+        P_host = (self.mix_weights if self.mix_weights is not None
+                  else graph.mixing_matrix())
+        self._P = jnp.asarray(P_host, jnp.float32)
         # off-diagonal mixing applies to RECEIVED (possibly compressed)
         # messages; the diagonal always uses the node's exact own state.
         self._P_off = self._P - jnp.diag(jnp.diag(self._P))
         self._P_diag = jnp.diag(self._P)
+        if self.mix_mode == "sparse":
+            S_in, w_self, w_edge = self._sparse_weights()
+            self._S_in = jnp.asarray(S_in)
+            self._w_self = jnp.asarray(w_self, jnp.float32)
+            self._w_edge = jnp.asarray(w_edge, jnp.float32)
 
         def _mix(z, res):
             """One consensus round; top-k+error-feedback compression of the
             transmitted messages when compress_keep is set ([beyond paper],
             core/compression.py; reduces r by the compression ratio)."""
+            if self.mix_mode == "sparse":
+                from repro.kernels import ops as _kops
+                return _kops.gossip_gather_mix_impl(
+                    z, self._S_in, self._w_self, self._w_edge), res
             if self.compress_keep is None:
                 return _cons.mix_dense(z, self._P), res
             corrected = z + res
@@ -225,15 +270,22 @@ class DDASimulator:
                      + _cons.mix_dense(sent, self._P_off))
             return mixed, new_res
 
-        @jax.jit
-        def _segment(z, x, xhat, res, t0, comm_mask, keys):
-            """Scan `len(comm_mask)` iterations starting at t0 (0-indexed)."""
+        def make_body(always_comm: bool):
+            """always_comm=True drops the per-iteration `lax.cond`: the
+            host already knows the whole comm mask, and for an all-comm
+            window the straight-line mix fuses into the z/x/xhat update
+            chain (the cond boundary otherwise forces an extra
+            materialization of the mixed z -- ~20% of the iteration on the
+            CPU fast path)."""
             def body(carry, inp):
                 z, x, xhat, res, t = carry
                 comm, key = inp
                 g = self.subgrad_fn(x, t, key)
-                z_mixed, res_new = jax.lax.cond(
-                    comm, _mix, lambda zz, rr: (zz, rr), z, res)
+                if always_comm:
+                    z_mixed, res_new = _mix(z, res)
+                else:
+                    z_mixed, res_new = jax.lax.cond(
+                        comm, _mix, lambda zz, rr: (zz, rr), z, res)
                 z_new = z_mixed + g
                 t_new = t + 1.0
                 a_t = self.a_fn(t_new)
@@ -242,23 +294,184 @@ class DDASimulator:
                     x_new = self.projection(x_new)
                 xhat_new = (t * xhat + x_new) / t_new
                 return (z_new, x_new, xhat_new, res_new, t_new), None
+            return body
 
+        body = make_body(always_comm=False)
+
+        @jax.jit
+        def _segment(z, x, xhat, res, t0, comm_mask, keys):
+            """Scan `len(comm_mask)` iterations starting at t0 (0-indexed)."""
             (z, x, xhat, res, t), _ = jax.lax.scan(
                 body, (z, x, xhat, res, t0), (comm_mask, keys))
             return z, x, xhat, res, t
 
         self._segment = _segment
 
+        def make_scan_program(always_comm: bool):
+            """Whole-run program: scan over evaluation segments, each an
+            inner scan over iterations, with the trace statistics computed
+            device-side -- ONE dispatch instead of T/eval_every, and the
+            unit `run_batch` vmaps over sweep lanes.
+
+            masks: (S, E) comm flags; starts: (S,) segment start iteration
+            counts (the legacy per-segment RNG stream is reproduced by
+            folding each start into `root`); root: run PRNGKey.
+            """
+            seg_body = make_body(always_comm)
+
+            def prog(state, masks, starts, root):
+                def seg(carry, inp):
+                    mask, start = inp
+                    keys = jax.random.split(jax.random.fold_in(root, start),
+                                            mask.shape[0])
+                    carry, _ = jax.lax.scan(seg_body, carry, (mask, keys))
+                    z, x, xhat, res, t = carry
+                    fv = jnp.mean(jax.vmap(self.eval_fn)(xhat))
+                    fvc = self.eval_fn(jnp.mean(xhat, axis=0))
+                    dis = _cons.disagreement(z)
+                    return carry, (fv, fvc, dis)
+
+                return jax.lax.scan(seg, state, (masks, starts))
+            return prog
+
+        self._scan_programs = {ac: make_scan_program(ac)
+                               for ac in (False, True)}
+        self._scan_jits = {ac: jax.jit(p)
+                           for ac, p in self._scan_programs.items()}
+        self._scan_vmaps: dict[bool, Any] = {}  # built lazily by run_batch
+
+    # -- mix-mode resolution -------------------------------------------------
+
+    def _resolve_mix_mode(self, mix: str) -> str:
+        if mix not in ("auto", "dense", "sparse"):
+            raise ValueError(f"mix must be auto/dense/sparse, got {mix!r}")
+        if mix == "dense":
+            return "dense"
+        reasons = []
+        if self.compress_keep is not None:
+            reasons.append("compress_keep models compressed transmissions "
+                           "through the dense split")
+        if not self.graph.perms:
+            reasons.append("graph has no permutation edge set")
+        elif self.graph.degree + 1 >= self.graph.n:
+            reasons.append("graph is (near-)complete: the matmul moves "
+                           "less memory than a degree-(n-1) gather")
+        if self.mix_weights is not None and not self._edge_supported():
+            reasons.append("mix_weights has weight outside the graph's "
+                           "edge support (non-regular P)")
+        if reasons:
+            if mix == "sparse":
+                raise ValueError("sparse mix unavailable: "
+                                 + "; ".join(reasons))
+            return "dense"
+        return "sparse"
+
+    def _edge_supported(self) -> bool:
+        """True if mix_weights only places weight on self-loops + edges."""
+        W = self.mix_weights
+        n = self.graph.n
+        allowed = np.eye(n, dtype=bool)
+        for perm in self.graph.perms:
+            allowed[np.arange(n), np.asarray(perm)] = True
+        return not np.any((W != 0.0) & ~allowed)
+
+    def _sparse_weights(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(S_in, w_self, w_edge) for the gather path. S_in[i, j] is the
+        node whose value node i receives in permutation slot j. A
+        `mix_weights` override folds through the shared
+        `graphs.mix_weight_slots` convention (W[i, src] / multiplicity per
+        slot), keeping dense and netsim reweighted gossip comparable."""
+        g = self.graph
+        S_in = np.stack([np.asarray(p, dtype=np.int64) for p in g.perms],
+                        axis=1)  # (n, k)
+        if self.mix_weights is None:
+            # scalar weights: the op's uniform path scales the SUM of the
+            # gathers once instead of broadcasting k weight columns
+            return (S_in, np.float32(g.self_weight),
+                    np.float32(g.edge_weight))
+        from repro.core.graphs import mix_weight_slots
+        w_slot, w_self = mix_weight_slots(self.mix_weights, S_in)
+        return (S_in, w_self.astype(np.float32),
+                w_slot.astype(np.float32))
+
+    # -- run loops -----------------------------------------------------------
+
     def run(self, x0_stack: jax.Array, T: int, eval_every: int = 25,
-            seed: int = 0) -> SimTrace:
+            seed: int = 0, loop: str = "scan") -> SimTrace:
+        """Run T iterations, evaluating every `eval_every`.
+
+        loop="scan" (default): the whole run is one compiled program per
+        distinct segment length (at most two: the full segments and a
+        remainder), with the comm pattern precomputed host-side by
+        `CommSchedule.comm_mask` and fed as data. loop="segment" keeps the
+        legacy host loop -- one dispatch per evaluation segment with the
+        trace statistics computed eagerly -- for host-only eval_fns and as
+        the seed baseline `benchmarks/bench_dense.py` times against.
+        """
         n = self.graph.n
         assert x0_stack.shape[0] == n, "x0 must be stacked (n, ...)"
+        if loop == "segment":
+            return self._run_segment_loop(x0_stack, T, eval_every, seed)
+        if loop != "scan":
+            raise ValueError(f"loop must be 'scan' or 'segment', got {loop!r}")
+        mask_full = np.asarray(self.schedule.comm_mask(0, T), dtype=bool)
+        prog = self._scan_jits[bool(mask_full.all())]
+        state = (jnp.zeros_like(x0_stack), x0_stack, x0_stack,
+                 jnp.zeros_like(x0_stack), jnp.asarray(0.0, jnp.float32))
+        root = jax.random.PRNGKey(seed)
+        S, rem = divmod(T, eval_every)
+        outs = []
+        if S:
+            masks = jnp.asarray(mask_full[:S * eval_every]
+                                .reshape(S, eval_every))
+            starts = jnp.asarray(np.arange(S, dtype=np.int32) * eval_every)
+            state, out = prog(state, masks, starts, root)
+            outs.append(out)
+        if rem:
+            masks = jnp.asarray(mask_full[S * eval_every:].reshape(1, rem))
+            starts = jnp.asarray(np.array([S * eval_every], dtype=np.int32))
+            state, out = prog(state, masks, starts, root)
+            outs.append(out)
+        if not outs:  # T == 0: an empty trace, as the legacy loop returns
+            return SimTrace([], [], [], [], [])
+        fv, fvc, dis = (np.concatenate([np.asarray(o[i]) for o in outs])
+                        for i in range(3))
+        return self._assemble_trace(mask_full, T, eval_every, self.r,
+                                    fv, fvc, dis)
+
+    def _assemble_trace(self, mask_full, T, eval_every, r,
+                        fv, fvc, dis) -> SimTrace:
+        """Host bookkeeping: the simulated time axis (eq. 9 charges) from
+        the precomputed comm mask, accumulated segment-by-segment in the
+        exact float order of the legacy loop."""
+        n, k = self.graph.n, self.graph.degree
+        trace = SimTrace([], [], [], [], [])
+        sim_time = 0.0
+        comm_total = 0
+        done = 0
+        idx = 0
+        while done < T:
+            seg = min(eval_every, T - done)
+            n_comm = int(mask_full[done:done + seg].sum())
+            done += seg
+            comm_total += n_comm
+            sim_time += seg * (1.0 / n) + n_comm * k * r
+            trace.iters.append(done)
+            trace.sim_time.append(sim_time)
+            trace.fvals.append(float(fv[idx]))
+            trace.fvals_consensus.append(float(fvc[idx]))
+            trace.comms.append(comm_total)
+            trace.disagreement.append(float(dis[idx]))
+            idx += 1
+        return trace
+
+    def _run_segment_loop(self, x0_stack, T, eval_every, seed) -> SimTrace:
         z = jnp.zeros_like(x0_stack)
         x = x0_stack
         xhat = x0_stack
         res = jnp.zeros_like(x0_stack)
         t = jnp.asarray(0.0, jnp.float32)
-        k = self.graph.degree
+        n, k = self.graph.n, self.graph.degree
         trace = SimTrace([], [], [], [], [])
         sim_time = 0.0
         comm_total = 0
@@ -284,6 +497,60 @@ class DDASimulator:
             trace.comms.append(comm_total)
             trace.disagreement.append(float(_cons.disagreement(z)))
         return trace
+
+    def run_batch(self, x0_stack: jax.Array, T: int, eval_every: int,
+                  masks: np.ndarray, seeds: Sequence[int],
+                  rs: Sequence[float] | None = None) -> list[SimTrace]:
+        """Run B independent lanes of this simulator as ONE vmapped program.
+
+        Lanes share the problem closures, graph, stepsize and iteration
+        count but may differ in comm pattern (`masks`, shape (B, T) --
+        sweep axes like `schedule.params.h` are just data here), RNG stream
+        (`seeds`) and time charge (`rs`, host-side only). This is the
+        executor behind `repro.experiments.run_sweep(parallel="vmap")`:
+        one compile + one batched dispatch for a whole sweep grid instead
+        of a compile per cell.
+        """
+        n = self.graph.n
+        assert x0_stack.shape[0] == n, "x0 must be stacked (n, ...)"
+        masks = np.asarray(masks, dtype=bool)
+        B = masks.shape[0]
+        assert masks.shape == (B, T), masks.shape
+        assert len(seeds) == B, (len(seeds), B)
+        rs = [self.r] * B if rs is None else list(rs)
+        assert len(rs) == B
+
+        ac = bool(masks.all())
+        if ac not in self._scan_vmaps:
+            self._scan_vmaps[ac] = jax.jit(jax.vmap(
+                self._scan_programs[ac],
+                in_axes=((0, 0, 0, 0, 0), 0, None, 0)))
+        vprog = self._scan_vmaps[ac]
+        tile = lambda a: jnp.broadcast_to(a, (B,) + a.shape)
+        state = (tile(jnp.zeros_like(x0_stack)), tile(x0_stack),
+                 tile(x0_stack), tile(jnp.zeros_like(x0_stack)),
+                 jnp.zeros((B,), jnp.float32))
+        roots = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
+        S, rem = divmod(T, eval_every)
+        outs = []
+        if S:
+            m = jnp.asarray(masks[:, :S * eval_every]
+                            .reshape(B, S, eval_every))
+            starts = jnp.asarray(np.arange(S, dtype=np.int32) * eval_every)
+            state, out = vprog(state, m, starts, roots)
+            outs.append(out)
+        if rem:
+            m = jnp.asarray(masks[:, S * eval_every:].reshape(B, 1, rem))
+            starts = jnp.asarray(np.array([S * eval_every], dtype=np.int32))
+            state, out = vprog(state, m, starts, roots)
+            outs.append(out)
+        if not outs:  # T == 0: empty traces, as the legacy loop returns
+            return [SimTrace([], [], [], [], []) for _ in range(B)]
+        fv, fvc, dis = (np.concatenate([np.asarray(o[i]) for o in outs],
+                                       axis=1) for i in range(3))
+        return [self._assemble_trace(masks[b], T, eval_every, rs[b],
+                                     fv[b], fvc[b], dis[b])
+                for b in range(B)]
 
     def time_to_reach(self, trace: SimTrace, eps_value: float,
                       use_consensus: bool = False) -> float:

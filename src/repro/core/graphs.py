@@ -40,6 +40,7 @@ __all__ = [
     "random_regular_expander",
     "expander_sequence",
     "build_graph",
+    "mix_weight_slots",
     "doubly_stochastic_matrix",
     "lambda2",
     "spectral_gap",
@@ -335,6 +336,32 @@ def build_graph(name: str, n: int, *, k: int = 4, seed: int = 0) -> CommGraph:
     except KeyError:
         raise ValueError(f"unknown graph {name!r}; have "
                          f"{sorted(_BUILDERS) + ['expander<k>']}") from None
+
+
+def mix_weight_slots(W: np.ndarray, S_in: np.ndarray
+                     ) -> tuple[np.ndarray, np.ndarray]:
+    """Fold an (n, n) mixing-matrix override into per-slot edge weights.
+
+    S_in is the (n, k) in-neighbor slot structure (S_in[i, j] = the node
+    whose value node i receives in permutation slot j). W[i, src] is the
+    TOTAL (i, src) pair weight, so a src occupying several slots
+    contributes W / multiplicity per slot. Returns ((n, k) slot weights,
+    (n,) self weights), both float64.
+
+    This is THE definition of the reweighted-gossip slot convention: the
+    dense simulator's sparse mix (`core.dda.DDASimulator`) and the netsim
+    vectorized engine's stale mix both fold through here, which is what
+    keeps `AdaptiveController(reweight_gossip=True)` runs comparable
+    across execution modes (tests/test_kernels.py pins the convention
+    against the dense-matmul oracle independently).
+    """
+    W = np.asarray(W, dtype=np.float64)
+    n, k = S_in.shape
+    mult = np.zeros((n, k), dtype=np.int64)
+    for slot in range(k):
+        mult[:, slot] = (S_in == S_in[:, slot][:, None]).sum(axis=1)
+    rows = np.arange(n)[:, None]
+    return W[rows, S_in] / mult, np.diag(W).copy()
 
 
 def doubly_stochastic_matrix(graph: CommGraph) -> np.ndarray:

@@ -76,6 +76,26 @@ class CommSchedule:
         return np.array([self.next_comm_step(int(s)) for s in t],
                         dtype=np.int64)
 
+    def comm_mask(self, t0: int, length: int) -> np.ndarray:
+        """Boolean mask over iterations t0+1 .. t0+length: True where the
+        iteration communicates.
+
+        This is the whole-run precompute behind `DDASimulator`'s scanned
+        segment loop: the comm pattern becomes DATA fed to one compiled
+        program instead of a host-side `is_comm_step` query per iteration
+        per dispatch. The base implementation hops `next_comm_step`
+        (O(#comm steps), schedule-agnostic); Every/Periodic/Sparse/
+        Piecewise override with pure array arithmetic.
+        """
+        mask = np.zeros(int(length), dtype=bool)
+        t = int(t0)
+        end = int(t0) + int(length)
+        while True:
+            t = self.next_comm_step(t)
+            if t > end:
+                return mask
+            mask[t - t0 - 1] = True
+
     def constant(self, L: float, R: float, lam2: float) -> float:
         raise NotImplementedError
 
@@ -97,6 +117,9 @@ class EveryIteration(CommSchedule):
 
     def next_comm_step_batch(self, t: np.ndarray) -> np.ndarray:
         return np.asarray(t, dtype=np.int64) + 1
+
+    def comm_mask(self, t0: int, length: int) -> np.ndarray:
+        return np.ones(int(length), dtype=bool)
 
     def constant(self, L: float, R: float, lam2: float) -> float:
         return c1_constant(L, R, lam2)
@@ -144,6 +167,10 @@ class Periodic(CommSchedule):
         m = np.maximum(1, (t - 1) // self.h + 1)
         return 1 + m * self.h
 
+    def comm_mask(self, t0: int, length: int) -> np.ndarray:
+        t = np.arange(int(t0) + 1, int(t0) + int(length) + 1, dtype=np.int64)
+        return (t > 1) & ((t - 1) % self.h == 0)
+
     def constant(self, L: float, R: float, lam2: float) -> float:
         return ch_constant(L, R, lam2, self.h)
 
@@ -176,6 +203,21 @@ class IncreasinglySparse(CommSchedule):
             j += 1
         return times
 
+    def _comm_times_past(self, upto: int) -> np.ndarray:
+        """All comm times for j = 1..jmax with jmax chosen so the tail
+        strictly exceeds `upto` (sum_{i<=j} i^p >= j^(p+1)/(p+1), so any
+        j > ((p+1) upto)^(1/(p+1)) lands past it). The partial sums are
+        accumulated with host floats in the exact order of the scalar
+        queries above, so the vectorized answers can never drift from
+        `is_comm_step`/`next_comm_step` by a ulp of `pow`."""
+        upto = max(int(upto), 1)
+        jmax = int(((self.p + 1.0) * upto) ** (1.0 / (self.p + 1.0))) + 2
+        steps = np.array([float(j) ** self.p for j in range(1, jmax + 1)],
+                         dtype=np.float64)
+        times = np.ceil(np.cumsum(steps)).astype(np.int64)
+        assert times[-1] > upto, (times[-1], upto)
+        return times
+
     def is_comm_step(self, t: int) -> bool:
         # t is a comm step iff exists j with ceil(sum_{i<=j} i^p) == t.
         acc, j = 0.0, 1
@@ -199,6 +241,23 @@ class IncreasinglySparse(CommSchedule):
             if ct > t:
                 return ct
             j += 1
+
+    def next_comm_step_batch(self, t: np.ndarray) -> np.ndarray:
+        """Vectorized closed form: the comm times are the ceil'd partial
+        sums of j^p, so 'first comm step strictly after t' is one
+        searchsorted into that (precomputed) sequence -- no per-element
+        Python iteration, usable inside the scanned-mask precompute."""
+        t = np.asarray(t, dtype=np.int64)
+        times = self._comm_times_past(int(t.max()) if t.size else 1)
+        return times[np.searchsorted(times, t, side="right")]
+
+    def comm_mask(self, t0: int, length: int) -> np.ndarray:
+        t0, length = int(t0), int(length)
+        mask = np.zeros(length, dtype=bool)
+        times = self._comm_times_past(t0 + length)
+        sel = times[(times > t0) & (times <= t0 + length)]
+        mask[sel - t0 - 1] = True
+        return mask
 
     def constant(self, L: float, R: float, lam2: float) -> float:
         return cp_constant(L, R, lam2, self.p)
@@ -329,6 +388,19 @@ class PiecewisePeriodic(CommSchedule):
             if end is None or cand <= end:
                 return cand
             j += 1
+
+    def comm_mask(self, t0: int, length: int) -> np.ndarray:
+        """Vectorized `is_comm_step` over one iteration window: resolve
+        every iteration's segment with one searchsorted, then apply each
+        segment's anchored modulus -- pure array arithmetic regardless of
+        how many splices the controller has appended."""
+        t = np.arange(int(t0) + 1, int(t0) + int(length) + 1, dtype=np.int64)
+        starts = np.asarray(self._starts, dtype=np.int64)
+        hs = np.asarray(self._hs, dtype=np.int64)
+        anchors = np.asarray(self._anchors, dtype=np.int64)
+        j = np.maximum(np.searchsorted(starts, t, side="left") - 1, 0)
+        a = anchors[j]
+        return (t > 1) & (t > a) & ((t - a) % hs[j] == 0)
 
     def next_comm_step_batch(self, t: np.ndarray) -> np.ndarray:
         t = np.asarray(t, dtype=np.int64)

@@ -15,6 +15,7 @@ seeded traces bit-for-bit (gated in tests/test_experiments_migration.py).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Any, Callable
 
@@ -23,6 +24,7 @@ import numpy as np
 from repro.core import graphs as _graphs
 from repro.core import schedules as _sched
 from repro.core.dda import stepsize_sqrt
+from repro.data.pipeline import metric_learning_pairs
 from repro.experiments.registry import Registry
 from repro.netsim.problems import quadratic_consensus as _quadratic
 
@@ -55,6 +57,8 @@ class Problem:
       eval_fn:       numpy `x -> float` full objective (NetSimulator).
       subgrad_stack: jax `(x_stack, t, key) -> g_stack` (DDASimulator).
       objective:     jax `x -> scalar` full objective (DDASimulator).
+      projection:    optional stacked Proj_X for constrained problems
+                     (jax; applied by DDASimulator after the prox step).
 
     `fstar_fn` computes (or looks up) the centralized optimum F*; it can be
     expensive (subgradient descent for the non-smooth problem), so it is
@@ -68,6 +72,7 @@ class Problem:
     eval_fn: Callable[[np.ndarray], float]
     subgrad_stack: Callable | None = None
     objective: Callable | None = None
+    projection: Callable | None = None
     fstar_fn: Callable[[], float] | None = None
     _fstar: float | None = dataclasses.field(default=None, repr=False)
 
@@ -128,7 +133,11 @@ def _quadratic_problem(n: int, d: int, seed: int = 0,
                    fstar_fn=lambda: float(eval_fn(centers.mean(axis=0))))
 
 
-def _nonsmooth_centers(n: int, M: int, d: int, seed: int) -> np.ndarray:
+def nonsmooth_centers(n: int, M: int, d: int, seed: int) -> np.ndarray:
+    """The registry nonsmooth problem's center tensor (n, M, 2, d). Public
+    so drivers that need problem GEOMETRY (fig2's R_est radius estimate)
+    read the exact centers the problem optimizes instead of regenerating
+    with their own copy of the center_scale constant."""
     from repro.data.pipeline import nonsmooth_quadratic_problem
     return nonsmooth_quadratic_problem(n, M, d, seed,
                                        center_scale=1.5).astype(np.float64)
@@ -170,7 +179,7 @@ def _nonsmooth_problem(n: int, M: int = 30, d: int = 20,
     """Paper section V.B non-smooth quadratics, f_i = sum_j max(l1, l2).
     Numpy closures moved verbatim from benchmarks/fig_async.build_problem;
     the jax half mirrors benchmarks/paper_problems.NonsmoothQuadratics."""
-    centers = _nonsmooth_centers(n, M, d, seed)
+    centers = nonsmooth_centers(n, M, d, seed)
 
     def grad_fn(i, x, t):
         diff = x[None, None, :] - centers[i]          # (M, 2, d)
@@ -245,6 +254,93 @@ def _least_squares_problem(n: int, d: int = 64, m_per_node: int = 200,
     return Problem(name="least_squares", n=n, d=d, grad_fn=grad_fn,
                    eval_fn=eval_fn, subgrad_stack=subgrad_stack,
                    objective=objective, fstar_fn=fstar)
+
+
+@functools.lru_cache(maxsize=4)
+def _metric_pairs_cached(m_pairs: int, d_feat: int, seed: int):
+    """The pair set is independent of the node count, but the runner's
+    problem cache keys on n -- without this, a fig1-style n sweep would
+    regenerate the (2 m_pairs, d) synthetic dataset once per cell."""
+    return metric_learning_pairs(m_pairs, d_feat, seed)
+
+
+@problems.register("metric_learning")
+def _metric_learning_problem(n: int, m_pairs: int = 2000, d_feat: int = 8,
+                             seed: int = 0) -> Problem:
+    """Paper section V.A metric learning: x = [vec(A) | b], hinge losses
+    s_j * (dist_A(u_j, v_j) - b) + 1 over similar/dissimilar pairs, with
+    Proj onto {A PSD, b >= 1}. The jax half mirrors
+    benchmarks/paper_problems.MetricLearning (the fig1 driver's problem,
+    now spec-addressable); pairs come from the same
+    `data.pipeline.metric_learning_pairs` generator. The state dimension is
+    d_feat^2 + 1 -- the paper's quadratic-in-d message-size regime. No
+    closed-form F*, so eps targets must come from the driver (fig1 uses a
+    fraction of F(0)).
+    """
+    u_np, v_np, s_np = _metric_pairs_cached(m_pairs, d_feat, seed)
+    dim = d_feat * d_feat + 1
+    base = m_pairs // n
+    slices = [slice(i * base, (i + 1) * base) for i in range(n)]
+
+    def _split_np(x):
+        return x[:d_feat * d_feat].reshape(d_feat, d_feat), x[d_feat * d_feat]
+
+    def grad_fn(i, x, t):
+        A, b = _split_np(x)
+        u, v, s = u_np[slices[i]], v_np[slices[i]], s_np[slices[i]]
+        diff = u - v
+        dist2 = np.einsum("md,de,me->m", diff, A, diff)
+        w = np.where(s * (dist2 - b) + 1.0 > 0.0, s, 0.0)
+        gA = np.einsum("m,md,me->de", w, diff, diff)
+        return np.concatenate([gA.reshape(-1), [-np.sum(w)]])
+
+    def eval_fn(x):
+        A, b = _split_np(np.asarray(x))
+        diff = u_np - v_np
+        dist2 = np.einsum("md,de,me->m", diff, A, diff)
+        return float(np.sum(np.maximum(0.0, s_np * (dist2 - b) + 1.0)))
+
+    import jax
+    import jax.numpy as jnp
+    u_j, v_j, s_j = jnp.asarray(u_np), jnp.asarray(v_np), jnp.asarray(s_np)
+    us = jnp.stack([u_j[sl] for sl in slices])
+    vs = jnp.stack([v_j[sl] for sl in slices])
+    ss = jnp.stack([s_j[sl] for sl in slices])
+
+    def _split(x):
+        return x[:d_feat * d_feat].reshape(d_feat, d_feat), x[d_feat * d_feat]
+
+    def node_grad(x, u, v, s):
+        A, b = _split(x)
+        diff = u - v
+        dist2 = jnp.einsum("md,de,me->m", diff, A, diff)
+        w = jnp.where((s * (dist2 - b) + 1.0) > 0.0, s, 0.0)
+        gA = jnp.einsum("m,md,me->de", w, diff, diff)
+        return jnp.concatenate([gA.reshape(-1), -jnp.sum(w)[None]])
+
+    def subgrad_stack(x_stack, t, key):
+        return jax.vmap(node_grad)(x_stack, us, vs, ss)
+
+    def objective(x):
+        A, b = _split(x)
+        diff = u_j - v_j
+        dist2 = jnp.einsum("md,de,me->m", diff, A, diff)
+        return jnp.sum(jnp.maximum(0.0, s_j * (dist2 - b) + 1.0))
+
+    def _proj_one(x):
+        A, b = _split(x)
+        A = 0.5 * (A + A.T)
+        evals, evecs = jnp.linalg.eigh(A)
+        A = (evecs * jnp.maximum(evals, 0.0)) @ evecs.T
+        return jnp.concatenate([A.reshape(-1),
+                                jnp.maximum(b, 1.0)[None]])
+
+    def projection(x_stack):
+        return jax.vmap(_proj_one)(x_stack)
+
+    return Problem(name="metric_learning", n=n, d=dim, grad_fn=grad_fn,
+                   eval_fn=eval_fn, subgrad_stack=subgrad_stack,
+                   objective=objective, projection=projection)
 
 
 @problems.register("lm")

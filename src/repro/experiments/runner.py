@@ -113,6 +113,21 @@ def _target_fields(trace: SimTrace, eps_value: float | None
     return eps_value, (None if math.isinf(tta) else tta)
 
 
+def _dense_predictions(graph: CommGraph, r: float, schedule,
+                       lam2: float) -> dict[str, Any]:
+    """Paper design-rule outputs for a dense run -- one definition shared
+    by the serial backend and the vmapped sweep executor, so the two can
+    never drift."""
+    return {
+        "r": r,
+        "n_opt": _tradeoff.n_opt_complete(r),
+        "h_opt": _tradeoff.h_opt_int(graph.n, graph.degree, r, lam2),
+        "tau_eps": _tradeoff.time_to_accuracy(
+            PREDICT_EPS, graph.n, graph.degree, r, lam2,
+            schedule=schedule),
+    }
+
+
 # ---------------------------------------------------------------------------
 # dense backend
 # ---------------------------------------------------------------------------
@@ -124,6 +139,8 @@ def _run_dense(spec: ExperimentSpec, backend: ComponentSpec) -> RunResult:
 
     params = dict(backend.params)
     compress_keep = params.pop("compress_keep", None)
+    mix = params.pop("mix", "auto")
+    loop = params.pop("loop", "scan")
     _require(not params, f"dense backend has unknown params {sorted(params)}")
 
     problem = _build_problem(spec)
@@ -145,11 +162,15 @@ def _run_dense(spec: ExperimentSpec, backend: ComponentSpec) -> RunResult:
     import jax
     sim = DDASimulator(problem.subgrad_stack, jax.jit(problem.objective),
                        graph, schedule, a_fn=a_fn, r=spec.r,
-                       compress_keep=compress_keep)
+                       compress_keep=compress_keep, mix=mix,
+                       projection=problem.projection)
     x0 = jnp.zeros((problem.n, problem.d))
-    extras: dict[str, Any] = {}
+    extras: dict[str, Any] = {"mix_mode": sim.mix_mode}
 
     if spec.controller is not None:
+        _require(loop == "scan",
+                 "a dense_adaptive run drives its own wall-clock chunked "
+                 "segment loop; leave the 'loop' param unset")
         _require(spec.controller.kind == "dense_adaptive",
                  f"dense backend needs a 'dense_adaptive' controller, got "
                  f"{spec.controller.kind!r}")
@@ -167,19 +188,12 @@ def _run_dense(spec: ExperimentSpec, backend: ComponentSpec) -> RunResult:
     else:
         t0 = time.perf_counter()
         trace = sim.run(x0, spec.T, eval_every=spec.eval_every,
-                        seed=spec.seed)
+                        seed=spec.seed, loop=loop)
         wall = time.perf_counter() - t0
 
     eps_value, tta = _target_fields(trace, _eps_value(spec, problem))
-    lam2 = graph.lambda2()
-    predictions = {
-        "r": spec.r,
-        "n_opt": _tradeoff.n_opt_complete(spec.r),
-        "h_opt": _tradeoff.h_opt_int(graph.n, graph.degree, spec.r, lam2),
-        "tau_eps": _tradeoff.time_to_accuracy(
-            PREDICT_EPS, graph.n, graph.degree, spec.r, lam2,
-            schedule=schedule),
-    }
+    predictions = _dense_predictions(graph, spec.r, schedule,
+                                     graph.lambda2())
     return RunResult(spec=spec, backend=backend, trace=trace, wall_s=wall,
                      eps_value=eps_value, time_to_target=tta,
                      predictions=predictions, extras=extras)
@@ -501,10 +515,143 @@ def run_all(spec: ExperimentSpec) -> list[RunResult]:
 
 
 def run_sweep(spec: ExperimentSpec, axis: str, values: Sequence[Any],
-              backend: int | str | ComponentSpec | None = None
-              ) -> list[RunResult]:
+              backend: int | str | ComponentSpec | None = None,
+              parallel: str | None = None,
+              processes: int | None = None) -> list[RunResult]:
     """One run per value of a dotted-path axis -- the paper's grids as one
     call: `run_sweep(spec, "schedule.params.h", [1, 2, 4, 8, 16])`,
     `run_sweep(spec, "problem.params.n", [4, 8, 16])`,
-    `run_sweep(spec, "r", [0.001, 0.01, 0.1])`."""
-    return [run(spec.with_value(axis, v), backend=backend) for v in values]
+    `run_sweep(spec, "r", [0.001, 0.01, 0.1])`.
+
+    `parallel` picks the executor (results are index-aligned with `values`
+    and cell-for-cell identical to the serial path up to float fusion):
+
+      * None / "serial" -- one `run()` per cell, in order (the baseline).
+      * "vmap" -- dense-backend grids whose cells differ only along
+        data-batchable axes (seed / r / the whole schedule component /
+        eps_frac / name) are stacked into ONE vmapped+jitted scanned run
+        (`DDASimulator.run_batch`): one compile and one batched dispatch
+        for the grid instead of a fresh trace+compile per cell. Grids that
+        are not batchable (different shapes, controllers, netsim/launch
+        backends, host-only knobs) silently fall back to the serial path.
+      * "process" -- fan cells out across OS processes (spawn context, so
+        no forked jax runtime). Meant for the netsim backends, whose
+        event-driven runs are pure host numpy and deterministic for a
+        fixed spec -- results merge back in order, bit-identical to
+        serial. `processes` caps the pool (default: cell count capped by
+        CPU count).
+    """
+    cells = [spec.with_value(axis, v) for v in values]
+    if parallel in (None, "serial"):
+        return [run(c, backend=backend) for c in cells]
+    if parallel == "vmap":
+        out = _run_sweep_vmap(cells, backend)
+        if out is not None:
+            return out
+        return [run(c, backend=backend) for c in cells]
+    if parallel == "process":
+        return _run_sweep_process(cells, backend, processes)
+    raise ValueError(f"parallel must be None/'serial'/'vmap'/'process', "
+                     f"got {parallel!r}")
+
+
+# ---------------------------------------------------------------------------
+# sweep executors
+# ---------------------------------------------------------------------------
+
+
+#: spec fields a vmapped sweep may vary per lane: everything else must be
+#: identical across cells so one program (one problem, topology, stepsize
+#: and shape) serves every lane. The schedule varies because the scanned
+#: loop consumes it as a precomputed comm MASK (data); seed is the PRNG
+#: fold; r only shapes the host-side time axis; eps_frac/name are
+#: host-side bookkeeping.
+_VMAP_LANE_FIELDS = ("name", "seed", "r", "schedule", "eps_frac")
+
+
+def _vmap_signature(spec: ExperimentSpec, backend: ComponentSpec) -> str:
+    import json as _json
+    d = spec.to_dict()
+    for f in _VMAP_LANE_FIELDS:
+        d.pop(f)
+    d.pop("backends")
+    return _json.dumps([d, backend.to_dict()], sort_keys=True)
+
+
+def _run_sweep_vmap(cells: Sequence[ExperimentSpec],
+                    backend) -> list[RunResult] | None:
+    """Batched executor for shape-compatible dense cells; None = not
+    batchable (caller falls back to serial, which also surfaces any real
+    validation errors with the serial path's messages)."""
+    resolved = [_resolve_backend(c, backend) for c in cells]
+    if any(b.kind != "dense" for b in resolved):
+        return None
+    if any(c.controller is not None or c.time_limit is not None
+           for c in cells):
+        return None
+    if len({_vmap_signature(c, b) for c, b in zip(cells, resolved)}) != 1:
+        return None
+    spec0 = cells[0]
+    params = dict(resolved[0].params)
+    compress_keep = params.pop("compress_keep", None)
+    mix = params.pop("mix", "auto")
+    if params.pop("loop", "scan") != "scan" or params:
+        return None
+    if spec0.stepsize.kind == "inv_sqrt":
+        return None
+    problem = _build_problem(spec0)
+    if not isinstance(problem, C.Problem) or problem.subgrad_stack is None:
+        return None
+    graph = _build_topology(spec0, problem.n)
+    if not isinstance(graph, CommGraph):
+        return None
+
+    import jax
+    import jax.numpy as jnp
+    a_fn = _build_stepsize(spec0)
+    sim = DDASimulator(problem.subgrad_stack, jax.jit(problem.objective),
+                       graph, None, a_fn=a_fn, r=spec0.r,
+                       compress_keep=compress_keep, mix=mix,
+                       projection=problem.projection)
+    schedules = [_build_schedule(c) for c in cells]
+    masks = np.stack([s.comm_mask(0, spec0.T) for s in schedules])
+    x0 = jnp.zeros((problem.n, problem.d))
+    t0 = time.perf_counter()
+    traces = sim.run_batch(x0, spec0.T, spec0.eval_every, masks,
+                           seeds=[c.seed for c in cells],
+                           rs=[c.r for c in cells])
+    wall = time.perf_counter() - t0
+
+    lam2 = graph.lambda2()
+    results = []
+    for c, bk, sched, tr in zip(cells, resolved, schedules, traces):
+        eps_value, tta = _target_fields(tr, _eps_value(c, problem))
+        predictions = _dense_predictions(graph, c.r, sched, lam2)
+        results.append(RunResult(
+            spec=c, backend=bk, trace=tr, wall_s=wall / len(cells),
+            eps_value=eps_value, time_to_target=tta,
+            predictions=predictions,
+            extras={"mix_mode": sim.mix_mode, "vmap_lanes": len(cells)}))
+    return results
+
+
+def _process_cell(payload) -> RunResult:
+    """Top-level worker (picklable) for `parallel="process"`."""
+    spec_json, backend_ser = payload
+    spec = ExperimentSpec.from_json(spec_json)
+    backend = (ComponentSpec.from_dict(backend_ser)
+               if isinstance(backend_ser, dict) else backend_ser)
+    return run(spec, backend=backend)
+
+
+def _run_sweep_process(cells: Sequence[ExperimentSpec], backend,
+                       processes: int | None) -> list[RunResult]:
+    import multiprocessing as mp
+    import os
+    backend_ser = (backend.to_dict() if isinstance(backend, ComponentSpec)
+                   else backend)
+    payloads = [(c.to_json(indent=None), backend_ser) for c in cells]
+    n_proc = max(1, min(len(cells), processes or os.cpu_count() or 1))
+    ctx = mp.get_context("spawn")  # never fork an initialized jax runtime
+    with ctx.Pool(n_proc) as pool:
+        return pool.map(_process_cell, payloads, chunksize=1)

@@ -16,7 +16,9 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as _flash
-from repro.kernels.gossip_mix import _TILE, gossip_mix as _gossip
+from repro.kernels.gossip_mix import (_LANES, _SUBLANES, _TILE,
+                                      gossip_mix as _gossip,
+                                      gossip_mix_weighted as _gossip_w)
 from repro.kernels.selective_scan import selective_scan as _sscan
 from repro.kernels.ssd_scan import ssd_scan as _ssd
 
@@ -59,5 +61,58 @@ def gossip_mix(self_buf, neighbor_bufs, self_weight: float,
     return out[:M]
 
 
+def gossip_gather_mix_impl(z, S_in, w_self, w_edge, *,
+                           interpret: bool | None = None,
+                           use_kernel: bool | None = None):
+    """Sparse consensus round on a stacked z: neighbor-index gather + the
+    fused weighted accumulation (`gossip_mix_weighted`).
+
+    z: (n, ...) stacked node states; S_in: (n, k) in-neighbor indices
+    (S_in[i, j] = the node whose value node i receives in slot j);
+    w_self: (n,); w_edge: (n, k). Equals `W @ z.reshape(n, -1)` for the
+    mixing matrix W with diag(W) = w_self and W[i, S_in[i, j]] summing
+    w_edge[i, j] over slots.
+
+    Dispatch: on compiled backends (`use_kernel=True`, the default when not
+    interpreting) the gather feeds the Pallas kernel, which makes the k+1
+    AXPYs one VMEM-resident pass. Under `interpret=True` (this CPU
+    container) the Pallas interpreter costs ~ms per grid cell -- two orders
+    off the fused XLA lowering -- so the default routes to the bitwise-
+    equivalent jnp reference, which XLA fuses into a single gather+FMA loop
+    (~6x the dense matmul at n=256, k=4, d=4096; see BENCH_dense.json).
+    Tests pass `use_kernel=True` with `interpret=True` to validate the
+    kernel body itself.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    use_kernel = (not interpret) if use_kernel is None else use_kernel
+    if not use_kernel:
+        return ref.gossip_gather_mix_ref(z, S_in, w_self, w_edge)
+    n, k = S_in.shape
+    # the kernel consumes weight VECTORS; scalar (uniform) weights are just
+    # constant columns
+    if jnp.ndim(w_self) == 0:
+        w_self = jnp.full((n,), w_self, jnp.float32)
+    if jnp.ndim(w_edge) == 0:
+        w_edge = jnp.full((n, k), w_edge, jnp.float32)
+    zf = z.reshape(n, -1)
+    M = zf.shape[1]
+    pad_n = (-n) % _SUBLANES
+    pad_m = (-M) % _LANES
+    sb = jnp.pad(zf, ((0, pad_n), (0, pad_m)))
+    nbr = jnp.pad(jnp.moveaxis(zf[S_in], 1, 0),
+                  ((0, 0), (0, pad_n), (0, pad_m)))
+    ws = jnp.pad(w_self, (0, pad_n))
+    we = jnp.pad(w_edge, ((0, pad_n), (0, 0)))
+    out = _gossip_w(sb, nbr, ws, we, interpret=interpret)
+    return out[:n, :M].astype(z.dtype).reshape(z.shape)
+
+
+#: jitted front door; hot loops that are already inside their own jit call
+#: `gossip_gather_mix_impl` directly so the mix inlines into the caller's
+#: program (a nested pjit is a fusion boundary XLA will not cross)
+gossip_gather_mix = functools.partial(
+    jax.jit, static_argnames=("interpret", "use_kernel"))(
+        gossip_gather_mix_impl)
+
 __all__ = ["flash_attention", "selective_scan", "ssd_scan", "gossip_mix",
-           "ref"]
+           "gossip_gather_mix", "gossip_gather_mix_impl", "ref"]

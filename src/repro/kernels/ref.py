@@ -85,3 +85,34 @@ def gossip_mix_ref(self_buf, neighbor_bufs, self_weight, edge_weight
     acc = self_weight * self_buf.astype(jnp.float32)
     acc = acc + edge_weight * jnp.sum(neighbor_bufs.astype(jnp.float32), 0)
     return acc.astype(self_buf.dtype)
+
+
+def gossip_mix_weighted_ref(self_buf, neighbor_bufs, w_self, w_edge
+                            ) -> jax.Array:
+    """out[i] = w_self[i] * self[i] + sum_j w_edge[i, j] * nbr[j, i].
+    self_buf: (n, M); neighbor_bufs: (K, n, M); w_self: (n,);
+    w_edge: (n, K)."""
+    acc = w_self[:, None] * self_buf.astype(jnp.float32)
+    acc = acc + jnp.einsum("nk,knm->nm", w_edge.astype(jnp.float32),
+                           neighbor_bufs.astype(jnp.float32))
+    return acc.astype(self_buf.dtype)
+
+
+def gossip_gather_mix_ref(z, S_in, w_self, w_edge) -> jax.Array:
+    """One sparse consensus round on a stacked z, as a gather + weighted sum:
+    out[i] = w_self[i] z[i] + sum_j w_edge[i, j] z[S_in[i, j]].
+    z: (n, ...); S_in: (n, K) in-neighbor indices; w_self: (n,) or scalar;
+    w_edge: (n, K) or scalar (uniform lazy weights: one multiply over the
+    summed gathers instead of K weight broadcasts)."""
+    n, k = S_in.shape
+    zf = z.reshape(n, -1).astype(jnp.float32)
+    if jnp.ndim(w_edge) == 0:
+        acc = zf[S_in[:, 0]]
+        for j in range(1, k):
+            acc = acc + zf[S_in[:, j]]
+        out = w_self * zf + w_edge * acc
+        return out.astype(z.dtype).reshape(z.shape)
+    acc = w_self[:, None] * zf
+    for j in range(k):
+        acc = acc + w_edge[:, j][:, None] * zf[S_in[:, j]]
+    return acc.astype(z.dtype).reshape(z.shape)

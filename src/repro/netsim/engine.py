@@ -746,26 +746,22 @@ class VectorizedEngine:
         """Per-slot stale-mix weights from `Network.mix_weights`, or None
         when no reweighted P is installed (the uniform fast path).
 
-        Returns ((n, k) slot weights, (n,) self weights). `W[i, src]` is the
-        TOTAL (i, src) pair weight, so a src occupying several permutation
-        slots gets W / multiplicity per slot -- the exact convention
-        `AsyncDDANode._stale_mix` applies, keeping the engines equivalent.
-        Cached on the (W, S_in) object pair: a retune installs a new W, a
-        rewire a new S_in; both invalidate.
+        Returns ((n, k) slot weights, (n,) self weights), folded through
+        the shared `core.graphs.mix_weight_slots` convention (W[i, src] /
+        multiplicity per slot) -- the same fold `AsyncDDANode._stale_mix`
+        and the dense simulator's sparse gossip apply, keeping the engines
+        and execution modes equivalent. Cached on the (W, S_in) object
+        pair: a retune installs a new W, a rewire a new S_in; both
+        invalidate.
         """
         W = self.net.mix_weights
         if W is None:
             return None
         hit = self._mw_cache
         if hit is None or hit[0] is not W or hit[1] is not self.S_in:
-            rows = np.arange(self.n)[:, None]
-            Wslot = np.asarray(W, dtype=np.float64)[rows, self.S_in]
-            mult = np.zeros((self.n, self.k), dtype=np.int64)
-            for slot in range(self.k):
-                mult[:, slot] = (self.S_in
-                                 == self.S_in[:, slot][:, None]).sum(axis=1)
-            self._mw_cache = hit = (W, self.S_in, Wslot / mult,
-                                    np.diag(W).astype(np.float64))
+            from repro.core.graphs import mix_weight_slots
+            w_slot, w_self = mix_weight_slots(W, self.S_in)
+            self._mw_cache = hit = (W, self.S_in, w_slot, w_self)
         return hit[2], hit[3]
 
     def _comm_dda(self, ci: np.ndarray, stamps: np.ndarray,

@@ -122,3 +122,146 @@ def test_disagreement_decreases_with_communication():
                            a_fn=stepsize_sqrt(0.05))
         out[name] = sim.run(jnp.zeros((n, d)), 200, eval_every=200)
     assert out["every"].disagreement[-1] < out["h10"].disagreement[-1]
+
+
+# ---------------------------------------------------------------------------
+# device-resident fast path: scanned loop, sparse gossip, vmapped batch
+# ---------------------------------------------------------------------------
+
+
+def _expander(n, k=4, seed=0):
+    from repro.core.graphs import kregular_expander
+    return kregular_expander(n, k=k, seed=seed)
+
+
+def _rel(a, b):
+    a, b = np.asarray(a, np.float64), np.asarray(b, np.float64)
+    return float(np.max(np.abs(a - b) / np.maximum(np.abs(a), 1e-12)))
+
+
+@pytest.mark.parametrize("sched", [EveryIteration(), Periodic(h=3),
+                                   IncreasinglySparse(p=0.3)],
+                         ids=["every", "h3", "p03"])
+def test_scan_loop_matches_segment_loop(sched):
+    """The fully-scanned run == the legacy per-segment dispatch loop on the
+    same simulator: identical time axis and comm counts, fvals equal to
+    float-fusion tolerance (eval moves inside jit). Covers a partial final
+    segment (T % eval_every != 0)."""
+    n, d = 6, 12
+    subgrad, objective, _ = _quadratic_problem(n, d)
+    sim = DDASimulator(subgrad, jax.jit(objective), _expander(n, k=2),
+                       sched, a_fn=stepsize_sqrt(0.05), r=0.02)
+    seg = sim.run(jnp.zeros((n, d)), 103, eval_every=25, loop="segment")
+    scan = sim.run(jnp.zeros((n, d)), 103, eval_every=25, loop="scan")
+    assert seg.iters == scan.iters
+    assert seg.sim_time == scan.sim_time
+    assert seg.comms == scan.comms
+    assert _rel(seg.fvals, scan.fvals) < 1e-5
+    assert _rel(seg.fvals_consensus, scan.fvals_consensus) < 1e-5
+
+
+def test_sparse_mix_matches_dense_on_expander():
+    """The gather+fused sparse gossip path reproduces the dense-matmul mix
+    on a seeded expander run to <= 1e-5 relative (the acceptance gate's
+    tolerance; float accumulation order differs)."""
+    n, d = 12, 24
+    subgrad, objective, _ = _quadratic_problem(n, d, seed=1)
+    traces = {}
+    for mix in ("dense", "sparse"):
+        sim = DDASimulator(subgrad, jax.jit(objective), _expander(n),
+                           EveryIteration(), a_fn=stepsize_sqrt(0.05),
+                           mix=mix)
+        assert sim.mix_mode == mix
+        traces[mix] = sim.run(jnp.zeros((n, d)), 150, eval_every=30)
+    assert _rel(traces["dense"].fvals, traces["sparse"].fvals) < 1e-5
+    assert traces["dense"].comms == traces["sparse"].comms
+
+
+def test_sparse_mix_weights_matches_dense_weighted():
+    """A reweighted edge-supported P (`mix_weights`, the
+    reweight_gossip shape) runs through the sparse per-edge path and
+    matches the dense matmul with the same W."""
+    n, d = 10, 16
+    subgrad, objective, _ = _quadratic_problem(n, d, seed=2)
+    g = _expander(n)
+    rng = np.random.default_rng(0)
+    W = g.mixing_matrix()
+    # perturb edge weights, fold the correction into the diagonal so rows
+    # stay stochastic (shape-wise; exact stochasticity is not required)
+    for i in range(n):
+        for j in range(n):
+            if i != j and W[i, j] != 0.0:
+                delta = rng.uniform(-0.3, 0.3) * W[i, j]
+                W[i, j] += delta
+                W[i, i] -= delta
+    traces = {}
+    for mix in ("dense", "sparse"):
+        sim = DDASimulator(subgrad, jax.jit(objective), g, Periodic(h=2),
+                           a_fn=stepsize_sqrt(0.05), mix=mix,
+                           mix_weights=W)
+        assert sim.mix_mode == mix
+        traces[mix] = sim.run(jnp.zeros((n, d)), 120, eval_every=30)
+    assert _rel(traces["dense"].fvals, traces["sparse"].fvals) < 1e-5
+
+
+def test_auto_mix_fallbacks():
+    """auto -> dense for complete graphs, compression, and a mix_weights
+    with weight OUTSIDE the graph's edge support (non-regular P); forcing
+    mix="sparse" there raises."""
+    n, d = 8, 8
+    subgrad, objective, _ = _quadratic_problem(n, d)
+    g = _expander(n)
+    obj = jax.jit(objective)
+    assert DDASimulator(subgrad, obj, g, EveryIteration()).mix_mode \
+        == "sparse"
+    assert DDASimulator(subgrad, obj, complete_graph(n),
+                        EveryIteration()).mix_mode == "dense"
+    assert DDASimulator(subgrad, obj, g, EveryIteration(),
+                        compress_keep=0.5).mix_mode == "dense"
+    W = g.mixing_matrix()
+    W[0, :] = 1.0 / n  # weight on non-edges: not gatherable along edges
+    sim = DDASimulator(subgrad, obj, g, EveryIteration(), mix_weights=W)
+    assert sim.mix_mode == "dense"
+    with pytest.raises(ValueError, match="edge support"):
+        DDASimulator(subgrad, obj, g, EveryIteration(), mix_weights=W,
+                     mix="sparse")
+    # the dense fallback actually APPLIES the override
+    tr_w = sim.run(jnp.zeros((n, d)), 40, eval_every=40)
+    tr_p = DDASimulator(subgrad, obj, g, EveryIteration()).run(
+        jnp.zeros((n, d)), 40, eval_every=40)
+    assert tr_w.fvals != tr_p.fvals
+
+
+def test_scan_loop_empty_run():
+    """T=0 returns an empty trace on every loop, as the legacy path did."""
+    n, d = 4, 4
+    subgrad, objective, _ = _quadratic_problem(n, d)
+    sim = DDASimulator(subgrad, jax.jit(objective), _expander(n, k=2))
+    for loop in ("scan", "segment"):
+        tr = sim.run(jnp.zeros((n, d)), 0, eval_every=10, loop=loop)
+        assert tr.iters == [] and tr.fvals == []
+    batch = sim.run_batch(jnp.zeros((n, d)), 0, 10,
+                          np.zeros((2, 0), bool), seeds=[0, 1])
+    assert all(tr.iters == [] for tr in batch)
+
+
+def test_run_batch_matches_single_runs():
+    """One vmapped program over (schedule, seed, r) lanes == the per-lane
+    scanned runs, bitwise (same program, batched)."""
+    n, d, T = 6, 10, 77
+    subgrad, objective, _ = _quadratic_problem(n, d)
+    sim = DDASimulator(subgrad, jax.jit(objective), _expander(n, k=2),
+                       a_fn=stepsize_sqrt(0.05))
+    scheds = [EveryIteration(), Periodic(h=2), Periodic(h=5)]
+    masks = np.stack([s.comm_mask(0, T) for s in scheds])
+    seeds, rs = [0, 1, 2], [0.0, 0.01, 0.1]
+    batch = sim.run_batch(jnp.zeros((n, d)), T, 25, masks, seeds, rs)
+    for sched, seed, r, btr in zip(scheds, seeds, rs, batch):
+        one = DDASimulator(subgrad, jax.jit(objective), _expander(n, k=2),
+                           sched, a_fn=stepsize_sqrt(0.05), r=r)
+        tr = one.run(jnp.zeros((n, d)), T, eval_every=25, seed=seed)
+        assert btr.iters == tr.iters
+        assert btr.sim_time == tr.sim_time
+        assert btr.comms == tr.comms
+        assert _rel(btr.fvals, tr.fvals) < 1e-6
+        assert _rel(btr.disagreement, tr.disagreement) < 1e-5

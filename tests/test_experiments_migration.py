@@ -264,3 +264,74 @@ def test_dense_cell_bit_identical():
         T=T, eval_every=15, seed=seed, r=0.01)
     res = run(spec)
     _assert_traces_equal(legacy_trace, res.trace, "dense")
+
+
+# ---------------------------------------------------------------------------
+# fig1 (metric learning, complete graph) + fig2 (non-smooth schedules):
+# the last pre-spec drivers, migrated onto manifests in this PR. The legacy
+# side reconstructs the direct DDASimulator wiring the drivers used (same
+# registry problem closures, same stepsize family), the spec side goes
+# through the migrated drivers' cell_spec + repro.run().
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("compress_keep", [None, 0.5],
+                         ids=["exact", "compressed"])
+def test_fig1_cells_bit_identical(compress_keep):
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks.fig1_complete import cell_spec
+    from repro.core import DDASimulator, EveryIteration, complete_graph
+    from repro.core.dda import stepsize_sqrt
+    from repro.experiments.components import problems
+
+    n, m_pairs, d, T, seed, r, A = 4, 400, 6, 40, 0, 0.03, 3e-4
+    prob = problems.build("metric_learning", n=n, m_pairs=m_pairs,
+                          d_feat=d, seed=seed)
+    sim = DDASimulator(prob.subgrad_stack, jax.jit(prob.objective),
+                       complete_graph(n), EveryIteration(),
+                       a_fn=stepsize_sqrt(A), projection=prob.projection,
+                       r=r, compress_keep=compress_keep)
+    legacy_trace = sim.run(jnp.zeros((n, prob.d)), T, eval_every=10,
+                           seed=seed)
+
+    res = run(cell_spec(n, m_pairs, d, T, A, r, seed,
+                        compress_keep=compress_keep))
+    _assert_traces_equal(legacy_trace, res.trace,
+                         f"fig1 compress={compress_keep}")
+
+
+def test_fig1_reduced_applies_byte_ratio():
+    """fig1_reduced is fig1_complete at r scaled by the paper's PCA byte
+    ratio -- the spec cell only differs in the r field."""
+    from benchmarks import fig1_reduced
+    from benchmarks.fig1_complete import cell_spec
+
+    a = cell_spec(4, 400, 6, 40, 3e-4, 0.03, 0)
+    b = cell_spec(4, 400, 6, 40, 3e-4,
+                  0.03 * fig1_reduced.PCA_BYTE_RATIO, 0)
+    assert b.r == pytest.approx(a.r * fig1_reduced.PCA_BYTE_RATIO)
+    assert a.with_value("r", b.r) == b
+
+
+@pytest.mark.parametrize("sched_name", ["h1", "h2", "p03"])
+def test_fig2_cells_bit_identical(sched_name):
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks.fig2_sparse import SCHEDULES, cell_spec
+    from repro.core import DDASimulator, complete_graph
+    from repro.core.dda import stepsize_sqrt
+    from repro.experiments.components import problems
+
+    n, M, d, T, seed, r, A = 6, 8, 10, 80, 0, 0.00089, 0.005
+    sched_comp, sched_obj = SCHEDULES[sched_name]
+    prob = problems.build("nonsmooth", n=n, M=M, d=d, seed=seed)
+    sim = DDASimulator(prob.subgrad_stack, jax.jit(prob.objective),
+                       complete_graph(n), sched_obj,
+                       a_fn=stepsize_sqrt(A), r=r)
+    legacy_trace = sim.run(jnp.zeros((n, d)), T, eval_every=20, seed=seed)
+
+    res = run(cell_spec(n, M, d, T, sched_comp, A, r, seed))
+    _assert_traces_equal(legacy_trace, res.trace, f"fig2 {sched_name}")

@@ -87,3 +87,61 @@ def test_make_schedule_dispatch():
     assert S.make_schedule("sparse", p=0.2).p == 0.2
     with pytest.raises(ValueError):
         S.make_schedule("nope")
+
+
+# ---------------------------------------------------------------------------
+# batch closed forms: comm_mask + next_comm_step_batch (the scanned-loop
+# mask precompute in core.dda relies on these agreeing with the scalar
+# queries for every schedule kind)
+# ---------------------------------------------------------------------------
+
+import numpy as np
+
+
+def _spliced_piecewise():
+    s = S.PiecewisePeriodic(h=1)
+    s.set_h(7, 3)
+    s.set_h(20, 2)
+    s.set_h(41, 5)
+    return s
+
+
+def _all_kinds():
+    return [S.EveryIteration(), S.Periodic(h=1), S.Periodic(h=4),
+            S.IncreasinglySparse(p=0.0), S.IncreasinglySparse(p=0.3),
+            S.PiecewisePeriodic(h=3), _spliced_piecewise()]
+
+
+@pytest.mark.parametrize("t0,length", [(0, 60), (5, 40), (37, 90), (0, 1)])
+def test_comm_mask_matches_is_comm_step(t0, length):
+    for sched in _all_kinds():
+        mask = sched.comm_mask(t0, length)
+        expect = np.array([sched.is_comm_step(t)
+                           for t in range(t0 + 1, t0 + length + 1)])
+        assert mask.dtype == bool and mask.shape == (length,)
+        assert (mask == expect).all(), type(sched).__name__
+
+
+@given(p=st.floats(0.0, 0.49), tmax=st.integers(1, 300))
+def test_sparse_next_comm_step_batch_closed_form(p, tmax):
+    """IncreasinglySparse's vectorized batch query == the scalar loop
+    (previously the base class fell back to per-element Python)."""
+    sched = S.IncreasinglySparse(p=p)
+    t = np.arange(0, tmax, max(1, tmax // 37))
+    batch = sched.next_comm_step_batch(t)
+    scalar = np.array([sched.next_comm_step(int(s)) for s in t])
+    assert (batch == scalar).all()
+
+
+def test_piecewise_comm_mask_tracks_splices():
+    """comm_mask over a window spanning several spliced segments equals the
+    scalar queries, and stays consistent with next_comm_step_batch."""
+    sched = _spliced_piecewise()
+    mask = sched.comm_mask(0, 80)
+    comm_ts = np.flatnonzero(mask) + 1
+    assert sched.H(80) == len(comm_ts)
+    nxt = sched.next_comm_step_batch(np.arange(0, 79))
+    for t in range(0, 79):
+        after = comm_ts[comm_ts > t]
+        if len(after):
+            assert nxt[t] == after[0]
