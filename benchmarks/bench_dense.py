@@ -24,7 +24,6 @@ acceptance shape n=256, k=4, d=4096.
 from __future__ import annotations
 
 import argparse
-import json
 import platform
 import statistics
 import time
@@ -35,6 +34,7 @@ from repro.core.dda import DDASimulator, stepsize_sqrt
 from repro.core.schedules import EveryIteration
 from repro.experiments import ExperimentSpec, run as run_spec, run_sweep
 from repro.experiments.components import problems, topologies
+from repro.obs import RunMetrics, sample_quantiles, write_json_artifact
 
 SEED_BACKEND = {"kind": "dense", "params": {"mix": "dense",
                                             "loop": "segment"}}
@@ -100,16 +100,25 @@ def bench_path(n: int, d: int, T: int, r: float, k: int, seed: int,
     t0 = time.perf_counter()
     trace = sim.run(x0, T, eval_every=eval_every, seed=seed, loop=loop)
     cold = time.perf_counter() - t0
+    compile_s = sim.last_timings["compile_s"]  # cold run pays the compile
     walls = []
     for _ in range(repeats):
         t0 = time.perf_counter()
         trace = sim.run(x0, T, eval_every=eval_every, seed=seed, loop=loop)
         walls.append(time.perf_counter() - t0)
     wall = statistics.median(walls)
+    metrics = RunMetrics(
+        compile_s=compile_s, execute_s=wall,
+        counters={"device_execute_s": sim.last_timings["execute_s"]})
     return {"path": label, "n": n, "d": d, "T": T, "k": k,
             "wall_s": round(wall, 4),
             "cold_wall_s": round(cold, 4),
             "iters_per_s": round(T / wall, 1),
+            # the FULL warm-run sample array + its quantiles: regression
+            # tooling wants the distribution, not just the median
+            "wall_samples_s": [round(w, 6) for w in walls],
+            "wall_quantiles": sample_quantiles(walls, "host"),
+            "metrics": metrics.to_dict(),
             "final_f": float(trace.fvals[-1]),
             "mix_mode": sim.mix_mode}
 
@@ -134,6 +143,9 @@ def bench_sweep(n: int, d: int, T: int, r: float, k: int, seed: int,
             "serial_wall_s": round(serial_wall, 4),
             "vmap_wall_s": round(vmap_wall, 4),
             "speedup": round(serial_wall / vmap_wall, 2),
+            # one lane's metrics block: the amortized compile/execute
+            # split every vmapped cell reports through repro.run()
+            "vmap_lane_metrics": vmapped[0].metrics.to_dict(),
             "fvals_rel": rel, "tol": tol, "ok": bool(rel <= tol)}
 
 
@@ -218,8 +230,7 @@ def main(argv=None) -> int:
         "sweep": sweep,
         "speedups": {"run": run_speedup, "sweep": sweep["speedup"]},
     }
-    with open(args.out, "w") as f:
-        json.dump(report, f, indent=2)
+    write_json_artifact(args.out, report)
     print(f"[bench_dense] wrote {args.out}")
 
     if not args.smoke:

@@ -25,13 +25,13 @@ exits nonzero otherwise.
 from __future__ import annotations
 
 import argparse
-import json
 import platform
 import time
 
 import numpy as np
 
 from repro.experiments import ExperimentSpec, run as run_spec
+from repro.obs import sample_quantiles, write_json_artifact
 
 DEFAULT_SIZES = (64, 256, 1024)
 
@@ -86,8 +86,10 @@ def bench_cell(n: int, d: int, T: int, r: float, k: int, algorithm: str,
                repeats: int) -> dict:
     spec = cell_spec(n, d, T, r, k, algorithm, engine, seed, eval_every)
     best = None
+    walls = []
     for _ in range(repeats):  # best-of: robust to background load spikes
         res = run_spec(spec)
+        walls.append(res.wall_s)
         if best is None or res.wall_s < best.wall_s:
             best = res
     wall = best.wall_s
@@ -99,6 +101,11 @@ def bench_cell(n: int, d: int, T: int, r: float, k: int, algorithm: str,
         "events": int(events),
         "wall_s": round(wall, 4),
         "events_per_s": round(events / wall, 1),
+        # the FULL repeat sample array + quantiles, and the best run's
+        # RunMetrics block (message/byte counters, sim-clock step times)
+        "wall_samples_s": [round(w, 6) for w in walls],
+        "wall_quantiles": sample_quantiles(walls, "host"),
+        "metrics": best.metrics.to_dict(),
         "final_f": float(best.trace.fvals[-1]),
         "final_disagreement": float(best.trace.disagreement[-1]),
     }
@@ -186,8 +193,7 @@ def main(argv=None) -> int:
         "results": results,
         "speedups": speedups,
     }
-    with open(args.out, "w") as f:
-        json.dump(report, f, indent=2)
+    write_json_artifact(args.out, report)
     print(f"[bench_netsim] wrote {args.out}")
 
     if not args.smoke:

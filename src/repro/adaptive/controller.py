@@ -146,6 +146,13 @@ class AdaptiveController:
         self.warmup_steps = warmup_steps
         self.tracker: RTracker | None = None
         self.reweighter: StragglerReweighter | None = None
+        # observability: every r_hat the controller computed at retune
+        # cadence, as (event-clock time, r_hat) -- the durable record the
+        # RunMetrics r_hat_trajectory is built from. `tracer` (an optional
+        # repro.obs.Tracer, set via attach_tracer) additionally receives
+        # the series and a retune counter; None costs nothing.
+        self.r_hat_history: list[tuple[float, float]] = []
+        self.tracer = None
         # single-slot (graph, lam2) cache: only the CURRENT graph can hit,
         # and holding the object rules out a recycled-id stale hit
         self._lam2_cache: tuple[CommGraph, float] | None = None
@@ -161,7 +168,9 @@ class AdaptiveController:
         new iteration timeline as far as the controller is concerned)."""
         self._n = net.n
         self._k = net.graph.degree
-        self.tracker = RTracker(net.n, halflife=self.halflife, r0=self.r0)
+        self.r_hat_history = []
+        self.tracker = RTracker(net.n, halflife=self.halflife, r0=self.r0,
+                                tracer=self.tracer)
         self.reweighter = (StragglerReweighter(net.graph)
                            if self.reweight else None)
         self._lam2_cache = None
@@ -228,6 +237,11 @@ class AdaptiveController:
         r_hat = self.tracker.r_hat
         if r_hat is None:
             return None
+        # record the measurement even when the splice below is skipped: the
+        # trajectory is what the controller OBSERVED, not what it acted on
+        self.r_hat_history.append((float(now), float(r_hat)))
+        if self.tracer is not None:
+            self.tracer.record_series("r_hat", float(now), float(r_hat))
         cut = int(frontier)
         # '<=': a cut EQUAL to the latest splice start would take set_h's
         # replace-pending branch, which also rewrites (start, inf) -- and a
@@ -241,7 +255,18 @@ class AdaptiveController:
         else:
             lam2 = self._static_lam2()
         changed = self.schedule.retune(cut, self._n, self._k, r_hat, lam2)
+        if changed and self.tracer is not None:
+            self.tracer.count("retunes")
+            self.tracer.add_instant("retune", float(now), track="controller",
+                                    h=self.schedule.h_current, r_hat=r_hat)
         return cut if changed else None
+
+    def attach_tracer(self, tracer) -> None:
+        """Attach a repro.obs.Tracer; propagated to the RTracker at the
+        next bind() (call before the run starts)."""
+        self.tracer = tracer
+        if self.tracker is not None:
+            self.tracker.tracer = tracer
 
     def _static_lam2(self) -> float:
         hit = self._lam2_cache
@@ -294,6 +319,10 @@ class DenseController:
         self._n = 0
         self._k = 0
         self._last_retune_t = 0
+        # same observability contract as AdaptiveController: (frontier
+        # iteration, r_hat) per computed estimate, optional obs.Tracer
+        self.r_hat_history: list[tuple[float, float]] = []
+        self.tracer = None
 
     def bind(self, n: int, k: int, lam2: float) -> None:
         """Attach to a run's graph; resets the window and splice history."""
@@ -301,6 +330,7 @@ class DenseController:
         self._n, self._k, self._lam2 = n, max(k, 1), float(lam2)
         self.tracker = DenseRTracker(n, max(k, 1), halflife=self.halflife)
         self._last_retune_t = 0
+        self.r_hat_history = []
         self.schedule.reset()
 
     def observe(self, wall_seconds: float, was_comm: bool) -> None:
@@ -320,6 +350,9 @@ class DenseController:
         r_hat = self.tracker.r_hat
         if r_hat is None:
             return False
+        self.r_hat_history.append((float(frontier), float(r_hat)))
+        if self.tracer is not None:
+            self.tracer.record_series("r_hat", float(frontier), float(r_hat))
         cut = int(frontier)
         if cut <= self.schedule.segments[-1][0]:
             return False  # same append-only guard as the netsim controller
@@ -327,4 +360,15 @@ class DenseController:
                                        self._lam2)
         if changed:
             self._last_retune_t = cut
+            if self.tracer is not None:
+                self.tracer.count("retunes")
+                self.tracer.add_instant("retune", float(cut),
+                                        track="controller",
+                                        h=self.schedule.h_current,
+                                        r_hat=r_hat)
         return changed
+
+    def attach_tracer(self, tracer) -> None:
+        """Attach a repro.obs.Tracer (DenseRTracker has no per-event feed;
+        the series/counters come from this controller itself)."""
+        self.tracer = tracer

@@ -40,12 +40,16 @@ class RTracker:
     """EW-windowed r estimate from per-event netsim observations."""
 
     def __init__(self, n: int, halflife: float = 64.0,
-                 r0: float | None = None):
+                 r0: float | None = None, tracer=None):
         if n < 1:
             raise ValueError("n must be >= 1")
         self.n = n
         self.alpha = ew_alpha(halflife)
         self.r0 = r0
+        # optional repro.obs.Tracer: observation batches fold into its
+        # counters (one branch per BATCH, preserving the O(1)-per-batch
+        # cost); None (default) records nothing.
+        self.tracer = tracer
         self._msg = math.nan                      # EW mean message flight
         self.step_means = np.full(n, np.nan)      # per-node EW step duration
         self.n_messages = 0
@@ -61,6 +65,8 @@ class RTracker:
         self._msg = ew_update(self._msg, float(np.mean(flights)), m,
                               self.alpha)
         self.n_messages += m
+        if self.tracer is not None:
+            self.tracer.count("rtracker.messages_observed", m)
 
     def observe_steps(self, nodes: np.ndarray, durations: np.ndarray) -> None:
         """Fold a batch of per-node local-step durations (nodes unique
@@ -72,6 +78,8 @@ class RTracker:
         self.step_means[nodes] = np.where(
             fresh, durations, (1.0 - self.alpha) * old + self.alpha * durations)
         self.n_steps += len(nodes)
+        if self.tracer is not None:
+            self.tracer.count("rtracker.steps_observed", len(nodes))
 
     # -- reading -------------------------------------------------------------
 

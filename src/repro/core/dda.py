@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from functools import partial
 from typing import Any, Callable, NamedTuple, Sequence
 
@@ -339,6 +340,47 @@ class DDASimulator:
         self._scan_jits = {ac: jax.jit(p)
                            for ac, p in self._scan_programs.items()}
         self._scan_vmaps: dict[bool, Any] = {}  # built lazily by run_batch
+        # AOT compile cache + per-run wall split (see _timed_call): keyed by
+        # (program kind, argument shapes/dtypes); `last_timings` is reset at
+        # the top of every run/run_batch and read by the experiments runner
+        # to populate RunMetrics.compile_s / execute_s.
+        self._compiled: dict[tuple, Any] = {}
+        self.last_timings: dict[str, float] = {
+            "compile_s": 0.0, "execute_s": 0.0, "eval_s": 0.0}
+
+    # -- timed dispatch ------------------------------------------------------
+
+    def _reset_timings(self) -> None:
+        self.last_timings = {"compile_s": 0.0, "execute_s": 0.0,
+                             "eval_s": 0.0}
+
+    def _timed_call(self, kind: tuple, jitfn, args: tuple):
+        """Dispatch a jitted program through the AOT lower/compile path so
+        compile and execute walls are observable separately.
+
+        `jitfn.lower(*args).compile()` produces the same XLA executable the
+        plain jit call would run (bit-identical outputs), so splitting the
+        wall here cannot perturb results. The compiled executable is cached
+        on (kind, arg shapes/dtypes): warm runs charge pure execute time.
+        Objects without `.lower` (e.g. a test double swapped in for a jit
+        function) fall back to a timed direct call charged to execute."""
+        if not hasattr(jitfn, "lower"):
+            t0 = time.perf_counter()
+            out = jax.block_until_ready(jitfn(*args))
+            self.last_timings["execute_s"] += time.perf_counter() - t0
+            return out
+        key = kind + tuple((tuple(leaf.shape), str(leaf.dtype))
+                           for leaf in jax.tree_util.tree_leaves(args))
+        entry = self._compiled.get(key)
+        if entry is None:
+            t0 = time.perf_counter()
+            entry = jitfn.lower(*args).compile()
+            self.last_timings["compile_s"] += time.perf_counter() - t0
+            self._compiled[key] = entry
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(entry(*args))
+        self.last_timings["execute_s"] += time.perf_counter() - t0
+        return out
 
     # -- mix-mode resolution -------------------------------------------------
 
@@ -414,8 +456,10 @@ class DDASimulator:
             return self._run_segment_loop(x0_stack, T, eval_every, seed)
         if loop != "scan":
             raise ValueError(f"loop must be 'scan' or 'segment', got {loop!r}")
+        self._reset_timings()
         mask_full = np.asarray(self.schedule.comm_mask(0, T), dtype=bool)
-        prog = self._scan_jits[bool(mask_full.all())]
+        ac = bool(mask_full.all())
+        prog = self._scan_jits[ac]
         state = (jnp.zeros_like(x0_stack), x0_stack, x0_stack,
                  jnp.zeros_like(x0_stack), jnp.asarray(0.0, jnp.float32))
         root = jax.random.PRNGKey(seed)
@@ -425,12 +469,14 @@ class DDASimulator:
             masks = jnp.asarray(mask_full[:S * eval_every]
                                 .reshape(S, eval_every))
             starts = jnp.asarray(np.arange(S, dtype=np.int32) * eval_every)
-            state, out = prog(state, masks, starts, root)
+            state, out = self._timed_call(("scan", ac), prog,
+                                          (state, masks, starts, root))
             outs.append(out)
         if rem:
             masks = jnp.asarray(mask_full[S * eval_every:].reshape(1, rem))
             starts = jnp.asarray(np.array([S * eval_every], dtype=np.int32))
-            state, out = prog(state, masks, starts, root)
+            state, out = self._timed_call(("scan", ac), prog,
+                                          (state, masks, starts, root))
             outs.append(out)
         if not outs:  # T == 0: an empty trace, as the legacy loop returns
             return SimTrace([], [], [], [], [])
@@ -466,6 +512,7 @@ class DDASimulator:
         return trace
 
     def _run_segment_loop(self, x0_stack, T, eval_every, seed) -> SimTrace:
+        self._reset_timings()
         z = jnp.zeros_like(x0_stack)
         x = x0_stack
         xhat = x0_stack
@@ -483,12 +530,14 @@ class DDASimulator:
             mask = np.array([self.schedule.is_comm_step(done + i + 1)
                              for i in range(seg)])
             keys = jax.random.split(jax.random.fold_in(root, done), seg)
-            z, x, xhat, res, t = self._segment(
-                z, x, xhat, res, t, jnp.asarray(mask), keys)
+            z, x, xhat, res, t = self._timed_call(
+                ("segment",), self._segment,
+                (z, x, xhat, res, t, jnp.asarray(mask), keys))
             done += seg
             n_comm = int(mask.sum())
             comm_total += n_comm
             sim_time += seg * (1.0 / n) + n_comm * k * self.r
+            t_eval = time.perf_counter()
             xbar = jnp.mean(xhat, axis=0)
             trace.iters.append(done)
             trace.sim_time.append(sim_time)
@@ -496,6 +545,7 @@ class DDASimulator:
             trace.fvals_consensus.append(float(self.eval_fn(xbar)))
             trace.comms.append(comm_total)
             trace.disagreement.append(float(_cons.disagreement(z)))
+            self.last_timings["eval_s"] += time.perf_counter() - t_eval
         return trace
 
     def run_batch(self, x0_stack: jax.Array, T: int, eval_every: int,
@@ -520,6 +570,7 @@ class DDASimulator:
         rs = [self.r] * B if rs is None else list(rs)
         assert len(rs) == B
 
+        self._reset_timings()
         ac = bool(masks.all())
         if ac not in self._scan_vmaps:
             self._scan_vmaps[ac] = jax.jit(jax.vmap(
@@ -537,12 +588,14 @@ class DDASimulator:
             m = jnp.asarray(masks[:, :S * eval_every]
                             .reshape(B, S, eval_every))
             starts = jnp.asarray(np.arange(S, dtype=np.int32) * eval_every)
-            state, out = vprog(state, m, starts, roots)
+            state, out = self._timed_call(("vmap", ac), vprog,
+                                          (state, m, starts, roots))
             outs.append(out)
         if rem:
             m = jnp.asarray(masks[:, S * eval_every:].reshape(B, 1, rem))
             starts = jnp.asarray(np.array([S * eval_every], dtype=np.int32))
-            state, out = vprog(state, m, starts, roots)
+            state, out = self._timed_call(("vmap", ac), vprog,
+                                          (state, m, starts, roots))
             outs.append(out)
         if not outs:  # T == 0: empty traces, as the legacy loop returns
             return [SimTrace([], [], [], [], []) for _ in range(B)]

@@ -1,24 +1,30 @@
-"""CLI: run checked-in experiment manifests.
+"""CLI: run checked-in experiment manifests and inspect their artifacts.
 
     PYTHONPATH=src python -m repro.experiments run benchmarks/manifests/complete_every.json \
         [--backend netsim] [--out results/run_smoke]
+    PYTHONPATH=src python -m repro.experiments trace results/run_smoke/complete_every__dense.json
     PYTHONPATH=src python -m repro.experiments list
 
 `run` executes the manifest on every backend it declares (or just
 `--backend`), prints one summary line per run, and (with --out) writes each
 `RunResult` as `<out>/<spec.name>__<backend-kind>[-<engine>].json` -- the
-artifact the CI run-smoke job uploads. `list` prints the registries, i.e.
-every kind a manifest may name.
+artifact the CI run-smoke job uploads -- plus, per run, a detail event
+timeline as `...__<tag>.trace.json` (Perfetto/chrome://tracing loadable)
+and `...__<tag>.trace.jsonl` (raw event stream). `trace` renders the phase
+breakdown / counters / r-hat-vs-r summary of saved RunResult JSONs.
+`list` prints the registries, i.e. every kind a manifest may name.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import pathlib
 import sys
 
 from repro.experiments import (ExperimentSpec, backends, problems, run,
                                schedules, stepsizes, topologies)
+from repro.obs import Tracer, render_summary, write_chrome_trace, write_jsonl
 
 
 def _result_tag(result) -> str:
@@ -44,7 +50,10 @@ def _cmd_run(args) -> int:
         out_dir.mkdir(parents=True, exist_ok=True)
     tags_used: dict[str, int] = {}
     for backend in targets:
-        result = run(spec, backend=backend)
+        # with --out, capture the full per-event timeline for the trace
+        # artifacts; without it, run() makes its own phase-level tracer
+        tracer = Tracer(detail=True) if out_dir is not None else None
+        result = run(spec, backend=backend, tracer=tracer)
         final = result.trace.fvals[-1] if result.trace.fvals else None
         tta = result.time_to_target
         tag = _result_tag(result)
@@ -62,7 +71,27 @@ def _cmd_run(args) -> int:
             path = out_dir / f"{spec.name}__{tag}.json"
             path.write_text(result.to_json())
             print(f"[experiments] wrote {path}")
+            run_name = f"{spec.name}__{tag}"
+            tpath = write_chrome_trace(tracer, out_dir / f"{run_name}.trace.json",
+                                       run_name=run_name)
+            lpath = write_jsonl(tracer, out_dir / f"{run_name}.trace.jsonl")
+            print(f"[experiments] wrote {tpath} and {lpath}")
     return 0
+
+
+def _cmd_trace(args) -> int:
+    status = 0
+    for i, path in enumerate(args.results):
+        if i:
+            print()
+        try:
+            result = json.loads(pathlib.Path(path).read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"[experiments] cannot read {path}: {e}")
+            status = 2
+            continue
+        print(render_summary(result))
+    return status
 
 
 def _cmd_list(_args) -> int:
@@ -82,10 +111,20 @@ def main(argv=None) -> int:
     runp.add_argument("--out", default=None,
                       help="directory for RunResult JSON artifacts")
     runp.set_defaults(fn=_cmd_run)
+    tracep = sub.add_parser("trace",
+                            help="summarize saved RunResult JSON artifacts")
+    tracep.add_argument("results", nargs="+",
+                        help="RunResult JSON file(s) from `run --out`")
+    tracep.set_defaults(fn=_cmd_trace)
     listp = sub.add_parser("list", help="print the component registries")
     listp.set_defaults(fn=_cmd_list)
     args = ap.parse_args(argv)
-    return args.fn(args)
+    try:
+        return args.fn(args)
+    except BrokenPipeError:
+        # downstream pager/head closed the pipe mid-summary: not an error
+        sys.stderr.close()
+        return 0
 
 
 if __name__ == "__main__":

@@ -21,6 +21,7 @@ from typing import Any
 from repro.core.dda import SimTrace, TRACE_FIELDS, json_sanitize
 from repro.experiments.spec import ExperimentSpec, ComponentSpec
 from repro.netsim.simulator import RMeasurement
+from repro.obs.metrics import RunMetrics
 
 __all__ = ["RunResult"]
 
@@ -48,6 +49,12 @@ class RunResult:
                       configured spec.r.
       extras:         backend-specific observability (engine name, drop
                       counts, controller retune path, launch losses...).
+      metrics:        `repro.obs.RunMetrics` -- the structured metrics
+                      block (compile/execute wall split, message/byte
+                      counters, retune history, step-time quantiles,
+                      r-hat trajectory). Populated by every `repro.run()`
+                      on every backend; optional in the JSON schema so
+                      pre-metrics result files still load.
     """
 
     spec: ExperimentSpec
@@ -59,6 +66,7 @@ class RunResult:
     r_measurement: RMeasurement | None = None
     predictions: dict[str, Any] | None = None
     extras: dict[str, Any] = dataclasses.field(default_factory=dict)
+    metrics: RunMetrics | None = None
 
     @property
     def final_f(self) -> float:
@@ -83,6 +91,8 @@ class RunResult:
                               else dataclasses.asdict(self.r_measurement)),
             "predictions": pred,
             "extras": self.extras,
+            "metrics": (None if self.metrics is None
+                        else self.metrics.to_dict()),
         }
         return json_sanitize(d)
 
@@ -95,6 +105,7 @@ class RunResult:
         if version != RESULT_VERSION:
             raise ValueError(f"unsupported result_version {version!r}")
         meas = d.get("r_measurement")
+        metrics = d.get("metrics")
         return cls(
             spec=ExperimentSpec.from_dict(d["spec"]),
             backend=ComponentSpec.from_dict(d["backend"]),
@@ -106,6 +117,7 @@ class RunResult:
             r_measurement=None if meas is None else RMeasurement(**meas),
             predictions=d.get("predictions"),
             extras=dict(d.get("extras") or {}),
+            metrics=None if metrics is None else RunMetrics.from_dict(metrics),
         )
 
     @classmethod

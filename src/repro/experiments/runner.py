@@ -40,6 +40,10 @@ from repro.experiments import components as C
 from repro.experiments.registry import Registry
 from repro.experiments.result import RunResult
 from repro.experiments.spec import ComponentSpec, ExperimentSpec
+from repro.obs import RunMetrics, Tracer, profile_ctx, sample_quantiles
+
+#: bytes per scalar in a dense/launch gossip payload (float32)
+_DENSE_SCALAR_BYTES = 4
 
 __all__ = ["backends", "run", "run_all", "run_sweep"]
 
@@ -133,40 +137,55 @@ def _dense_predictions(graph: CommGraph, r: float, schedule,
 # ---------------------------------------------------------------------------
 
 
+def _dense_message_counts(trace: SimTrace, n: int, k: int,
+                          d: int) -> dict[str, Any]:
+    """Closed-form message accounting for a dense run: each gossip round
+    is every node shipping its d-vector to its k neighbors."""
+    rounds = int(trace.comms[-1]) if trace.comms else 0
+    msgs = rounds * n * k
+    return {"gossip_rounds": rounds, "msgs": msgs,
+            "bytes_on_wire": float(msgs * d * _DENSE_SCALAR_BYTES)}
+
+
 @backends.register("dense")
-def _run_dense(spec: ExperimentSpec, backend: ComponentSpec) -> RunResult:
+def _run_dense(spec: ExperimentSpec, backend: ComponentSpec,
+               tracer: Tracer | None = None) -> RunResult:
     import jax.numpy as jnp
 
+    tr = tracer if tracer is not None else Tracer()
     params = dict(backend.params)
     compress_keep = params.pop("compress_keep", None)
     mix = params.pop("mix", "auto")
     loop = params.pop("loop", "scan")
     _require(not params, f"dense backend has unknown params {sorted(params)}")
 
-    problem = _build_problem(spec)
-    _require(isinstance(problem, C.Problem),
-             f"dense backend cannot run problem kind {spec.problem.kind!r}")
-    _require(problem.subgrad_stack is not None,
-             f"problem {problem.name!r} has no stacked jax subgradient")
-    _require(spec.stepsize.kind != "inv_sqrt",
-             'stepsize "inv_sqrt" is host-only; use "sqrt" on dense')
-    graph = _build_topology(spec, problem.n)
-    _require(isinstance(graph, CommGraph),
-             "dense backend needs a fixed CommGraph topology "
-             "(time-varying sequences are netsim-only)")
-    _require(spec.time_limit is None,
-             "time_limit is event-clock only (netsim backends)")
-    schedule = _build_schedule(spec)
-    a_fn = _build_stepsize(spec)
+    with tr.span("build"):
+        problem = _build_problem(spec)
+        _require(isinstance(problem, C.Problem),
+                 f"dense backend cannot run problem kind "
+                 f"{spec.problem.kind!r}")
+        _require(problem.subgrad_stack is not None,
+                 f"problem {problem.name!r} has no stacked jax subgradient")
+        _require(spec.stepsize.kind != "inv_sqrt",
+                 'stepsize "inv_sqrt" is host-only; use "sqrt" on dense')
+        graph = _build_topology(spec, problem.n)
+        _require(isinstance(graph, CommGraph),
+                 "dense backend needs a fixed CommGraph topology "
+                 "(time-varying sequences are netsim-only)")
+        _require(spec.time_limit is None,
+                 "time_limit is event-clock only (netsim backends)")
+        schedule = _build_schedule(spec)
+        a_fn = _build_stepsize(spec)
 
-    import jax
-    sim = DDASimulator(problem.subgrad_stack, jax.jit(problem.objective),
-                       graph, schedule, a_fn=a_fn, r=spec.r,
-                       compress_keep=compress_keep, mix=mix,
-                       projection=problem.projection)
-    x0 = jnp.zeros((problem.n, problem.d))
+        import jax
+        sim = DDASimulator(problem.subgrad_stack, jax.jit(problem.objective),
+                           graph, schedule, a_fn=a_fn, r=spec.r,
+                           compress_keep=compress_keep, mix=mix,
+                           projection=problem.projection)
+        x0 = jnp.zeros((problem.n, problem.d))
     extras: dict[str, Any] = {"mix_mode": sim.mix_mode}
 
+    metrics_fields: dict[str, Any] = {}
     if spec.controller is not None:
         _require(loop == "scan",
                  "a dense_adaptive run drives its own wall-clock chunked "
@@ -178,30 +197,64 @@ def _run_dense(spec: ExperimentSpec, backend: ComponentSpec) -> RunResult:
         _require(isinstance(schedule, AdaptiveSchedule),
                  "a controller run needs schedule kind 'adaptive'")
         ctrl = DenseController(schedule, **spec.controller.params)
+        ctrl.attach_tracer(tr)
+        timings: dict[str, Any] = {"compile_s": 0.0, "iter_walls": []}
         t0 = time.perf_counter()
-        trace = _dense_adaptive_run(sim, ctrl, x0, spec.T, spec.eval_every,
-                                    spec.seed)
+        with tr.span("execute"), profile_ctx(spec.profile_dir):
+            trace = _dense_adaptive_run(sim, ctrl, x0, spec.T,
+                                        spec.eval_every, spec.seed,
+                                        timings=timings)
         wall = time.perf_counter() - t0
         extras["retunes"] = [(rt.from_t, rt.h) for rt in schedule.retunes]
         extras["h_final"] = schedule.h_current
         extras["r_hat"] = ctrl.tracker.r_hat
+        metrics_fields.update(
+            compile_s=timings["compile_s"],
+            retunes=len(schedule.retunes),
+            retune_history=schedule.retunes,
+            r_hat=ctrl.tracker.r_hat,
+            r_hat_trajectory=ctrl.r_hat_history,
+            step_time_quantiles=sample_quantiles(timings["iter_walls"],
+                                                 "host"))
     else:
         t0 = time.perf_counter()
-        trace = sim.run(x0, spec.T, eval_every=spec.eval_every,
-                        seed=spec.seed, loop=loop)
+        with profile_ctx(spec.profile_dir):
+            trace = sim.run(x0, spec.T, eval_every=spec.eval_every,
+                            seed=spec.seed, loop=loop)
         wall = time.perf_counter() - t0
+        tr.add_host_span("compile", tr.now() - wall,
+                         sim.last_timings["compile_s"])
+        tr.add_host_span("execute", tr.now() - wall
+                         + sim.last_timings["compile_s"],
+                         wall - sim.last_timings["compile_s"])
+        metrics_fields.update(compile_s=sim.last_timings["compile_s"])
+        if sim.last_timings["eval_s"]:
+            metrics_fields.update(eval_s=sim.last_timings["eval_s"])
+        tr.count("device_execute_s", sim.last_timings["execute_s"])
 
+    # execute_s is defined as the non-compile remainder of the backend
+    # wall, so compile_s + execute_s == wall_s exactly (JSON back-compat:
+    # wall_s stays the lump sum). Pure device time is the
+    # "device_execute_s" counter.
+    compile_s = float(metrics_fields.get("compile_s", 0.0))
+    metrics_fields["execute_s"] = max(wall - compile_s, 0.0)
+    metrics_fields["compile_s"] = min(compile_s, wall)
     eps_value, tta = _target_fields(trace, _eps_value(spec, problem))
     predictions = _dense_predictions(graph, spec.r, schedule,
                                      graph.lambda2())
+    metrics = RunMetrics.from_tracer(
+        tr, **metrics_fields,
+        **_dense_message_counts(trace, problem.n, graph.degree, problem.d))
     return RunResult(spec=spec, backend=backend, trace=trace, wall_s=wall,
                      eps_value=eps_value, time_to_target=tta,
-                     predictions=predictions, extras=extras)
+                     predictions=predictions, extras=extras,
+                     metrics=metrics)
 
 
 def _dense_adaptive_run(sim: DDASimulator, ctrl, x0, T: int,
                         eval_every: int, seed: int,
-                        timer: Callable[[], float] = time.perf_counter
+                        timer: Callable[[], float] = time.perf_counter,
+                        timings: dict[str, Any] | None = None
                         ) -> SimTrace:
     """DDASimulator.run with the measure->predict->act loop on wall-clock.
 
@@ -214,6 +267,12 @@ def _dense_adaptive_run(sim: DDASimulator, ctrl, x0, T: int,
     the jitted segment recompiles per new length; the controller's warmup
     keeps those compile spikes out of the first retune (tests inject a fake
     `timer` for determinism).
+
+    `timings` (optional dict) receives the observability record: the
+    discarded warm-up calls' wall (the loop's compile cost, always on the
+    REAL clock -- the injected `timer` only drives the controller's
+    measurements) accumulates into `timings["compile_s"]`, and each
+    iteration's measured wall appends to `timings["iter_walls"]`.
     """
     import jax
     import jax.numpy as jnp
@@ -252,13 +311,18 @@ def _dense_adaptive_run(sim: DDASimulator, ctrl, x0, T: int,
                 # forever. Warm the cache on a discarded duplicate call
                 # (pure function; costs one chunk of compute), then time.
                 warmed.add(chunk)
+                tw = time.perf_counter()
                 jax.block_until_ready(sim._segment(
                     z, x, xhat, res, t, jnp.asarray(mask), keys))
+                if timings is not None:
+                    timings["compile_s"] += time.perf_counter() - tw
             t0 = timer()
             z, x, xhat, res, t = sim._segment(
                 z, x, xhat, res, t, jnp.asarray(mask), keys)
             jax.block_until_ready(xhat)
             per_iter = max(timer() - t0, 0.0) / chunk
+            if timings is not None:
+                timings["iter_walls"].extend([per_iter] * chunk)
             for _ in range(chunk):
                 ctrl.observe(per_iter, comm)
             done += chunk
@@ -313,9 +377,14 @@ def _build_scenario(kind: str, n: int, r: float, topology,
 
 
 @backends.register("netsim")
-def _run_netsim(spec: ExperimentSpec, backend: ComponentSpec) -> RunResult:
+def _run_netsim(spec: ExperimentSpec, backend: ComponentSpec,
+                tracer: Tracer | None = None) -> RunResult:
     from repro.netsim import NetSimulator
 
+    tr = tracer if tracer is not None else Tracer()
+    _require(spec.profile_dir is None,
+             "profile_dir wraps the dense scanned program; the netsim "
+             "event loops are host numpy (nothing for jax.profiler to see)")
     params = dict(backend.params)
     scenario_kind = params.pop("scenario", "homogeneous")
     engine = params.pop("engine", "auto")
@@ -329,43 +398,47 @@ def _run_netsim(spec: ExperimentSpec, backend: ComponentSpec) -> RunResult:
     _require(not params,
              f"netsim backend has unknown params {sorted(params)}")
 
-    problem = _build_problem(spec)
-    _require(isinstance(problem, C.Problem),
-             f"netsim backend cannot run problem kind {spec.problem.kind!r}")
-    topology = _build_topology(spec, problem.n)
-    if scenario_kind == "time_varying" or knobs.get("rewire_every"):
-        _require(isinstance(topology, GraphSequence),
-                 "a rewiring scenario needs an 'expander_sequence' topology")
+    with tr.span("build"):
+        problem = _build_problem(spec)
+        _require(isinstance(problem, C.Problem),
+                 f"netsim backend cannot run problem kind "
+                 f"{spec.problem.kind!r}")
+        topology = _build_topology(spec, problem.n)
+        if scenario_kind == "time_varying" or knobs.get("rewire_every"):
+            _require(isinstance(topology, GraphSequence),
+                     "a rewiring scenario needs an 'expander_sequence' "
+                     "topology")
 
-    if message_bytes is None:
-        from repro.netsim.scenarios import DEFAULT_MESSAGE_BYTES
-        message_bytes = DEFAULT_MESSAGE_BYTES
-    scenario = _build_scenario(scenario_kind, problem.n, spec.r, topology,
-                               message_bytes, knobs)
-    a_fn = _build_stepsize(spec)
-    schedule = _build_schedule(spec)
+        if message_bytes is None:
+            from repro.netsim.scenarios import DEFAULT_MESSAGE_BYTES
+            message_bytes = DEFAULT_MESSAGE_BYTES
+        scenario = _build_scenario(scenario_kind, problem.n, spec.r,
+                                   topology, message_bytes, knobs)
+        a_fn = _build_stepsize(spec)
+        schedule = _build_schedule(spec)
 
-    ctrl = None
-    if spec.controller is not None:
-        _require(spec.controller.kind == "adaptive",
-                 f"netsim backend needs an 'adaptive' controller, got "
-                 f"{spec.controller.kind!r}")
-        from repro.adaptive import AdaptiveController, AdaptiveSchedule
-        _require(isinstance(schedule, AdaptiveSchedule),
-                 "a controller run needs schedule kind 'adaptive'")
-        ctrl = AdaptiveController(schedule, **spec.controller.params)
+        ctrl = None
+        if spec.controller is not None:
+            _require(spec.controller.kind == "adaptive",
+                     f"netsim backend needs an 'adaptive' controller, got "
+                     f"{spec.controller.kind!r}")
+            from repro.adaptive import AdaptiveController, AdaptiveSchedule
+            _require(isinstance(schedule, AdaptiveSchedule),
+                     "a controller run needs schedule kind 'adaptive'")
+            ctrl = AdaptiveController(schedule, **spec.controller.params)
 
-    sim = NetSimulator(scenario, problem.grad_fn, problem.eval_fn,
-                       a_fn=a_fn,
-                       schedule=None if ctrl is not None else schedule,
-                       algorithm=algorithm, seed=spec.seed,
-                       pushsum_w_floor=pushsum_w_floor,
-                       engine=engine, controller=ctrl)
+        sim = NetSimulator(scenario, problem.grad_fn, problem.eval_fn,
+                           a_fn=a_fn,
+                           schedule=None if ctrl is not None else schedule,
+                           algorithm=algorithm, seed=spec.seed,
+                           pushsum_w_floor=pushsum_w_floor,
+                           engine=engine, controller=ctrl, tracer=tr)
     x0 = np.zeros((problem.n, problem.d))
     time_limit = math.inf if spec.time_limit is None else spec.time_limit
     t0 = time.perf_counter()
-    trace = sim.run(x0, spec.T, eval_every=spec.eval_every,
-                    time_limit=time_limit)
+    with tr.span("execute"):
+        trace = sim.run(x0, spec.T, eval_every=spec.eval_every,
+                        time_limit=time_limit)
     wall = time.perf_counter() - t0
 
     eps_value, tta = _target_fields(trace, _eps_value(spec, problem))
@@ -379,6 +452,14 @@ def _run_netsim(spec: ExperimentSpec, backend: ComponentSpec) -> RunResult:
         "scenario": scenario.name,
         "sent": sim.sent, "drops": sim.drops, "rewires": sim.rewires,
     }
+    metrics_fields: dict[str, Any] = dict(
+        compile_s=0.0,  # event loops are host numpy: nothing compiles
+        execute_s=wall,
+        msgs=sim.sent,
+        bytes_on_wire=float(sim.sent * scenario.message_bytes),
+        drops=sim.drops,
+        gossip_rounds=int(trace.comms[-1]) if trace.comms else 0,
+        step_time_quantiles=sample_quantiles(sim.compute_times, "sim"))
     if ctrl is not None:
         extras["retunes"] = [(rt.from_t, rt.h)
                              for rt in ctrl.schedule.retunes]
@@ -388,10 +469,15 @@ def _run_netsim(spec: ExperimentSpec, backend: ComponentSpec) -> RunResult:
         if ctrl.reweighter is not None:
             extras["lam2_eff"] = ctrl.reweighter.last_lam2
         extras["reweight_gossip"] = ctrl.reweight_gossip
+        metrics_fields.update(retunes=len(ctrl.schedule.retunes),
+                              retune_history=ctrl.schedule.retunes,
+                              r_hat=ctrl.tracker.r_hat,
+                              r_hat_trajectory=ctrl.r_hat_history)
+    metrics = RunMetrics.from_tracer(tr, **metrics_fields)
     return RunResult(spec=spec, backend=backend, trace=trace, wall_s=wall,
                      eps_value=eps_value, time_to_target=tta,
                      r_measurement=measurement, predictions=predictions,
-                     extras=extras)
+                     extras=extras, metrics=metrics)
 
 
 # ---------------------------------------------------------------------------
@@ -400,7 +486,8 @@ def _run_netsim(spec: ExperimentSpec, backend: ComponentSpec) -> RunResult:
 
 
 @backends.register("launch")
-def _run_launch(spec: ExperimentSpec, backend: ComponentSpec) -> RunResult:
+def _run_launch(spec: ExperimentSpec, backend: ComponentSpec,
+                tracer: Tracer | None = None) -> RunResult:
     import jax
 
     from repro.launch.mesh import make_mesh
@@ -408,6 +495,11 @@ def _run_launch(spec: ExperimentSpec, backend: ComponentSpec) -> RunResult:
     from repro.models import registry as _models
     from repro.optim import adamw, cosine_lr
 
+    tr = tracer if tracer is not None else Tracer()
+    _require(spec.profile_dir is None,
+             "profile_dir wraps the dense scanned program; profile the "
+             "launch path with jax.profiler around train_consensus_lm "
+             "directly")
     params = dict(backend.params)
     mesh_shape = tuple(params.pop("mesh", None) or (1, 1, 1))
     dryrun = params.pop("dryrun", False)
@@ -417,42 +509,45 @@ def _run_launch(spec: ExperimentSpec, backend: ComponentSpec) -> RunResult:
     _require(not params,
              f"launch backend has unknown params {sorted(params)}")
 
-    problem = _build_problem(spec)
-    _require(isinstance(problem, C.LMProblem),
-             'launch backend needs the "lm" problem kind')
-    _require(len(mesh_shape) == 3, "mesh must be (pod, data, model)")
-    _require(spec.controller is None,
-             "the launch backend has no controller hook yet (ROADMAP)")
-    # reject spec fields this backend cannot honor rather than silently
-    # dropping them -- the other backends validate the same way
-    _require(spec.eps_frac is None,
-             "launch has no F* to target; eps_frac is dense/netsim-only")
-    _require(spec.time_limit is None,
-             "time_limit is event-clock only (netsim backends)")
-    _require(spec.stepsize == ComponentSpec("sqrt", {"A": 1.0}),
-             "the launch optimizer's LR schedule is the backend's 'lr' "
-             "param; leave spec.stepsize at its default")
-    n_pods = mesh_shape[0]
-    if int(np.prod(mesh_shape)) > jax.device_count():
-        raise ValueError(
-            f"mesh {mesh_shape} needs {int(np.prod(mesh_shape))} devices, "
-            f"have {jax.device_count()} (set "
-            f"XLA_FLAGS=--xla_force_host_platform_device_count=... before "
-            f"any jax import, as launch/dryrun.py does)")
-    mesh = make_mesh(mesh_shape, ("pod", "data", "model"))
-    graph = _build_topology(spec, n_pods)
-    _require(isinstance(graph, CommGraph),
-             "launch backend needs a fixed CommGraph topology")
-    schedule = _build_schedule(spec)
+    with tr.span("build"):
+        problem = _build_problem(spec)
+        _require(isinstance(problem, C.LMProblem),
+                 'launch backend needs the "lm" problem kind')
+        _require(len(mesh_shape) == 3, "mesh must be (pod, data, model)")
+        _require(spec.controller is None,
+                 "the launch backend has no controller hook yet (ROADMAP)")
+        # reject spec fields this backend cannot honor rather than silently
+        # dropping them -- the other backends validate the same way
+        _require(spec.eps_frac is None,
+                 "launch has no F* to target; eps_frac is dense/netsim-only")
+        _require(spec.time_limit is None,
+                 "time_limit is event-clock only (netsim backends)")
+        _require(spec.stepsize == ComponentSpec("sqrt", {"A": 1.0}),
+                 "the launch optimizer's LR schedule is the backend's 'lr' "
+                 "param; leave spec.stepsize at its default")
+        n_pods = mesh_shape[0]
+        if int(np.prod(mesh_shape)) > jax.device_count():
+            raise ValueError(
+                f"mesh {mesh_shape} needs {int(np.prod(mesh_shape))} "
+                f"devices, have {jax.device_count()} (set "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count=... "
+                f"before any jax import, as launch/dryrun.py does)")
+        mesh = make_mesh(mesh_shape, ("pod", "data", "model"))
+        graph = _build_topology(spec, n_pods)
+        _require(isinstance(graph, CommGraph),
+                 "launch backend needs a fixed CommGraph topology")
+        schedule = _build_schedule(spec)
 
-    cfg = _models.get_config(problem.arch, problem.variant)
-    optimizer = adamw(cosine_lr(lr, max(spec.T, 1)))
+        cfg = _models.get_config(problem.arch, problem.variant)
+        optimizer = adamw(cosine_lr(lr, max(spec.T, 1)))
     t0 = time.perf_counter()
-    report = train_consensus_lm(
-        cfg, optimizer, mesh, steps=spec.T, schedule=schedule, graph=graph,
-        r_estimate=spec.r, batch_per_node=problem.batch_per_node,
-        seq_len=problem.seq_len, seed=spec.seed, log_every=log_every,
-        mix_target=mix_target, dryrun=dryrun)
+    with tr.span("execute"):
+        report = train_consensus_lm(
+            cfg, optimizer, mesh, steps=spec.T, schedule=schedule,
+            graph=graph, r_estimate=spec.r,
+            batch_per_node=problem.batch_per_node,
+            seq_len=problem.seq_len, seed=spec.seed, log_every=log_every,
+            mix_target=mix_target, dryrun=dryrun, tracer=tr)
     wall = time.perf_counter() - t0
 
     # fold the per-step losses into the canonical trace shape at the spec's
@@ -473,8 +568,26 @@ def _run_launch(spec: ExperimentSpec, backend: ComponentSpec) -> RunResult:
     extras = {"arch": problem.arch, "variant": problem.variant,
               "mesh": list(mesh_shape), "comm_rounds": report.comm_rounds,
               "sim_time_units": report.sim_time_units, **report.extras}
+
+    # message accounting mirrors the dense closed form: every gossip round
+    # is each pod shipping its (pod-sharded) parameter payload to its k
+    # graph neighbors; param_bytes comes measured from the train loop
+    compile_s = float(report.extras.get("local_compile_s", 0.0)
+                      + report.extras.get("fused_compile_s", 0.0))
+    msgs = report.comm_rounds * n_pods * k
+    metrics_fields: dict[str, Any] = dict(
+        compile_s=min(compile_s, wall),
+        execute_s=max(wall - compile_s, 0.0),
+        msgs=msgs,
+        bytes_on_wire=float(msgs * report.extras.get("param_bytes", 0.0)),
+        gossip_rounds=report.comm_rounds)
+    step_walls = report.extras.get("step_walls")
+    if step_walls:
+        metrics_fields["step_time_quantiles"] = sample_quantiles(
+            step_walls, "host")
+    metrics = RunMetrics.from_tracer(tr, **metrics_fields)
     return RunResult(spec=spec, backend=backend, trace=trace, wall_s=wall,
-                     extras=extras)
+                     extras=extras, metrics=metrics)
 
 
 # ---------------------------------------------------------------------------
@@ -503,10 +616,19 @@ def _resolve_backend(spec: ExperimentSpec,
 
 
 def run(spec: ExperimentSpec,
-        backend: int | str | ComponentSpec | None = None) -> RunResult:
-    """Run one spec on one backend (default: the first it declares)."""
+        backend: int | str | ComponentSpec | None = None,
+        tracer: Tracer | None = None) -> RunResult:
+    """Run one spec on one backend (default: the first it declares).
+
+    `tracer` (optional `repro.obs.Tracer`) collects the run's spans and
+    counters; every backend populates `RunResult.metrics` from it either
+    way (an internal tracer is created when none is given). Pass
+    `Tracer(detail=True)` to additionally capture per-event timelines
+    (netsim node steps / message flights, launch per-step walls) for
+    Chrome-trace export via `repro.obs.write_chrome_trace`.
+    """
     b = _resolve_backend(spec, backend)
-    return backends.builder(b.kind)(spec, b)
+    return backends.builder(b.kind)(spec, b, tracer=tracer)
 
 
 def run_all(spec: ExperimentSpec) -> list[RunResult]:
@@ -587,8 +709,8 @@ def _run_sweep_vmap(cells: Sequence[ExperimentSpec],
     if any(b.kind != "dense" for b in resolved):
         return None
     if any(c.controller is not None or c.time_limit is not None
-           for c in cells):
-        return None
+           or c.profile_dir is not None for c in cells):
+        return None  # profiling wants one run per capture: serial path
     if len({_vmap_signature(c, b) for c, b in zip(cells, resolved)}) != 1:
         return None
     spec0 = cells[0]
@@ -623,15 +745,26 @@ def _run_sweep_vmap(cells: Sequence[ExperimentSpec],
     wall = time.perf_counter() - t0
 
     lam2 = graph.lambda2()
+    lane_wall = wall / len(cells)
+    # one compile serves every lane: amortize it evenly so per-lane
+    # compile_s + execute_s == wall_s holds just like the serial path
+    lane_compile = min(sim.last_timings["compile_s"] / len(cells), lane_wall)
     results = []
-    for c, bk, sched, tr in zip(cells, resolved, schedules, traces):
-        eps_value, tta = _target_fields(tr, _eps_value(c, problem))
+    for c, bk, sched, trc in zip(cells, resolved, schedules, traces):
+        eps_value, tta = _target_fields(trc, _eps_value(c, problem))
         predictions = _dense_predictions(graph, c.r, sched, lam2)
+        metrics = RunMetrics(
+            compile_s=lane_compile,
+            execute_s=max(lane_wall - lane_compile, 0.0),
+            counters={"vmap_lanes": float(len(cells))},
+            **_dense_message_counts(trc, problem.n, graph.degree,
+                                    problem.d))
         results.append(RunResult(
-            spec=c, backend=bk, trace=tr, wall_s=wall / len(cells),
+            spec=c, backend=bk, trace=trc, wall_s=lane_wall,
             eps_value=eps_value, time_to_target=tta,
             predictions=predictions,
-            extras={"mix_mode": sim.mix_mode, "vmap_lanes": len(cells)}))
+            extras={"mix_mode": sim.mix_mode, "vmap_lanes": len(cells)},
+            metrics=metrics))
     return results
 
 

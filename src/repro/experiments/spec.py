@@ -117,6 +117,10 @@ class ExperimentSpec:
       eps_frac:  optional accuracy target F* + eps_frac*(F(0)-F*); enables
                  time_to_target in the RunResult.
       time_limit: optional event-clock cap (netsim only).
+      profile_dir: optional directory for a `jax.profiler` trace captured
+                 around the dense backend's scanned program (dense only;
+                 see repro.obs.profile_ctx). None (default) disables
+                 profiling entirely.
     """
 
     name: str
@@ -133,6 +137,7 @@ class ExperimentSpec:
     r: float = 0.0
     eps_frac: float | None = None
     time_limit: float | None = None
+    profile_dir: str | None = None
 
     def __post_init__(self):
         object.__setattr__(self, "problem", _component(self.problem))
@@ -157,6 +162,9 @@ class ExperimentSpec:
             object.__setattr__(self, "eps_frac", float(self.eps_frac))
         if self.time_limit is not None:
             object.__setattr__(self, "time_limit", float(self.time_limit))
+        if self.profile_dir is not None and not isinstance(self.profile_dir,
+                                                           str):
+            raise TypeError("profile_dir must be a path string or None")
 
     # -- serialization -------------------------------------------------------
 
@@ -177,6 +185,7 @@ class ExperimentSpec:
             "r": self.r,
             "eps_frac": self.eps_frac,
             "time_limit": self.time_limit,
+            "profile_dir": self.profile_dir,
         }
         return d
 

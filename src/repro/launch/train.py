@@ -58,7 +58,8 @@ def train_consensus_lm(cfg: ModelConfig, optimizer: Optimizer, mesh,
                        seed: int = 0,
                        log_every: int = 10,
                        mix_target: str = "params",
-                       dryrun: bool = False) -> TrainReport:
+                       dryrun: bool = False,
+                       tracer=None) -> TrainReport:
     """Run consensus DP training of `cfg` on `mesh` (axes pod, data, model).
 
     Returns per-step losses plus the simulated time-unit accounting
@@ -70,6 +71,11 @@ def train_consensus_lm(cfg: ModelConfig, optimizer: Optimizer, mesh,
     `dryrun` lowers + compiles both step programs (cheap local, fused
     local+mix) and returns after ZERO training steps with the compile
     timings in `extras` -- the CI smoke mode for the launch backend.
+
+    `tracer` (optional `repro.obs.Tracer`) receives host-clock spans per
+    training step / compile; the per-step walls and comm flags are also
+    returned in `extras["step_walls"]` / `extras["step_comm"]` so the
+    experiments runner can quote step-time quantiles without a tracer.
     """
     schedule = schedule or EveryIteration()
     axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
@@ -116,15 +122,28 @@ def train_consensus_lm(cfg: ModelConfig, optimizer: Optimizer, mesh,
                                node_index=i, num_nodes=n_pods, seed=seed)
                    for i in range(n_pods)]
 
+        # bytes one pod ships per gossip round per link: the mixed payload
+        # is the per-pod parameter pytree (mix_target="params"), so the
+        # pod-stacked leaves divide by n_pods
+        param_bytes = sum(leaf.size * leaf.dtype.itemsize
+                          for leaf in jax.tree_util.tree_leaves(params))
+        param_bytes_per_pod = param_bytes / max(n_pods, 1)
+
         if dryrun:
             nexts = [next(s) for s in streams]
             batch = {"tokens": jnp.stack([b["tokens"] for b in nexts]),
                      "labels": jnp.stack([b["labels"] for b in nexts])}
-            extras = {"dryrun": True, "n_pods": n_pods, "k": k}
+            extras = {"dryrun": True, "n_pods": n_pods, "k": k,
+                      "param_bytes": param_bytes_per_pod}
             for name, fn in (("local", jit_local), ("fused", jit_fused)):
                 t0 = time.time()
                 fn.lower(params, opt_state, batch).compile()
-                extras[f"{name}_compile_s"] = round(time.time() - t0, 2)
+                dt = time.time() - t0
+                extras[f"{name}_compile_s"] = round(dt, 2)
+                if tracer is not None:
+                    tracer.add_host_span(f"compile:{name}",
+                                         tracer.now() - dt, dt,
+                                         track="launch")
             for s in streams:
                 s.close()
             return TrainReport(steps=0, losses=[], comm_rounds=0,
@@ -142,16 +161,26 @@ def train_consensus_lm(cfg: ModelConfig, optimizer: Optimizer, mesh,
         losses = []
         comm_rounds = 0
         sim_time = 0.0
+        step_walls: list[float] = []
+        step_comm: list[bool] = []
         for t in range(start_step + 1, steps + 1):
             nexts = [next(s) for s in streams]  # disjoint per-pod shards
             batch = {"tokens": jnp.stack([b["tokens"] for b in nexts]),
                      "labels": jnp.stack([b["labels"] for b in nexts])}
             comm = schedule.is_comm_step(t)
             step_fn = jit_fused if comm else jit_local
+            t0 = time.perf_counter()
             params, opt_state, metrics = step_fn(params, opt_state, batch)
             sim_time += 1.0 / n_pods + (k * r_estimate if comm else 0.0)
             comm_rounds += int(comm)
-            loss = float(jnp.mean(metrics["loss"]))
+            loss = float(jnp.mean(metrics["loss"]))  # blocks on the step
+            wall = time.perf_counter() - t0
+            step_walls.append(wall)
+            step_comm.append(comm)
+            if tracer is not None:
+                tracer.add_host_span("fused_step" if comm else "local_step",
+                                     tracer.now() - wall, wall,
+                                     track="launch", t=t)
             losses.append(loss)
             if log_every and t % log_every == 0:
                 print(f"[train] step {t} loss {loss:.4f} "
@@ -165,4 +194,7 @@ def train_consensus_lm(cfg: ModelConfig, optimizer: Optimizer, mesh,
             s.close()
         return TrainReport(steps=steps, losses=losses,
                            comm_rounds=comm_rounds,
-                           sim_time_units=sim_time, resumed_from=resumed)
+                           sim_time_units=sim_time, resumed_from=resumed,
+                           extras={"param_bytes": param_bytes_per_pod,
+                                   "step_walls": step_walls,
+                                   "step_comm": step_comm})

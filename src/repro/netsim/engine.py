@@ -239,6 +239,12 @@ class ObjectEngine:
         self.drops = 0
         self.sent = 0
         self.rewires = 0
+        # detail tracing resolves to one pre-computed local, so the hot
+        # path carries exactly one `if tr is not None` branch per event
+        # kind (the controller-hook pattern); a non-detail tracer is
+        # equivalent to none at all here.
+        tracer = getattr(sim, "tracer", None)
+        self._tr = tracer if (tracer is not None and tracer.detail) else None
 
     def _make_nodes(self, x0_stack: np.ndarray) -> None:
         sim = self.sim
@@ -276,6 +282,7 @@ class ObjectEngine:
         rng = np.random.default_rng(sim.seed)
         q = EventQueue(backend="heap")
         trace = SimTrace([], [], [], [], [])
+        tr = self._tr
 
         for i in range(n):
             q.schedule(self._step_busy(i), "step", node=i)
@@ -295,6 +302,9 @@ class ObjectEngine:
                 node = self.nodes[i]
                 step_dur = net.local_step_time(i)
                 self.compute_times.append(step_dur)
+                if tr is not None:
+                    tr.add_span("step", ev.time - step_dur, step_dur,
+                                track=f"node{i}", node=i, t=int(node.t) + 1)
                 n_flights = len(self.msg_flights)
                 msgs = node.finish_step(net)
                 for dst, payload in msgs:
@@ -302,8 +312,14 @@ class ObjectEngine:
                     flight = net.sample_flight(i, dst, rng)
                     if flight is None:
                         self.drops += 1
+                        if tr is not None:
+                            tr.add_instant("drop", ev.time, track="net",
+                                           src=i, dst=dst)
                         continue
                     self.msg_flights.append(flight)
+                    if tr is not None:
+                        tr.add_span("flight", ev.time, flight, track="net",
+                                    src=i, dst=dst)
                     # serialization already stalled the sender (step busy);
                     # only propagation + jitter remains in the air
                     extra = max(flight - net.serialize_time(i, dst), 0.0)
@@ -336,6 +352,8 @@ class ObjectEngine:
             elif ev.kind == "rewire":
                 net.rewire()
                 self.rewires += 1
+                if tr is not None:
+                    tr.add_instant("rewire", ev.time, track="net")
                 if ctrl is not None:
                     ctrl.on_rewire(net.graph)
                 if active > 0:
@@ -360,6 +378,9 @@ class ObjectEngine:
         xhat = np.stack([nd.xhat for nd in self.nodes])
         z = np.stack([nd.z_est for nd in self.nodes])
         comm_total = sum(nd.comm_iters for nd in self.nodes)
+        if self._tr is not None:
+            self._tr.add_instant("eval", now, track="net",
+                                 steps=int(total_steps))
         _record_stacks(self.sim, trace, now, total_steps, n, xhat, z,
                        comm_total)
 
@@ -448,6 +469,10 @@ class VectorizedEngine:
                       if sim.projection is not None else None)
         self._ctrl = None  # bound per-run in run()
         self._mw_cache: tuple | None = None  # (W, S_in, Wslot, Wdiag)
+        # same detail-tracing contract as ObjectEngine: one branch per
+        # event BATCH here (the engine's own batching amortizes it)
+        tracer = getattr(sim, "tracer", None)
+        self._tr = tracer if (tracer is not None and tracer.detail) else None
 
     # -- observability (same contract as ObjectEngine's lists) --------------
 
@@ -536,11 +561,18 @@ class VectorizedEngine:
         m = len(srcs)
         self.sent += m
         keep, flights, extras = self._sample_flights(srcs, dsts)
-        self.drops += int(m - keep.sum())
+        n_drop = int(m - keep.sum())
+        self.drops += n_drop
+        if self._tr is not None and n_drop:
+            self._tr.add_instant("drop", self.q.now, track="net",
+                                 count=n_drop)
         if not keep.any():
             return
         ks = np.nonzero(keep)[0]
         self._flight_chunks.append(flights[ks])
+        if self._tr is not None:
+            self._tr.add_spans("flight", np.full(len(ks), self.q.now),
+                               flights[ks], track="net")
         if self._ctrl is not None:
             self._ctrl.on_messages(flights[ks])
         arrivals = self.q.now + extras[ks]
@@ -664,6 +696,8 @@ class VectorizedEngine:
                 self.net.rewire()
                 self._rebuild_topology()
                 self.rewires += 1
+                if self._tr is not None:
+                    self._tr.add_instant("rewire", ev.time, track="net")
                 if ctrl is not None:
                     ctrl.on_rewire(self.net.graph)
                 if self.active > 0:
@@ -674,6 +708,9 @@ class VectorizedEngine:
         return trace
 
     def _record(self, trace: SimTrace, now: float, total_steps: int) -> None:
+        if self._tr is not None:
+            self._tr.add_instant("eval", now, track="net",
+                                 steps=int(total_steps))
         _record_stacks(self.sim, trace, now, total_steps, self.n, self.xhat,
                        self._z_est_all(), int(self.comm_iters.sum()))
 
@@ -699,6 +736,10 @@ class VectorizedEngine:
         sim, now = self.sim, self.q.now
         i = due
         self._compute_chunks.append(self.local_step[i])
+        if self._tr is not None:
+            durs = self.local_step[i]
+            self._tr.add_spans("step", now - durs, durs,
+                               tracks=[f"node{j}" for j in i])
         if self._ctrl is not None:
             self._ctrl.on_steps(i, self.local_step[i])
         t_old = self.t[i]

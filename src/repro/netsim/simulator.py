@@ -91,6 +91,13 @@ class NetSimulator:
         schedule becomes the run's schedule (passing a different
         `schedule=` too is an error); with `controller=None` the engines
         run their uncontrolled (bit-identical) event loops.
+      tracer: optional `repro.obs.Tracer`. With `tracer.detail` set, both
+        engines emit per-event sim-time spans (node steps, message
+        flights) and instants (drops, rewires, evals) -- purely observing
+        the records they already produce, behind the same single-branch
+        pattern as the controller hooks, so traced runs stay bit-identical
+        to untraced ones. A non-detail (or absent) tracer never enters the
+        event loops at all.
     """
 
     def __init__(self, scenario: Scenario, grad_fn: GradFn,
@@ -103,7 +110,8 @@ class NetSimulator:
                  pushsum_w_floor: float = 0.5,
                  engine: str = "auto",
                  batch_grad_fn: Callable | None = None,
-                 controller=None):
+                 controller=None,
+                 tracer=None):
         if algorithm not in ("dda", "pushsum"):
             raise ValueError(f"unknown algorithm {algorithm!r}")
         if engine not in _ENGINES:
@@ -120,6 +128,9 @@ class NetSimulator:
                     "push-sum's mass splitting is its own weighting scheme")
             schedule = controller.schedule
         self.controller = controller
+        self.tracer = tracer
+        if controller is not None and tracer is not None:
+            controller.attach_tracer(tracer)
         self.scenario = scenario
         self.grad_fn = grad_fn
         self.eval_fn = eval_fn

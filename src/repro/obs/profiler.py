@@ -1,0 +1,29 @@
+"""Opt-in `jax.profiler` hook for the dense scan program.
+
+`profile_ctx(profile_dir)` wraps `jax.profiler.start_trace/stop_trace`
+around a block; with `profile_dir=None` it is a no-op context (the
+default for every run). The dense runner enters it around the scanned
+program's dispatch when `ExperimentSpec.profile_dir` is set, producing a
+TensorBoard-loadable XLA profile alongside repro's own Chrome trace.
+"""
+
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Iterator
+
+__all__ = ["profile_ctx"]
+
+
+@contextmanager
+def profile_ctx(profile_dir: str | None) -> Iterator[None]:
+    if profile_dir is None:
+        yield
+        return
+    import jax
+
+    jax.profiler.start_trace(str(profile_dir))
+    try:
+        yield
+    finally:
+        jax.profiler.stop_trace()

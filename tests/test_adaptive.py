@@ -87,6 +87,78 @@ def test_dense_rtracker_inverts_eq9():
     assert tr.r_hat == pytest.approx(r, rel=1e-9)
 
 
+def test_rtracker_zero_length_batches_are_noops():
+    """Empty observation windows (a vectorized-engine chunk with no
+    completed events) must not touch the estimate or the counts."""
+    tr = RTracker(4, halflife=8.0)
+    tr.observe_steps(np.arange(4), np.full(4, 0.25))
+    tr.observe_messages(np.array([0.5]))
+    before = tr.r_hat
+    tr.observe_messages(np.array([]))
+    tr.observe_steps(np.array([], dtype=int), np.array([]))
+    assert tr.r_hat == before
+    assert (tr.n_messages, tr.n_steps) == (1, 4)
+
+
+def test_rtracker_single_node_timeline():
+    """n=1 degenerates cleanly: the median of one node IS that node, and
+    t_grad_full carries no * n inflation."""
+    tr = RTracker(1, halflife=8.0)
+    assert tr.r_hat is None
+    tr.observe_steps(np.array([0]), np.array([2.0]))
+    tr.observe_messages(np.array([0.5]))
+    assert tr.t_grad_full == pytest.approx(2.0)
+    assert tr.r_hat == pytest.approx(0.25)
+
+
+def test_rtracker_partial_node_coverage_uses_nanmedian():
+    """Before every node has reported a step, the median runs over the
+    nodes that HAVE (nanmedian), not over NaN placeholders."""
+    tr = RTracker(4, halflife=8.0)
+    tr.observe_steps(np.array([0, 2]), np.array([0.25, 0.25]))
+    assert tr.t_grad_full == pytest.approx(1.0)
+    tr.observe_messages(np.array([0.1]))
+    assert tr.r_hat == pytest.approx(0.1)
+
+
+def test_rtracker_ready_boundaries():
+    tr = RTracker(2)
+    assert not tr.ready()
+    tr.observe_messages(np.array([0.1, 0.1]))
+    assert not tr.ready()  # messages alone are not enough
+    tr.observe_steps(np.array([0]), np.array([0.5]))
+    assert tr.ready()
+    assert tr.ready(min_messages=2, min_steps=1)
+    assert not tr.ready(min_messages=3)
+    assert not tr.ready(min_steps=2)
+
+
+def test_rtracker_rejects_empty_network():
+    with pytest.raises(ValueError):
+        RTracker(0)
+    with pytest.raises(ValueError):
+        DenseRTracker(0, 1)
+    with pytest.raises(ValueError):
+        DenseRTracker(4, 0)
+
+
+def test_dense_rtracker_rejects_negative_wall():
+    tr = DenseRTracker(4, 2)
+    with pytest.raises(ValueError):
+        tr.observe_iteration(-1e-9, was_comm=False)
+
+
+def test_dense_rtracker_clamps_when_comm_looks_cheaper():
+    """Measurement noise can make a comm iteration look cheaper than a
+    plain one; the eq. (9) inversion clamps t_msg at 0 instead of going
+    negative."""
+    tr = DenseRTracker(4, 2, halflife=4.0)
+    for _ in range(10):
+        tr.observe_iteration(0.25, was_comm=False)
+        tr.observe_iteration(0.20, was_comm=True)
+    assert tr.r_hat == 0.0
+
+
 # -- schedule mutation invariants --------------------------------------------
 
 

@@ -23,7 +23,6 @@ $CONVERGENCE_ARTIFACTS (default `convergence-traces/`) so the CI job can
 upload them for post-mortem.
 """
 
-import json
 import math
 import os
 import pathlib
@@ -46,14 +45,13 @@ BURN_IN = 100  # iterations before the envelope is enforced (transient)
 
 
 def _dump_artifact(name: str, payload: dict) -> str:
-    from repro.core.dda import json_sanitize
+    from repro.obs import write_json_artifact
 
-    path = pathlib.Path(ARTIFACT_DIR)
-    path.mkdir(parents=True, exist_ok=True)
-    out = path / f"{name}.json"
-    with open(out, "w") as f:
-        json.dump(json_sanitize(payload), f, indent=2, allow_nan=False)
-    return str(out)
+    # always ship the r-hat trajectory key, even when the failing run had
+    # no controller: post-mortems grep one schema across all artifacts
+    payload.setdefault("r_hat_trajectory", [])
+    return write_json_artifact(
+        pathlib.Path(ARTIFACT_DIR) / f"{name}.json", payload)
 
 
 def _checked(name: str, payload: dict, ok: bool, message: str) -> None:
