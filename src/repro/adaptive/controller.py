@@ -159,6 +159,12 @@ class AdaptiveController:
         self._next_update = update_every
         self._n = 0
         self._k = 0
+        # fault-injection membership: when a FaultRuntime splices a reduced
+        # graph in (node left/joined), this holds the int64 array of member
+        # node ids and the controller retunes against the SUB-cluster
+        # (n = len(members), lambda2 of the sub-graph) -- the embedded
+        # full-size graph's self-loops would poison the spectral gap.
+        self._members: np.ndarray | None = None
 
     # -- engine-facing hooks -------------------------------------------------
 
@@ -176,6 +182,7 @@ class AdaptiveController:
         self._lam2_cache = None
         self._graph = net.graph
         self._net = net
+        self._members = None
         if self.reweight_gossip:
             net.mix_weights = None  # fresh run: no weights learned yet
         self._next_update = self.update_every
@@ -188,6 +195,12 @@ class AdaptiveController:
         self.tracker.observe_messages(flights)
 
     def on_rewire(self, graph: CommGraph) -> None:
+        if self._members is not None:
+            # membership changed since bind: the scheduled rewire delivers
+            # the PRE-fault full-size graph, which no longer describes the
+            # live cluster. The FaultRuntime's spliced graph (delivered via
+            # on_membership) stays authoritative until the next splice.
+            return
         self._graph = graph
         self._k = graph.degree
         if self.reweighter is not None:
@@ -196,6 +209,34 @@ class AdaptiveController:
             # the learned P refers to the OLD edge set; fall back to the
             # configured uniform weights until the next retune relearns it
             self._net.mix_weights = None
+
+    def on_membership(self, sub_graph: CommGraph,
+                      members: np.ndarray) -> None:
+        """A FaultRuntime spliced a rebuilt graph after a join/leave.
+
+        `sub_graph` is the graph over the m CURRENT members (NOT embedded
+        into full size: the identity self-loops the embedding adds for
+        departed nodes would drive the estimated lambda2 toward 1 and
+        poison h_opt), `members` the sorted full-cluster ids those m rows
+        map to. From here on the controller solves the tradeoff for the
+        m-node cluster; per-node step statistics are sliced down to the
+        members at retune time so a departed straggler stops dragging the
+        reweighter."""
+        self._members = np.asarray(members, dtype=np.int64)
+        self._n = int(sub_graph.n)
+        self._k = max(sub_graph.degree, 1)
+        self._graph = sub_graph
+        self._lam2_cache = None
+        if self.reweighter is not None:
+            self.reweighter = StragglerReweighter(sub_graph)
+        if self.reweight_gossip:
+            self._net.mix_weights = None
+
+    def on_partition_heal(self, now: float) -> None:
+        """A link partition healed: the measured r/step statistics from the
+        partition era are stale for the rejoined cluster, so pull the next
+        retune forward to `now` instead of waiting out the cadence."""
+        self._next_update = min(self._next_update, float(now))
 
     def retune_due(self, now: float) -> bool:
         """Cheap cadence test so engines only compute the (O(n)) iteration
@@ -249,9 +290,19 @@ class AdaptiveController:
         if cut <= self.schedule.segments[-1][0]:
             return None  # see docstring: wait for the frontier to catch up
         if self.reweighter is not None:
-            P_eff, lam2 = self.reweighter.update(self.tracker.step_means)
+            means = self.tracker.step_means
+            if self._members is not None:
+                means = means[self._members]
+            P_eff, lam2 = self.reweighter.update(means)
             if self.reweight_gossip:
-                self._net.mix_weights = P_eff
+                if self._members is not None:
+                    # lift the m x m effective P back to full size; departed
+                    # nodes keep identity rows (they hold no gossip edges)
+                    full = np.eye(self._net.n)
+                    full[np.ix_(self._members, self._members)] = P_eff
+                    self._net.mix_weights = full
+                else:
+                    self._net.mix_weights = P_eff
         else:
             lam2 = self._static_lam2()
         changed = self.schedule.retune(cut, self._n, self._k, r_hat, lam2)

@@ -11,6 +11,7 @@ host copies and keeps stepping.
 from __future__ import annotations
 
 import json
+import os
 import pathlib
 import shutil
 import threading
@@ -21,6 +22,29 @@ import ml_dtypes
 import numpy as np
 
 PyTree = Any
+
+# COMMIT marker content: restore trusts a checkpoint only when the marker
+# holds exactly this token, so a crash that leaves a partial/empty COMMIT
+# file behind reads as "not committed" instead of a torn restore source.
+_COMMIT_TOKEN = "ok"
+
+
+def _write_atomic(path: pathlib.Path, writer) -> None:
+    """Write a file via temp-name + os.replace so it is all-or-nothing.
+
+    `writer(tmp_path)` produces the full content at the temp path; the
+    rename into place is atomic on POSIX, so readers never observe a
+    half-written file even if the process dies mid-write."""
+    tmp = path.with_name(path.name + ".part")
+    writer(tmp)
+    os.replace(tmp, path)
+
+
+def _committed(path: pathlib.Path) -> bool:
+    try:
+        return (path / "COMMIT").read_text() == _COMMIT_TOKEN
+    except OSError:
+        return False
 
 # numpy's npz cannot store ml_dtypes (bf16 etc.) natively: store a uint view
 # plus a dtype tag.
@@ -51,10 +75,15 @@ def save_tree(path: pathlib.Path, tree: PyTree, *, extra: dict | None = None):
                 break
         arrays[f"a{i}"] = arr
         dtypes.append(name)
-    np.savez(tmp / "arrays.npz", **arrays)
+    def _savez(p):
+        with open(p, "wb") as f:  # file handle: savez must not append .npz
+            np.savez(f, **arrays)
+
+    _write_atomic(tmp / "arrays.npz", _savez)
     meta = {"n_leaves": len(leaves), "dtypes": dtypes, "extra": extra or {}}
-    (tmp / "meta.json").write_text(json.dumps(meta))
-    (tmp / "COMMIT").write_text("ok")
+    _write_atomic(tmp / "meta.json",
+                  lambda p: p.write_text(json.dumps(meta)))
+    _write_atomic(tmp / "COMMIT", lambda p: p.write_text(_COMMIT_TOKEN))
     if path.exists():
         shutil.rmtree(path)
     tmp.rename(path)
@@ -64,7 +93,7 @@ def restore_tree(path: pathlib.Path, like: PyTree) -> tuple[PyTree, dict]:
     """Restore into the structure of `like` (shape/dtype checked against
     leaves). Returns (tree, extra)."""
     path = pathlib.Path(path)
-    if not (path / "COMMIT").exists():
+    if not _committed(path):
         raise FileNotFoundError(f"no committed checkpoint at {path}")
     data = np.load(path / "arrays.npz")
     meta = json.loads((path / "meta.json").read_text())
@@ -95,7 +124,7 @@ class CheckpointManager:
     def _step_dirs(self) -> list[tuple[int, pathlib.Path]]:
         out = []
         for p in self.dir.glob("step_*"):
-            if (p / "COMMIT").exists():
+            if _committed(p):
                 try:
                     out.append((int(p.name.split("_")[1]), p))
                 except ValueError:

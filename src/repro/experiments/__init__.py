@@ -36,14 +36,26 @@ from repro.experiments.result import RunResult
 from repro.experiments.runner import backends, run, run_all, run_sweep
 from repro.experiments.spec import ComponentSpec, ExperimentSpec
 
+
+def __getattr__(name):
+    # lazy: repro.faults.plan itself imports this package's registry module,
+    # so an eager import here would be circular when repro.faults loads first
+    if name in ("FaultPlan", "faultplans"):
+        from repro.faults.plan import FaultPlan, faultplans
+        return {"FaultPlan": FaultPlan, "faultplans": faultplans}[name]
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
 __all__ = [
     "ComponentSpec",
     "ExperimentSpec",
+    "FaultPlan",
     "LMProblem",
     "Problem",
     "Registry",
     "RunResult",
     "backends",
+    "faultplans",
     "problems",
     "run",
     "run_all",

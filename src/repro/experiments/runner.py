@@ -153,6 +153,9 @@ def _run_dense(spec: ExperimentSpec, backend: ComponentSpec,
     import jax.numpy as jnp
 
     tr = tracer if tracer is not None else Tracer()
+    _require(spec.faults is None,
+             "fault injection is event-driven (netsim backends only); the "
+             "dense synchronous loop has no crash/recover semantics")
     params = dict(backend.params)
     compress_keep = params.pop("compress_keep", None)
     mix = params.pop("mix", "auto")
@@ -349,9 +352,10 @@ def _dense_adaptive_run(sim: DDASimulator, ctrl, x0, T: int,
 
 _SCENARIO_KNOBS = {
     "homogeneous": (),
-    "lossy": ("loss", "jitter"),
+    "lossy": ("loss", "jitter", "retries", "retry_timeout"),
     "straggler": ("slow_factor", "n_slow"),
-    "adversarial": ("loss", "slow_factor", "n_slow", "rewire_every"),
+    "adversarial": ("loss", "slow_factor", "n_slow", "rewire_every",
+                    "retries", "retry_timeout"),
     "time_varying": ("rewire_every", "loss"),
 }
 
@@ -391,10 +395,11 @@ def _run_netsim(spec: ExperimentSpec, backend: ComponentSpec,
     algorithm = params.pop("algorithm", "dda")
     message_bytes = params.pop("message_bytes", None)
     pushsum_w_floor = params.pop("pushsum_w_floor", 0.5)
+    pushsum_inject = params.pop("pushsum_inject", "plain")
     knobs = {k: params.pop(k)
              for k in list(params)
              if k in {"loss", "jitter", "slow_factor", "n_slow",
-                      "rewire_every"}}
+                      "rewire_every", "retries", "retry_timeout"}}
     _require(not params,
              f"netsim backend has unknown params {sorted(params)}")
 
@@ -427,12 +432,20 @@ def _run_netsim(spec: ExperimentSpec, backend: ComponentSpec,
                      "a controller run needs schedule kind 'adaptive'")
             ctrl = AdaptiveController(schedule, **spec.controller.params)
 
+        plan = None
+        if spec.faults is not None:
+            from repro.faults import faultplans
+            plan = C.build_component(faultplans, spec.faults.kind,
+                                     spec.faults.params, n=problem.n)
+
         sim = NetSimulator(scenario, problem.grad_fn, problem.eval_fn,
                            a_fn=a_fn,
                            schedule=None if ctrl is not None else schedule,
                            algorithm=algorithm, seed=spec.seed,
                            pushsum_w_floor=pushsum_w_floor,
-                           engine=engine, controller=ctrl, tracer=tr)
+                           pushsum_inject=pushsum_inject,
+                           engine=engine, controller=ctrl, tracer=tr,
+                           faults=plan)
     x0 = np.zeros((problem.n, problem.d))
     time_limit = math.inf if spec.time_limit is None else spec.time_limit
     t0 = time.perf_counter()
@@ -460,6 +473,13 @@ def _run_netsim(spec: ExperimentSpec, backend: ComponentSpec,
         drops=sim.drops,
         gossip_rounds=int(trace.comms[-1]) if trace.comms else 0,
         step_time_quantiles=sample_quantiles(sim.compute_times, "sim"))
+    if plan is not None:
+        faults_block = {**(sim.fault_stats or {}),
+                        "retransmits": sim.retransmits}
+        extras["faults"] = faults_block
+        metrics_fields["faults"] = faults_block
+    elif sim.retransmits:
+        metrics_fields["faults"] = {"retransmits": sim.retransmits}
     if ctrl is not None:
         extras["retunes"] = [(rt.from_t, rt.h)
                              for rt in ctrl.schedule.retunes]
@@ -496,6 +516,9 @@ def _run_launch(spec: ExperimentSpec, backend: ComponentSpec,
     from repro.optim import adamw, cosine_lr
 
     tr = tracer if tracer is not None else Tracer()
+    _require(spec.faults is None,
+             "fault injection is event-driven (netsim backends only); "
+             "launch runs real processes")
     _require(spec.profile_dir is None,
              "profile_dir wraps the dense scanned program; profile the "
              "launch path with jax.profiler around train_consensus_lm "

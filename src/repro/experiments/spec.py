@@ -108,6 +108,9 @@ class ExperimentSpec:
       controller: optional adaptive-controller component ("adaptive" kind:
                  AdaptiveController knobs for netsim, "dense_adaptive":
                  DenseController knobs for the dense wall-clock loop).
+      faults:    optional faultplans-registry component ("plan": explicit
+                 FaultPlan fields, "churn": rotating crash/restart waves).
+                 Netsim backends only; the builder receives the problem's n.
       T:         iterations per node (launch: training steps).
       eval_every: trace evaluation cadence (iterations per node).
       seed:      run RNG seed (problem seeds live in problem params).
@@ -131,6 +134,7 @@ class ExperimentSpec:
     stepsize: ComponentSpec = dataclasses.field(
         default_factory=lambda: ComponentSpec("sqrt", {"A": 1.0}))
     controller: ComponentSpec | None = None
+    faults: ComponentSpec | None = None
     T: int = 1000
     eval_every: int = 25
     seed: int = 0
@@ -147,6 +151,8 @@ class ExperimentSpec:
         if self.controller is not None:
             object.__setattr__(self, "controller",
                                _component(self.controller))
+        if self.faults is not None:
+            object.__setattr__(self, "faults", _component(self.faults))
         backends = tuple(_component(b) for b in self.backends)
         if not backends:
             raise ValueError("spec must declare at least one backend")
@@ -179,6 +185,8 @@ class ExperimentSpec:
             "stepsize": self.stepsize.to_dict(),
             "controller": (None if self.controller is None
                            else self.controller.to_dict()),
+            "faults": (None if self.faults is None
+                       else self.faults.to_dict()),
             "T": self.T,
             "eval_every": self.eval_every,
             "seed": self.seed,

@@ -207,10 +207,18 @@ class _RowBatch:
 
 def _record_stacks(sim: "NetSimulator", trace: SimTrace, now: float,
                    total_steps: int, n: int, xhat: np.ndarray, z: np.ndarray,
-                   comm_total: int) -> None:
-    """Shared trace-point writer; both engines feed it stacked state."""
+                   comm_total: int, mask: np.ndarray | None = None) -> None:
+    """Shared trace-point writer; both engines feed it stacked state.
+
+    `mask` (fault injection only) restricts the objective / disagreement
+    statistics to live member rows -- a crashed node's frozen iterate must
+    not be averaged into the trace point. `iters` stays normalized by the
+    full n so fault-free and faulted traces share an x-axis."""
+    if mask is not None:
+        xhat = xhat[mask]
+        z = z[mask]
     zbar = z.mean(axis=0, keepdims=True)
-    diff = (z - zbar).reshape(n, -1)
+    diff = (z - zbar).reshape(len(z), -1)
     trace.iters.append(total_steps // n)
     trace.sim_time.append(float(now))
     trace.fvals.append(sim._eval_batch.mean(xhat))
@@ -239,6 +247,8 @@ class ObjectEngine:
         self.drops = 0
         self.sent = 0
         self.rewires = 0
+        self.retransmits = 0
+        self._fr = None  # FaultRuntime when sim.faults is set
         # detail tracing resolves to one pre-computed local, so the hot
         # path carries exactly one `if tr is not None` branch per event
         # kind (the controller-hook pattern); a non-detail tracer is
@@ -254,7 +264,8 @@ class ObjectEngine:
                 y0 = None if sim.pushsum_y0 is None else sim.pushsum_y0[i]
                 node = PushSumDDANode(i, x0_stack[i], sim.grad_fn, sim.a_fn,
                                       sim.schedule, sim.projection, y0=y0,
-                                      w_floor=sim.pushsum_w_floor)
+                                      w_floor=sim.pushsum_w_floor,
+                                      inject=sim.pushsum_inject)
             else:
                 node = AsyncDDANode(i, x0_stack[i], sim.grad_fn, sim.a_fn,
                                     sim.schedule, sim.projection)
@@ -279,19 +290,33 @@ class ObjectEngine:
             ctrl.bind(net)  # resets the schedule's splice history, so it
             # must run BEFORE nodes cache their next_comm answers
         self._make_nodes(x0_stack)
+        flt = None
+        if sim.faults is not None:
+            from repro.faults.runtime import FaultRuntime
+            flt = FaultRuntime(sim.faults, n, tracer=sim.tracer)
+        self._fr = flt
+        self._T = T
         rng = np.random.default_rng(sim.seed)
-        q = EventQueue(backend="heap")
+        self.q = q = EventQueue(backend="heap")
         trace = SimTrace([], [], [], [], [])
         tr = self._tr
+        retry_on = (net.link.retries > 0
+                    or any(l.retries > 0 for l in net.link_overrides.values()))
 
         for i in range(n):
-            q.schedule(self._step_busy(i), "step", node=i)
+            if flt is None:
+                q.schedule(self._step_busy(i), "step", node=i)
+            else:
+                q.schedule(self._step_busy(i), "step", node=i, gen=0)
         if sim.scenario.rewire_every is not None:
             q.schedule(sim.scenario.rewire_every, "rewire")
+        if flt is not None:
+            flt.bind(self)
+            flt.schedule_initial(q)
 
         total_steps = 0
         next_eval = eval_every * n
-        active = n
+        self.active = n
 
         while not q.empty():
             ev = q.pop()
@@ -299,6 +324,9 @@ class ObjectEngine:
                 break
             if ev.kind == "step":
                 i = ev.data["node"]
+                if flt is not None and (not flt.alive[i]
+                                        or ev.data["gen"] != flt.step_gen[i]):
+                    continue  # stale generation: node crashed/left meanwhile
                 node = self.nodes[i]
                 step_dur = net.local_step_time(i)
                 self.compute_times.append(step_dur)
@@ -308,6 +336,12 @@ class ObjectEngine:
                 n_flights = len(self.msg_flights)
                 msgs = node.finish_step(net)
                 for dst, payload in msgs:
+                    if flt is not None and flt.blocked[i, dst]:
+                        # partitioned/flapped link: refused at send time,
+                        # BEFORE any loss/jitter draw, so the optimization
+                        # RNG stream is identical to the unblocked run's
+                        flt.blocked_sends += 1
+                        continue
                     self.sent += 1
                     flight = net.sample_flight(i, dst, rng)
                     if flight is None:
@@ -315,6 +349,12 @@ class ObjectEngine:
                         if tr is not None:
                             tr.add_instant("drop", ev.time, track="net",
                                            src=i, dst=dst)
+                        if retry_on:
+                            link = net.link_for(i, dst)
+                            if link.retries > 0:
+                                q.schedule_in(link.retry_timeout, "retry",
+                                              src=i, dst=dst,
+                                              payload=payload, attempt=1)
                         continue
                     self.msg_flights.append(flight)
                     if tr is not None:
@@ -327,9 +367,13 @@ class ObjectEngine:
                                   payload=payload)
                 total_steps += 1
                 if node.t < T:
-                    q.schedule_in(self._step_busy(i), "step", node=i)
+                    if flt is None:
+                        q.schedule_in(self._step_busy(i), "step", node=i)
+                    else:
+                        q.schedule_in(self._step_busy(i), "step", node=i,
+                                      gen=int(flt.step_gen[i]))
                 else:
-                    active -= 1
+                    self.active -= 1
                 if total_steps >= next_eval:
                     self._record(trace, q.now, total_steps)
                     next_eval += eval_every * n
@@ -339,16 +383,55 @@ class ObjectEngine:
                         np.asarray(self.msg_flights[n_flights:]))
                     if ctrl.retune_due(q.now):
                         # frontier over STILL-ACTIVE nodes: finished ones
-                        # no longer constrain the future pattern
-                        fr = max((nd.t for nd in self.nodes if nd.t < T),
-                                 default=None)
-                        cut = (ctrl.maybe_retune(q.now, fr + 1)
-                               if fr is not None else None)
+                        # no longer constrain the future pattern (nor do
+                        # crashed/departed ones, whose t is frozen)
+                        front = max(
+                            (nd.t for j, nd in enumerate(self.nodes)
+                             if nd.t < T and (flt is None or
+                                              (flt.alive[j]
+                                               and flt.member[j]))),
+                            default=None)
+                        cut = (ctrl.maybe_retune(q.now, front + 1)
+                               if front is not None else None)
                         if cut is not None:
                             self._refresh_next_comm(cut)
             elif ev.kind == "msg":
+                if flt is not None and not (flt.alive[ev.data["src"]]
+                                            and flt.alive[ev.data["dst"]]):
+                    continue  # landed during downtime: silently dropped
                 self.nodes[ev.data["dst"]].receive(ev.data["src"],
                                                    ev.data["payload"])
+            elif ev.kind == "retry":
+                src, dst = ev.data["src"], ev.data["dst"]
+                if flt is not None and (not flt.alive[src]
+                                        or flt.blocked[src, dst]):
+                    continue  # no RNG draw: state-identical on both engines
+                self.sent += 1
+                self.retransmits += 1
+                flight = net.sample_flight(src, dst, rng)
+                if flight is None:
+                    self.drops += 1
+                    attempt = ev.data["attempt"]
+                    link = net.link_for(src, dst)
+                    if attempt < link.retries:
+                        q.schedule_in(
+                            link.retry_timeout
+                            * link.retry_backoff ** attempt,
+                            "retry", src=src, dst=dst,
+                            payload=ev.data["payload"], attempt=attempt + 1)
+                else:
+                    self.msg_flights.append(flight)
+                    if tr is not None:
+                        tr.add_span("flight", ev.time, flight, track="net",
+                                    src=src, dst=dst, retry=True)
+                    if ctrl is not None:
+                        ctrl.on_messages(np.array([flight]))
+                    # the sender is NOT busy-charged for a retransmit, so
+                    # the full flight (serialize + propagate) is in the air
+                    q.schedule_in(flight, "msg", src=src, dst=dst,
+                                  payload=ev.data["payload"])
+            elif ev.kind == "fault":
+                flt.handle(q, ev.data)
             elif ev.kind == "rewire":
                 net.rewire()
                 self.rewires += 1
@@ -356,7 +439,7 @@ class ObjectEngine:
                     tr.add_instant("rewire", ev.time, track="net")
                 if ctrl is not None:
                     ctrl.on_rewire(net.graph)
-                if active > 0:
+                if self.active > 0:
                     q.schedule_in(sim.scenario.rewire_every, "rewire")
 
         if not trace.iters or trace.iters[-1] * n < total_steps:
@@ -381,11 +464,75 @@ class ObjectEngine:
         if self._tr is not None:
             self._tr.add_instant("eval", now, track="net",
                                  steps=int(total_steps))
+        mask = self._fr.record_mask() if self._fr is not None else None
         _record_stacks(self.sim, trace, now, total_steps, n, xhat, z,
-                       comm_total)
+                       comm_total, mask=mask)
 
     def materialize_nodes(self) -> list:
         return self.nodes
+
+    # -- fault-injection adapter (driven by repro.faults.FaultRuntime) -------
+    # Both engines expose this same surface; the runtime keeps all fault
+    # bookkeeping in shared code so the engines stay bit-identical under
+    # every plan. `self.active` (live unfinished nodes) is the shared
+    # termination counter the runtime reads to stop rescheduling its
+    # recurring events.
+
+    def fault_state(self) -> dict:
+        """Stacked copies of the mutable per-node state (the checkpoint /
+        warm-start snapshot)."""
+        return {"x": np.stack([nd.x for nd in self.nodes]),
+                "xhat": np.stack([nd.xhat for nd in self.nodes]),
+                "z": np.stack([nd.z for nd in self.nodes]),
+                "t": np.array([nd.t for nd in self.nodes], dtype=np.int64),
+                "comm_iters": np.array([nd.comm_iters for nd in self.nodes],
+                                       dtype=np.int64)}
+
+    def fault_apply_node(self, j: int, row: dict) -> None:
+        nd = self.nodes[j]
+        nd.x = np.array(row["x"], dtype=np.float64)
+        nd.xhat = np.array(row["xhat"], dtype=np.float64)
+        nd.z = np.array(row["z"], dtype=np.float64)
+        nd.t = int(row["t"])
+        nd.comm_iters = int(row["comm_iters"])
+        nd.next_comm = int(row["next_comm"])
+
+    def fault_clear_inbox(self, j: int) -> None:
+        """Forget j's gossip everywhere: receivers fold the missing weight
+        back into their self-loop (degraded_matrix semantics) and j itself
+        restarts with an empty inbox."""
+        self.nodes[j].inbox.clear()
+        for nd in self.nodes:
+            nd.inbox.pop(j, None)
+
+    def fault_deactivate(self, j: int) -> None:
+        if self.nodes[j].t < self._T:
+            self.active -= 1
+
+    def fault_activate(self, j: int) -> None:
+        if self.nodes[j].t < self._T:
+            self.active += 1
+            self.q.schedule_in(self._step_busy(j), "step", node=j,
+                               gen=int(self._fr.step_gen[j]))
+
+    def fault_next_comm(self, t: int) -> int:
+        return int(self.sim.schedule.next_comm_step(int(t)))
+
+    def fault_splice_graph(self, g) -> None:
+        from repro.core.graphs import GraphSequence
+        self.net.seq = GraphSequence((g,))
+        self.net.epoch = 0
+        self.net._out_cache.clear()
+
+    def fault_notify_membership(self, sub_graph, members) -> None:
+        ctrl = self.sim.controller
+        if ctrl is not None:
+            ctrl.on_membership(sub_graph, members)
+
+    def fault_notify_heal(self, now: float) -> None:
+        ctrl = self.sim.controller
+        if ctrl is not None:
+            ctrl.on_partition_heal(now)
 
 
 # ---------------------------------------------------------------------------
@@ -461,6 +608,9 @@ class VectorizedEngine:
         self.drops = 0
         self.sent = 0
         self.rewires = 0
+        self.retransmits = 0
+        self._fr = None  # FaultRuntime when sim.faults is set
+        self._retry_on = False
         self._flight_chunks: list[np.ndarray] = []
         self._compute_chunks: list[np.ndarray] = []
         self._a_cache: dict[float, float] = {}
@@ -558,6 +708,19 @@ class VectorizedEngine:
     def _ship(self, srcs, dsts, payload: dict[str, Any]) -> None:
         """Sample flights for a flat message batch and schedule arrival
         groups (one queue entry per distinct arrival time)."""
+        fr = self._fr
+        if fr is not None:
+            # partitioned/flapped links refuse at send time BEFORE any
+            # loss/jitter draw (matching the object engine's per-message
+            # skip), keeping the optimization RNG stream untouched
+            ok = ~fr.blocked[srcs, dsts]
+            if not ok.all():
+                fr.blocked_sends += int((~ok).sum())
+                if not ok.any():
+                    return
+                srcs, dsts = srcs[ok], dsts[ok]
+                payload = {key: (val if key == "buf" else val[ok])
+                           for key, val in payload.items()}
         m = len(srcs)
         self.sent += m
         keep, flights, extras = self._sample_flights(srcs, dsts)
@@ -566,6 +729,20 @@ class VectorizedEngine:
         if self._tr is not None and n_drop:
             self._tr.add_instant("drop", self.q.now, track="net",
                                  count=n_drop)
+        if n_drop and self._retry_on:
+            # queue a retry per dropped message, in message (index) order --
+            # the same order the object engine's per-message loop uses
+            for j in np.nonzero(~keep)[0]:
+                src, dst = int(srcs[j]), int(dsts[j])
+                link = self.net.link_for(src, dst)
+                if link.retries <= 0:
+                    continue
+                pl = {key: val[j:j + 1].copy()
+                      for key, val in payload.items() if key != "buf"}
+                pl["buf"] = payload["buf"][int(payload["rows"][j])][None].copy()
+                pl["rows"] = np.zeros(1, dtype=np.int64)
+                self.q.schedule_in(link.retry_timeout, "retry", src=src,
+                                   dst=dst, payload=pl, attempt=1)
         if not keep.any():
             return
         ks = np.nonzero(keep)[0]
@@ -636,10 +813,19 @@ class VectorizedEngine:
         return self.z
 
     def _schedule_steps(self, nodes: np.ndarray, fire: np.ndarray) -> None:
-        """One 'steps' entry per distinct fire time (node order within)."""
+        """One 'steps' entry per distinct fire time (node order within).
+        Under fault injection every entry snapshots each node's step
+        generation so a crash/leave between scheduling and firing renders
+        the entry stale (the object engine's per-event gen check)."""
         times, inv = np.unique(fire, return_inverse=True)
+        fr = self._fr
         for u, tm in enumerate(times):
-            self.q.schedule(float(tm), "steps", nodes=nodes[inv == u])
+            sel = nodes[inv == u]
+            if fr is None:
+                self.q.schedule(float(tm), "steps", nodes=sel)
+            else:
+                self.q.schedule(float(tm), "steps", nodes=sel,
+                                gens=fr.step_gen[sel].copy())
 
     # -- main loop ------------------------------------------------------------
 
@@ -656,6 +842,16 @@ class VectorizedEngine:
         self.rng = np.random.default_rng(sim.seed)
         self.q = q = EventQueue(backend="calendar")
         trace = SimTrace([], [], [], [], [])
+        self._T = T
+        net = self.net
+        self._retry_on = (net.link.retries > 0
+                          or any(l.retries > 0
+                                 for l in net.link_overrides.values()))
+        flt = None
+        if sim.faults is not None:
+            from repro.faults.runtime import FaultRuntime
+            flt = FaultRuntime(sim.faults, n, tracer=sim.tracer)
+        self._fr = flt
 
         nodes0 = np.arange(n, dtype=np.int64)
         busy0 = self.local_step + np.where(
@@ -663,6 +859,9 @@ class VectorizedEngine:
         self._schedule_steps(nodes0, busy0)
         if sim.scenario.rewire_every is not None:
             q.schedule(sim.scenario.rewire_every, "rewire")
+        if flt is not None:
+            flt.bind(self)
+            flt.schedule_initial(q)
 
         self.total_steps = 0
         self.next_eval = eval_every * n
@@ -674,13 +873,32 @@ class VectorizedEngine:
                 break
             if ev.kind == "steps":
                 nodes = ev.data["nodes"]
-                # coalesce same-time step entries (consecutive by seq)
-                while (not q.empty() and q.peek().kind == "steps"
-                       and q.peek().time == ev.time):
-                    nodes = np.concatenate([nodes, q.pop().data["nodes"]])
+                if flt is None:
+                    # coalesce same-time step entries (consecutive by seq)
+                    while (not q.empty() and q.peek().kind == "steps"
+                           and q.peek().time == ev.time):
+                        nodes = np.concatenate(
+                            [nodes, q.pop().data["nodes"]])
+                else:
+                    # safe to coalesce under faults too: a same-time
+                    # "fault" event (prio 1) pops BEFORE any "steps"
+                    # (prio 3), so no fault can interleave mid-batch
+                    gens = ev.data["gens"]
+                    while (not q.empty() and q.peek().kind == "steps"
+                           and q.peek().time == ev.time):
+                        nxt = q.pop().data
+                        nodes = np.concatenate([nodes, nxt["nodes"]])
+                        gens = np.concatenate([gens, nxt["gens"]])
+                    live = flt.alive[nodes] & (gens == flt.step_gen[nodes])
+                    if not live.all():
+                        nodes = nodes[live]
+                        if len(nodes) == 0:
+                            continue  # all stale: object engine skips too
                 self._on_steps(nodes, T, trace, eval_every * n)
                 if ctrl is not None and ctrl.retune_due(q.now):
                     alive = self.t < T  # frontier over still-active nodes
+                    if flt is not None:
+                        alive &= flt.alive & flt.member
                     cut = (ctrl.maybe_retune(
                         q.now, int(self.t[alive].max()) + 1)
                         if alive.any() else None)
@@ -691,7 +909,48 @@ class VectorizedEngine:
                                 sim.schedule.next_comm_step_batch(
                                     self.t[stale])
             elif ev.kind == "msgs":
-                self._on_msgs(ev.data)
+                data = ev.data
+                if flt is not None:
+                    keep = flt.alive[data["srcs"]] & flt.alive[data["dsts"]]
+                    if not keep.all():
+                        if not keep.any():
+                            continue  # whole batch landed during downtime
+                        data = {key: (val if key == "buf" else val[keep])
+                                for key, val in data.items()}
+                self._on_msgs(data)
+            elif ev.kind == "retry":
+                src, dst = ev.data["src"], ev.data["dst"]
+                if flt is not None and (not flt.alive[src]
+                                        or flt.blocked[src, dst]):
+                    continue  # no RNG draw: state-identical on both engines
+                self.sent += 1
+                self.retransmits += 1
+                flight = net.sample_flight(src, dst, self.rng)
+                if flight is None:
+                    self.drops += 1
+                    attempt = ev.data["attempt"]
+                    link = net.link_for(src, dst)
+                    if attempt < link.retries:
+                        q.schedule_in(
+                            link.retry_timeout
+                            * link.retry_backoff ** attempt,
+                            "retry", src=src, dst=dst,
+                            payload=ev.data["payload"], attempt=attempt + 1)
+                else:
+                    self._flight_chunks.append(np.array([flight]))
+                    if self._tr is not None:
+                        self._tr.add_span("flight", ev.time, flight,
+                                          track="net", src=src, dst=dst,
+                                          retry=True)
+                    if ctrl is not None:
+                        ctrl.on_messages(np.array([flight]))
+                    # full flight in the air: no busy charge on retransmit
+                    q.schedule_in(flight, "msgs",
+                                  srcs=np.array([src], dtype=np.int64),
+                                  dsts=np.array([dst], dtype=np.int64),
+                                  **ev.data["payload"])
+            elif ev.kind == "fault":
+                flt.handle(q, ev.data)
             elif ev.kind == "rewire":
                 self.net.rewire()
                 self._rebuild_topology()
@@ -711,8 +970,10 @@ class VectorizedEngine:
         if self._tr is not None:
             self._tr.add_instant("eval", now, track="net",
                                  steps=int(total_steps))
+        mask = self._fr.record_mask() if self._fr is not None else None
         _record_stacks(self.sim, trace, now, total_steps, self.n, self.xhat,
-                       self._z_est_all(), int(self.comm_iters.sum()))
+                       self._z_est_all(), int(self.comm_iters.sum()),
+                       mask=mask)
 
     # -- step processing ------------------------------------------------------
 
@@ -757,7 +1018,12 @@ class VectorizedEngine:
                 t_new[comm])
             self.comm_iters[ci] += 1
         if self.algorithm == "pushsum":
-            self.y[i] = self.y[i] + grads
+            if sim.pushsum_inject == "scaled":
+                # w-scaled injection: a node holding little mass injects
+                # proportionally little gradient (see PushSumDDANode)
+                self.y[i] = self.y[i] + self._col(self.w[i]) * grads
+            else:
+                self.y[i] = self.y[i] + grads
             z_rows = self.y[i] / self._col(np.maximum(self.w[i],
                                                       self.w_floor))
         else:
@@ -937,6 +1203,66 @@ class VectorizedEngine:
         self.rho.y[rr] = S_y
         self.rho.w[rr] = S_w
 
+    # -- fault-injection adapter (driven by repro.faults.FaultRuntime) -------
+    # Mirrors ObjectEngine's surface; every method performs the exact same
+    # float ops on the SoA rows the object engine performs on its node
+    # objects, so fault handling preserves the bit-identity contract.
+
+    def fault_state(self) -> dict:
+        return {"x": self.x.copy(), "xhat": self.xhat.copy(),
+                "z": self.z.copy(), "t": self.t.copy(),
+                "comm_iters": self.comm_iters.copy()}
+
+    def fault_apply_node(self, j: int, row: dict) -> None:
+        self.x[j] = row["x"]
+        self.xhat[j] = row["xhat"]
+        self.z[j] = row["z"]
+        self.t[j] = int(row["t"])
+        self.comm_iters[j] = int(row["comm_iters"])
+        self.next_comm[j] = int(row["next_comm"])
+
+    def fault_clear_inbox(self, j: int) -> None:
+        # stamp == 0 reads as "never delivered": receivers fold j's weight
+        # into their self-loop and j restarts with an empty inbox (the
+        # pooled values go stale-unreachable until a fresh stamp lands)
+        self.stamp[j, :] = 0
+        self.stamp[:, j] = 0
+
+    def fault_deactivate(self, j: int) -> None:
+        if self.t[j] < self._T:
+            self.active -= 1
+
+    def fault_activate(self, j: int) -> None:
+        if self.t[j] < self._T:
+            self.active += 1
+            busy = self.local_step[j] + (
+                self.send_busy[j]
+                if self.t[j] + 1 == self.next_comm[j] else 0.0)
+            self.q.schedule_in(
+                float(busy), "steps",
+                nodes=np.array([j], dtype=np.int64),
+                gens=np.array([self._fr.step_gen[j]], dtype=np.int64))
+
+    def fault_next_comm(self, t: int) -> int:
+        return int(self.sim.schedule.next_comm_step(int(t)))
+
+    def fault_splice_graph(self, g) -> None:
+        from repro.core.graphs import GraphSequence
+        self.net.seq = GraphSequence((g,))
+        self.net.epoch = 0
+        self.net._out_cache.clear()
+        self._epoch_cache.clear()
+        self._mw_cache = None
+        self._rebuild_topology()
+
+    def fault_notify_membership(self, sub_graph, members) -> None:
+        if self._ctrl is not None:
+            self._ctrl.on_membership(sub_graph, members)
+
+    def fault_notify_heal(self, now: float) -> None:
+        if self._ctrl is not None:
+            self._ctrl.on_partition_heal(now)
+
     # -- interop with the object world ---------------------------------------
 
     def materialize_nodes(self) -> list:
@@ -949,7 +1275,8 @@ class VectorizedEngine:
             if self.algorithm == "pushsum":
                 node = PushSumDDANode(i, self.x[i], sim.grad_fn, sim.a_fn,
                                       sim.schedule, sim.projection,
-                                      w_floor=self.w_floor)
+                                      w_floor=self.w_floor,
+                                      inject=sim.pushsum_inject)
                 node.y = self.y[i].copy()
                 node.w = float(self.w[i])
                 for dst in np.nonzero(self.sigma.eid[i] >= 0)[0]:

@@ -63,9 +63,15 @@ __all__ = ["Event", "EventQueue"]
 
 
 #: kinds that jump the queue at equal (strictly future) timestamps: message
-#: arrivals. Every other kind -- and an arrival at exactly `now` -- gets
-#: priority 1, preserving plain seq order among themselves.
+#: arrivals. "fault" and "retry" events form their own classes below
+#: arrivals but above everything else, so a crash scheduled at time tau
+#: kills the node BEFORE its step completing at tau, identically on both
+#: engines (whose seq numbering differs for batched vs per-node inserts).
+#: Every other kind -- and an arrival at exactly `now` -- shares the lowest
+#: class, preserving plain seq order among themselves.
 _ARRIVAL_KINDS = frozenset({"msg", "msgs"})
+_KIND_PRIO = {"fault": 1, "retry": 2}
+_DEFAULT_PRIO = 3
 
 
 @dataclasses.dataclass(order=True, slots=True)
@@ -275,7 +281,8 @@ class EventQueue:
         if time < self.now:
             raise ValueError(
                 f"cannot schedule {kind!r} at {time} < now={self.now}")
-        prio = 0 if (kind in _ARRIVAL_KINDS and time > self.now) else 1
+        prio = (0 if (kind in _ARRIVAL_KINDS and time > self.now)
+                else _KIND_PRIO.get(kind, _DEFAULT_PRIO))
         ev = Event(float(time), prio, self._seq, kind, data)
         self._seq += 1
         self._q.push(ev)

@@ -37,16 +37,38 @@ class LinkModel:
                `math.inf` means serialization is free.
     jitter:    mean of an exponential extra delay (0 disables).
     loss:      i.i.d. packet drop probability in [0, 1).
+
+    Bounded retransmission (ack + timeout, the operational form of
+    "deadline gossip"): with `retries > 0`, a dropped message is re-sent up
+    to `retries` times, attempt k firing `retry_timeout * retry_backoff**
+    (k-1)` after the previous drop (exponential backoff). Retransmits do
+    NOT occupy the sender's NIC busy time -- the engines model them as
+    background re-sends whose full flight time is in the air -- and are
+    counted separately (`NetSimulator.retransmits`).
+
+    retries:       max retransmit attempts per message (0 disables).
+    retry_timeout: delay before the first retransmit (> 0 when retries > 0).
+    retry_backoff: multiplicative backoff per attempt (>= 1).
     """
 
     latency: float = 0.0
     bandwidth: float = math.inf
     jitter: float = 0.0
     loss: float = 0.0
+    retries: int = 0
+    retry_timeout: float = 0.0
+    retry_backoff: float = 2.0
 
     def __post_init__(self):
         if not 0.0 <= self.loss < 1.0:
             raise ValueError(f"loss must be in [0, 1), got {self.loss}")
+        if self.retries < 0:
+            raise ValueError(f"retries must be >= 0, got {self.retries}")
+        if self.retries > 0 and not self.retry_timeout > 0.0:
+            raise ValueError("retries > 0 needs retry_timeout > 0")
+        if self.retry_backoff < 1.0:
+            raise ValueError(
+                f"retry_backoff must be >= 1, got {self.retry_backoff}")
 
     def serialize(self, nbytes: float) -> float:
         """Sender NIC occupancy per message (the paper's per-message r when

@@ -163,11 +163,29 @@ class AsyncDDANode(_NodeBase):
 
 class PushSumDDANode(_NodeBase):
     def __init__(self, i, x0, grad_fn, a_fn, schedule=None, projection=None,
-                 y0: np.ndarray | None = None, w_floor: float = 0.5):
+                 y0: np.ndarray | None = None, w_floor: float = 0.5,
+                 inject: str = "plain"):
         super().__init__(i, x0, grad_fn, a_fn, schedule, projection)
         self.y = (np.zeros_like(self.x) if y0 is None
                   else np.array(y0, dtype=np.float64))
         self.w = 1.0
+        if inject not in ("plain", "scaled"):
+            raise ValueError(f"inject must be 'plain' or 'scaled', "
+                             f"got {inject!r}")
+        # Gradient injection mode. "plain" adds the raw gradient to y each
+        # step (the textbook subgradient-push update). "scaled" adds
+        # w * grad instead: a node holding little weight mass injects
+        # proportionally little value mass, so the ratio estimate sees the
+        # gradient at its TRUE magnitude (w*g / w = g) instead of the
+        # loss-amplified g / w. Where the plain+floor combination damps the
+        # whole estimate by min(1, w/w_floor) whenever w < w_floor, scaled
+        # injection leaves the mixed mass untouched and only attenuates the
+        # newly injected gradient (by w/w_floor through the clamped
+        # denominator) -- the bias applies to one step's gradient, not the
+        # accumulated state, so it SHRINKS as mixing pulls w back toward 1
+        # and vanishes above the floor. Opt-in ("plain" default) because
+        # it changes seeded trajectories.
+        self.inject = inject
         # Ratio guard: under sustained loss a standing fraction of weight
         # mass lives in the sigma-rho limbo, so held w_i dwells well below
         # 1 while freshly injected gradients sit in y at full magnitude --
@@ -223,7 +241,10 @@ class PushSumDDANode(_NodeBase):
             self.y, self.w = y_share, w_share
             self.next_comm = self.schedule.next_comm_step(t_new)
             self.comm_iters += 1
-        self.y = self.y + grad
+        if self.inject == "scaled":
+            self.y = self.y + self.w * grad
+        else:
+            self.y = self.y + grad
         self._advance(self.z_est)
         return msgs
 

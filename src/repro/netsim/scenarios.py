@@ -65,12 +65,14 @@ class Scenario:
 
 
 def _link_for_r(r: float, message_bytes: float, *, latency: float = 0.0,
-                jitter: float = 0.0, loss: float = 0.0) -> LinkModel:
+                jitter: float = 0.0, loss: float = 0.0, retries: int = 0,
+                retry_timeout: float = 0.0) -> LinkModel:
     """Bandwidth such that one message serializes in exactly r time units."""
     if r < 0:
         raise ValueError("r must be >= 0")
     bw = message_bytes / r if r > 0 else float("inf")
-    return LinkModel(latency=latency, bandwidth=bw, jitter=jitter, loss=loss)
+    return LinkModel(latency=latency, bandwidth=bw, jitter=jitter, loss=loss,
+                     retries=retries, retry_timeout=retry_timeout)
 
 
 def _graph(n: int, k: int, seed: int) -> CommGraph:
@@ -107,11 +109,13 @@ def straggler(n: int, r: float, slow_factor: float = 4.0, n_slow: int = 1,
 def lossy(n: int, r: float, loss: float = 0.2, k: int = 4, seed: int = 0,
           jitter: float = 0.0,
           message_bytes: float = DEFAULT_MESSAGE_BYTES,
+          retries: int = 0, retry_timeout: float = 0.0,
           graph: CommGraph | GraphSequence | None = None) -> Scenario:
     return Scenario(
         name=f"lossy{loss:g}",
         topology=graph if graph is not None else _graph(n, k, seed),
-        link=_link_for_r(r, message_bytes, jitter=jitter, loss=loss),
+        link=_link_for_r(r, message_bytes, jitter=jitter, loss=loss,
+                         retries=retries, retry_timeout=retry_timeout),
         node_specs=tuple(NodeSpec() for _ in range(n)),
         message_bytes=message_bytes)
 
@@ -121,6 +125,7 @@ def adversarial(n: int, r: float, loss: float = 0.2,
                 rewire_every: float | None = None,
                 k: int = 4, length: int = 4, seed: int = 0,
                 message_bytes: float = DEFAULT_MESSAGE_BYTES,
+                retries: int = 0, retry_timeout: float = 0.0,
                 graph: CommGraph | GraphSequence | None = None) -> Scenario:
     """Loss + stragglers + (optionally) a time-varying topology, together."""
     if not 0 <= n_slow <= n:
@@ -137,7 +142,8 @@ def adversarial(n: int, r: float, loss: float = 0.2,
     return Scenario(
         name=f"adversarial_l{loss:g}_s{slow_factor:g}x{n_slow}",
         topology=topology,
-        link=_link_for_r(r, message_bytes, loss=loss),
+        link=_link_for_r(r, message_bytes, loss=loss,
+                         retries=retries, retry_timeout=retry_timeout),
         node_specs=specs,
         message_bytes=message_bytes,
         rewire_every=rewire_every)

@@ -98,6 +98,17 @@ class NetSimulator:
         pattern as the controller hooks, so traced runs stay bit-identical
         to untraced ones. A non-detail (or absent) tracer never enters the
         event loops at all.
+      faults: optional `repro.faults.FaultPlan` -- deterministic, seeded
+        fault injection (crashes, restarts, joins, leaves, partitions,
+        flapping links) executed as first-class simulation events by BOTH
+        engines, which stay bit-identical under every plan. Requires
+        algorithm="dda". After `run()`, `fault_stats` holds the counters
+        (crashes/restarts/downtime_sim/partition_epochs/...).
+      pushsum_inject: "plain" (default, textbook y += grad) or "scaled"
+        (y += w * grad): under sustained loss the scaled form keeps the
+        injected gradient at its true magnitude through the ratio estimate
+        instead of amplifying it by 1/w (see PushSumDDANode). Push-sum
+        only; opt-in because it changes seeded trajectories.
     """
 
     def __init__(self, scenario: Scenario, grad_fn: GradFn,
@@ -111,11 +122,32 @@ class NetSimulator:
                  engine: str = "auto",
                  batch_grad_fn: Callable | None = None,
                  controller=None,
-                 tracer=None):
+                 tracer=None,
+                 faults=None,
+                 pushsum_inject: str = "plain"):
         if algorithm not in ("dda", "pushsum"):
             raise ValueError(f"unknown algorithm {algorithm!r}")
         if engine not in _ENGINES:
             raise ValueError(f"unknown engine {engine!r} (one of {_ENGINES})")
+        if pushsum_inject not in ("plain", "scaled"):
+            raise ValueError(f"pushsum_inject must be 'plain' or 'scaled', "
+                             f"got {pushsum_inject!r}")
+        if pushsum_inject == "scaled" and algorithm != "pushsum":
+            raise ValueError("pushsum_inject applies to push-sum only")
+        if faults is not None:
+            from repro.faults.plan import FaultPlan
+            if not isinstance(faults, FaultPlan):
+                raise TypeError(f"faults must be a repro.faults.FaultPlan, "
+                                f"got {type(faults).__name__}")
+            if algorithm != "dda":
+                raise ValueError(
+                    "fault injection requires algorithm='dda': push-sum's "
+                    "cumulative sigma/rho mass counters make crash/restore "
+                    "a different protocol (a restored node would replay "
+                    "already-sent mass); stale-gossip DDA tolerates a "
+                    "reset inbox by folding missing weight into the "
+                    "self-loop")
+            faults.validate_for(scenario.topology.n)
         if controller is not None:
             if schedule is not None and schedule is not controller.schedule:
                 raise ValueError(
@@ -141,6 +173,9 @@ class NetSimulator:
         self.seed = seed
         self.pushsum_y0 = pushsum_y0
         self.pushsum_w_floor = pushsum_w_floor
+        self.pushsum_inject = pushsum_inject
+        self.faults = faults
+        self.fault_stats: dict | None = None
         self.engine = engine
         self.net = scenario.build_network()
         self._engine_inst: ObjectEngine | VectorizedEngine | None = None
@@ -155,6 +190,7 @@ class NetSimulator:
         self.drops = 0
         self.sent = 0
         self.rewires = 0
+        self.retransmits = 0
 
     # -- lifecycle ----------------------------------------------------------
 
@@ -186,6 +222,9 @@ class NetSimulator:
         self.drops += eng.drops
         self.sent += eng.sent
         self.rewires += eng.rewires
+        self.retransmits += eng.retransmits
+        if eng._fr is not None:
+            self.fault_stats = eng._fr.stats()
         self._nodes_cache = None  # re-materialize lazily from the new state
         return trace
 

@@ -20,6 +20,11 @@ shape regardless of which engine produced it:
     (p50/p90/p99/max); the `unit` key says which clock the samples rode
     ("sim" for netsim, "host" for dense per-iteration walls and launch
     per-step walls).
+  * `faults` -- fault-injection record for netsim runs with a FaultPlan
+    attached (crashes/restarts/joins/leaves, summed sim-time downtime,
+    partition epochs, link flaps, checkpoints taken, sends refused at
+    partitioned links, and link-layer retransmits); `None` on fault-free
+    runs, `{"retransmits": k}` when only bounded retry was configured.
   * `phases` / `counters` -- the tracer's aggregates, verbatim.
 
 Serialization is strict-RFC via the same `json_sanitize` path as
@@ -97,6 +102,7 @@ class RunMetrics:
     r_hat: float | None = None
     r_hat_trajectory: tuple = ()
     step_time_quantiles: dict | None = None
+    faults: dict | None = None
     phases: dict = dataclasses.field(default_factory=dict)
     counters: dict = dataclasses.field(default_factory=dict)
 

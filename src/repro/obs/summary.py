@@ -79,6 +79,12 @@ def render_summary(result: dict) -> str:
     lines.append("counters:")
     lines += _rows([(k, _fmt_num(v)) for k, v in counter_rows])
 
+    # -- fault injection -----------------------------------------------------
+    faults = m.get("faults")
+    if faults:
+        lines.append("faults:")
+        lines += _rows([(k, _fmt_num(v)) for k, v in sorted(faults.items())])
+
     # -- step-time quantiles -------------------------------------------------
     q = m.get("step_time_quantiles")
     if q:

@@ -34,7 +34,15 @@ class RescalePlan:
 def plan_rescale(topology: str, old_n: int, new_n: int, m_rows: int,
                  *, failed: Sequence[int] = (), k: int = 4,
                  seed: int = 0) -> RescalePlan:
-    survivors = tuple(i for i in range(old_n) if i not in set(failed))
+    failed_set = set(failed)
+    bad = sorted(i for i in failed_set if not 0 <= i < old_n)
+    if bad:
+        raise ValueError(
+            f"failed ids {bad} out of range for old_n={old_n}")
+    survivors = tuple(i for i in range(old_n) if i not in failed_set)
+    if not survivors:
+        raise ValueError(
+            f"all {old_n} nodes failed: no survivors to rescale from")
     graph = build_graph(topology, new_n, k=k, seed=seed)
     return RescalePlan(old_n=old_n, new_n=new_n, graph=graph,
                        data_slices=partition_rows(m_rows, new_n),

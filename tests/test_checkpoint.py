@@ -55,6 +55,49 @@ def test_manager_empty_dir(tmp_path):
     assert mgr.restore_latest(_tree()) is None
 
 
+def test_injected_partial_write_never_trusted(tmp_path, monkeypatch):
+    """A writer that dies mid-save (after the data files, before COMMIT)
+    must leave the previous committed checkpoint as the restore source;
+    the torn directory is never trusted and a later save heals over it."""
+    import repro.checkpoint.manager as M
+
+    mgr = CheckpointManager(tmp_path, keep=3)
+    mgr.save(1, _tree(1), extra={"step": 1}, blocking=True)
+
+    real = M._write_atomic
+
+    def dying(path, writer):
+        if path.name == "COMMIT":
+            # simulate the crash window: content landed, marker did not --
+            # only the .part temp exists, never the committed file
+            writer(path.with_name(path.name + ".part"))
+            raise RuntimeError("simulated crash mid-save")
+        return real(path, writer)
+
+    monkeypatch.setattr(M, "_write_atomic", dying)
+    # save_tree directly (the manager's worker thread would swallow the
+    # injected exception into a warning; the on-disk effect is identical)
+    with pytest.raises(RuntimeError, match="simulated crash"):
+        save_tree(tmp_path / "step_2", _tree(2), extra={"step": 2})
+    monkeypatch.setattr(M, "_write_atomic", real)
+
+    # the torn save is invisible: latest committed is still step 1
+    assert mgr.latest_step() == 1
+    step, tree, extra = mgr.restore_latest(_tree())
+    assert step == 1 and extra["step"] == 1
+    for a, b in zip(jax.tree.leaves(_tree(1)), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    # restoring the torn directory directly refuses loudly
+    torn = [p for p in tmp_path.iterdir() if "2" in p.name]
+    for p in torn:
+        with pytest.raises(FileNotFoundError):
+            restore_tree(p, _tree())
+    # a healthy save heals over the wreckage
+    mgr.save(2, _tree(2), extra={"step": 2}, blocking=True)
+    assert mgr.latest_step() == 2
+
+
 def test_async_save_waits(tmp_path):
     mgr = CheckpointManager(tmp_path, keep=1)
     mgr.save(1, _tree(1))

@@ -4,6 +4,7 @@ and message compression with error feedback."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from _hyp import given, st
 
 from repro.core import (CompressionState, complete_graph, ef_compress,
@@ -67,6 +68,46 @@ def test_elastic_rescale_shrink_and_grow():
                                np.asarray(out["w"]).mean(0), rtol=1e-6)
     # data slices cover the whole dataset
     assert sum(s.stop - s.start for s in plan2.data_slices) == 120
+
+
+def test_straggler_arrival_mask_seeded_determinism():
+    """Two models with the same seed draw identical mask sequences (the
+    netsim/benchmarks reproducibility contract); a different seed diverges."""
+    a = StragglerModel(p_slow=0.3, m_slow=4.0, deadline=2.0, seed=11)
+    b = StragglerModel(p_slow=0.3, m_slow=4.0, deadline=2.0, seed=11)
+    c = StragglerModel(p_slow=0.3, m_slow=4.0, deadline=2.0, seed=12)
+    seq_a = [a.arrival_mask(64) for _ in range(5)]
+    seq_b = [b.arrival_mask(64) for _ in range(5)]
+    seq_c = [c.arrival_mask(64) for _ in range(5)]
+    for ma, mb in zip(seq_a, seq_b):
+        np.testing.assert_array_equal(ma, mb)
+    assert any(not np.array_equal(ma, mc)
+               for ma, mc in zip(seq_a, seq_c))
+    # consecutive draws from ONE model advance its stream (not frozen)
+    assert any(not np.array_equal(seq_a[0], m) for m in seq_a[1:])
+
+
+def test_plan_rescale_rejects_out_of_range_failed_ids():
+    with pytest.raises(ValueError, match=r"failed ids \[4\] out of range"):
+        plan_rescale("complete", 4, 3, m_rows=100, failed=[4])
+    with pytest.raises(ValueError, match="out of range"):
+        plan_rescale("complete", 4, 3, m_rows=100, failed=[-1])
+
+
+def test_plan_rescale_rejects_all_failed():
+    with pytest.raises(ValueError, match="no survivors"):
+        plan_rescale("complete", 3, 3, m_rows=100, failed=[0, 1, 2])
+
+
+def test_elastic_rescale_grow_from_single_survivor():
+    """Degenerate shrink-to-one then grow: every new row must equal the
+    lone survivor (its mean is itself)."""
+    state = {"w": jnp.arange(6.0).reshape(3, 2)}
+    plan = plan_rescale("complete", 3, 4, m_rows=40, failed=[0, 2])
+    out = rescale_state(state, plan)
+    assert out["w"].shape == (4, 2)
+    for i in range(4):
+        np.testing.assert_allclose(np.asarray(out["w"][i]), [2, 3])
 
 
 def test_error_feedback_accumulates_everything():

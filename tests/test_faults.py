@@ -1,0 +1,389 @@
+"""repro.faults: FaultPlan spec round-trips, engine bit-identity under
+every fault class, crash/restart/membership semantics, bounded link
+retransmission, and the experiments-layer wiring (spec -> runner ->
+RunMetrics.faults -> trace summary)."""
+
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.dda import TRACE_FIELDS
+from repro.core.graphs import random_regular_expander
+from repro.faults import (FaultEvent, FaultPlan, embed_subgraph, faultplans)
+from repro.netsim import LinkModel, NetSimulator, homogeneous, lossy
+from repro.netsim import quadratic_consensus as _problem
+
+N, D = 10, 3
+
+
+def _run_engines(scenario, plan, T=80, seed=5, eval_every=4, algorithm="dda",
+                 **kw):
+    _, grad_fn, eval_fn = _problem(scenario.n, D)
+    out = {}
+    for engine in ("object", "vectorized"):
+        sim = NetSimulator(scenario, grad_fn, eval_fn, algorithm=algorithm,
+                           seed=seed, engine=engine, faults=plan, **kw)
+        trace = sim.run(np.zeros((scenario.n, D)), T=T,
+                        eval_every=eval_every)
+        out[engine] = (sim, trace)
+    return out
+
+
+def _assert_engines_identical(runs):
+    (sim_o, tr_o), (sim_v, tr_v) = runs["object"], runs["vectorized"]
+    for field in TRACE_FIELDS:
+        assert getattr(tr_o, field) == getattr(tr_v, field), field
+    assert sim_o.fault_stats == sim_v.fault_stats
+    assert (sim_o.sent, sim_o.drops, sim_o.retransmits) == \
+        (sim_v.sent, sim_v.drops, sim_v.retransmits)
+
+
+# -- FaultPlan spec ----------------------------------------------------------
+
+
+def test_fault_plan_json_round_trip_exact():
+    plan = FaultPlan(
+        events=({"time": 0.5, "action": "crash", "node": 2},
+                {"time": 1.0, "action": "restart", "node": 2},
+                {"time": 1.5, "action": "partition", "group": [0, 1]},
+                {"time": 2.0, "action": "heal"}),
+        crash_mtbf=3.0, crash_mttr=0.5, max_crashes=4,
+        flap_links=((0, 1),), flap_mtbf=1.0, flap_mttr=0.25,
+        restore="warm", checkpoint_every=0.5, checkpoint_keep=2, seed=7)
+    d = plan.to_dict()
+    assert plan == FaultPlan.from_dict(d)
+    # strict-RFC JSON exact: dict -> text -> dict -> plan is the same plan
+    assert plan == FaultPlan.from_dict(json.loads(json.dumps(d)))
+
+
+def test_fault_event_validation():
+    with pytest.raises(ValueError, match="action"):
+        FaultEvent(time=1.0, action="explode", node=0)
+    with pytest.raises(ValueError, match="time"):
+        FaultEvent(time=-1.0, action="crash", node=0)
+    with pytest.raises(ValueError, match="node"):
+        FaultEvent(time=1.0, action="crash")  # node actions need a node
+    with pytest.raises(ValueError, match="group"):
+        FaultEvent(time=1.0, action="partition")
+
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError, match="restore"):
+        FaultPlan(restore="magic")
+    with pytest.raises(ValueError, match="flap"):
+        FaultPlan(flap_links=((0, 1),), flap_mtbf=1.0)  # needs mttr too
+    with pytest.raises(ValueError, match="checkpoint_every"):
+        FaultPlan(restore="checkpoint")
+    plan = FaultPlan(events=({"time": 1.0, "action": "crash", "node": 9},))
+    plan.validate_for(10)
+    with pytest.raises(ValueError, match="node"):
+        plan.validate_for(5)
+
+
+def test_churn_preset_builds_rotating_waves():
+    plan = faultplans.build("churn", n=10, frac=0.2, period=2.0,
+                            downtime=0.5, start=1.0, cycles=3)
+    plan.validate_for(10)
+    crashes = [e for e in plan.events if e.action == "crash"]
+    restarts = [e for e in plan.events if e.action == "restart"]
+    assert len(crashes) == len(restarts) == 6  # ceil(0.2*10)=2 per cycle
+    for c, r in zip(crashes, restarts):
+        assert r.node == c.node and r.time == c.time + 0.5
+    # waves rotate through distinct victims
+    assert len({e.node for e in crashes}) == 6
+    with pytest.raises(ValueError):
+        faultplans.build("churn", n=4, frac=1.0)  # would crash every node
+    with pytest.raises(ValueError):
+        faultplans.build("churn", n=10, downtime=3.0, period=2.0)
+
+
+def test_embed_subgraph_lifts_members_and_self_loops():
+    members = np.array([0, 2, 3, 5], dtype=np.int64)
+    sub = random_regular_expander(4, k=2, seed=0)
+    g = embed_subgraph(sub, 6, members)
+    assert g.n == 6
+    for perm in g.perms:
+        perm = np.asarray(perm)
+        # non-members only ever map to themselves
+        for j in (1, 4):
+            assert perm[j] == j
+        # member slots are the sub-graph's perms lifted through `members`
+        assert set(perm[members]) <= set(members.tolist())
+
+
+# -- engine bit-identity under every fault class -----------------------------
+
+_PLAN_GRID = {
+    "crash_only": FaultPlan(
+        events=({"time": 0.6, "action": "crash", "node": 3},), seed=1),
+    "crash_restart_warm": FaultPlan(
+        events=({"time": 0.5, "action": "crash", "node": 2},
+                {"time": 1.1, "action": "restart", "node": 2}),
+        restore="warm", seed=1),
+    "crash_restart_checkpoint": FaultPlan(
+        events=({"time": 0.7, "action": "crash", "node": 4},
+                {"time": 1.4, "action": "restart", "node": 4}),
+        restore="checkpoint", checkpoint_every=0.3, seed=1),
+    "leave_join": FaultPlan(
+        events=({"time": 0.5, "action": "leave", "node": 7},
+                {"time": 1.3, "action": "join", "node": 7},
+                {"time": 1.8, "action": "leave", "node": 0}), seed=2),
+    "partition_heal": FaultPlan(
+        events=({"time": 0.4, "action": "partition", "group": [0, 1, 2, 3]},
+                {"time": 1.2, "action": "heal"},
+                {"time": 1.6, "action": "partition", "group": [5, 6]},
+                {"time": 2.1, "action": "heal"}), seed=3),
+    "flapping_links": FaultPlan(
+        flap_links=((0, 1), (2, 5), (3, 4)), flap_mtbf=0.5, flap_mttr=0.2,
+        seed=4),
+    "mtbf_process": FaultPlan(
+        crash_mtbf=1.0, crash_mttr=0.3, max_crashes=5, seed=5),
+    "everything": FaultPlan(
+        events=({"time": 0.5, "action": "crash", "node": 1},
+                {"time": 0.9, "action": "restart", "node": 1},
+                {"time": 1.2, "action": "leave", "node": 8},
+                {"time": 1.5, "action": "partition", "group": [0, 2, 4]},
+                {"time": 2.0, "action": "heal"},
+                {"time": 2.3, "action": "join", "node": 8}),
+        crash_mtbf=2.5, crash_mttr=0.4, max_crashes=3,
+        flap_links=((5, 6),), flap_mtbf=0.8, flap_mttr=0.3, seed=6),
+}
+
+
+@pytest.mark.parametrize("name", sorted(_PLAN_GRID))
+def test_engines_bit_identical_under_fault_plan(name):
+    """The acceptance gate: BOTH netsim engines execute every fault class
+    as first-class events with identical RNG consumption, float op order,
+    and event interleaving -- bit-identical traces and fault counters."""
+    plan = _PLAN_GRID[name]
+    runs = _run_engines(lossy(N, 0.02, loss=0.15, seed=3), plan)
+    _assert_engines_identical(runs)
+    stats = runs["object"][0].fault_stats
+    assert stats is not None
+    # every plan in the grid actually exercises its fault class
+    if name == "flapping_links":
+        assert stats["link_flaps"] > 0
+    elif name == "mtbf_process":
+        assert 0 < stats["crashes"] <= 5
+    elif name == "partition_heal":
+        assert stats["partition_epochs"] == 2 and stats["blocked_sends"] > 0
+    elif name == "leave_join":
+        assert stats["leaves"] == 2 and stats["joins"] == 1
+    elif name.startswith("crash"):
+        assert stats["crashes"] == 1
+
+
+def test_checkpoint_restore_writes_and_restores(tmp_path):
+    plan = FaultPlan(
+        events=({"time": 0.8, "action": "crash", "node": 2},
+                {"time": 1.5, "action": "restart", "node": 2}),
+        restore="checkpoint", checkpoint_every=0.25,
+        checkpoint_dir=str(tmp_path), seed=1)
+    runs = _run_engines(homogeneous(N, 0.02, seed=1), plan)
+    _assert_engines_identical(runs)
+    stats = runs["object"][0].fault_stats
+    assert stats["checkpoints"] > 0 and stats["restarts"] == 1
+    # periodic in-sim checkpoints landed on disk, committed and rotated
+    from repro.checkpoint import CheckpointManager
+    mgr = CheckpointManager(tmp_path)
+    assert mgr.latest_step() is not None
+
+
+def test_crashed_node_stops_and_rejoins_consensus():
+    """During downtime the victim's iterate freezes and recording masks it
+    out; after a warm restart it resumes from the survivors' consensus
+    average and the run converges to the same basin as fault-free."""
+    n = 8
+    centers, grad_fn, eval_fn = _problem(n, D)
+    fstar = eval_fn(np.asarray(centers).mean(0))
+    plan = FaultPlan(
+        events=({"time": 1.0, "action": "crash", "node": 3},
+                {"time": 2.0, "action": "restart", "node": 3}), seed=1)
+
+    def run(p):
+        sim = NetSimulator(homogeneous(n, 0.02, seed=1), grad_fn, eval_fn,
+                           algorithm="dda", seed=5, engine="object",
+                           faults=p)
+        tr = sim.run(np.zeros((n, D)), T=400, eval_every=10)
+        return sim, tr
+
+    sim_f, tr_f = run(plan)
+    _, tr_0 = run(None)
+    assert sim_f.fault_stats["downtime_sim"] == pytest.approx(1.0)
+    # the restored node's iterate is back inside the consensus ball: its
+    # distance to the survivors' mean is comparable to the others'
+    x = np.stack([nd.z for nd in sim_f.nodes])
+    spread = np.linalg.norm(x - x.mean(0), axis=1)
+    assert spread[3] <= 5.0 * np.median(spread) + 1e-9
+    # and the faulted run still reaches the fault-free basin
+    assert tr_f.fvals[-1] < max(1.05 * tr_0.fvals[-1], 1.1 * fstar)
+
+
+def test_downtime_messages_drop_and_blocked_sends_count():
+    plan = FaultPlan(
+        events=({"time": 0.5, "action": "partition", "group": [0, 1, 2, 3,
+                                                               4]},),
+        seed=1)
+    runs = _run_engines(homogeneous(N, 0.05, seed=2), plan, T=60)
+    _assert_engines_identical(runs)
+    sim, _ = runs["object"]
+    # a permanent partition refuses every cross-cut send from then on
+    assert sim.fault_stats["blocked_sends"] > 0
+
+
+def test_fault_free_plan_is_invisible():
+    """An empty FaultPlan must not perturb the optimization RNG stream:
+    the trace equals the no-faults run bit for bit."""
+    scenario = lossy(N, 0.02, loss=0.2, seed=3)
+    _, grad_fn, eval_fn = _problem(N, D)
+
+    def run(faults):
+        sim = NetSimulator(scenario, grad_fn, eval_fn, seed=5,
+                           engine="vectorized", faults=faults)
+        return sim.run(np.zeros((N, D)), T=100, eval_every=5)
+
+    tr_none, tr_empty = run(None), run(FaultPlan())
+    for field in TRACE_FIELDS:
+        assert getattr(tr_none, field) == getattr(tr_empty, field), field
+
+
+def test_pushsum_with_faults_rejected():
+    _, grad_fn, eval_fn = _problem(N, D)
+    with pytest.raises(ValueError, match="push"):
+        NetSimulator(homogeneous(N, 0.02, seed=1), grad_fn, eval_fn,
+                     algorithm="pushsum", faults=FaultPlan())
+
+
+def test_adaptive_controller_survives_membership_and_heal():
+    """The controller retunes against the spliced sub-cluster after a
+    leave/join and pulls its next retune forward on partition heal; both
+    engines complete and keep retuning."""
+    from repro.adaptive import AdaptiveController
+    plan = FaultPlan(
+        events=({"time": 0.5, "action": "leave", "node": 7},
+                {"time": 1.0, "action": "partition", "group": [0, 1, 2]},
+                {"time": 1.6, "action": "heal"},
+                {"time": 2.0, "action": "join", "node": 7}), seed=4)
+    _, grad_fn, eval_fn = _problem(N, D)
+    for engine in ("object", "vectorized"):
+        ctrl = AdaptiveController(update_every=0.4, warmup_messages=4,
+                                  warmup_steps=4)
+        sim = NetSimulator(lossy(N, 0.02, loss=0.1, seed=3), grad_fn,
+                           eval_fn, seed=5, engine=engine, faults=plan,
+                           controller=ctrl)
+        tr = sim.run(np.zeros((N, D)), T=80, eval_every=4)
+        assert np.isfinite(tr.fvals).all()
+        assert sim.fault_stats["leaves"] == 1
+        assert sim.fault_stats["joins"] == 1
+        # retunes continued after the membership change at t=0.5
+        assert ctrl.r_hat_history and ctrl.r_hat_history[-1][0] > 0.5
+        # the controller now solves the 9-node sub-cluster... and is put
+        # back to 10 when node 7 rejoins
+        assert ctrl._n == 10
+
+
+# -- bounded retransmission --------------------------------------------------
+
+
+def test_link_model_retry_validation():
+    with pytest.raises(ValueError, match="retry_timeout"):
+        LinkModel(loss=0.1, retries=2)
+    with pytest.raises(ValueError, match="retries"):
+        LinkModel(retries=-1)
+    with pytest.raises(ValueError, match="retry_backoff"):
+        LinkModel(retries=1, retry_timeout=0.1, retry_backoff=0.5)
+
+
+def test_retries_recover_drops_bit_identically():
+    scenario = lossy(N, 0.02, loss=0.4, seed=3, retries=3,
+                     retry_timeout=0.05)
+    runs = _run_engines(scenario, None, T=100)
+    _assert_engines_identical(runs)
+    sim, _ = runs["object"]
+    assert sim.retransmits > 0
+    assert sim.drops > 0  # drops still counted per attempt
+    # retransmits also ride along with a fault plan
+    runs_f = _run_engines(scenario, _PLAN_GRID["crash_restart_warm"], T=100)
+    _assert_engines_identical(runs_f)
+    assert runs_f["object"][0].retransmits > 0
+
+
+def test_retries_improve_delivery_under_loss():
+    """With bounded retry the effective delivery rate rises: same loss,
+    same traffic pattern, strictly more arrivals."""
+    _, grad_fn, eval_fn = _problem(N, D)
+
+    def arrivals(retries):
+        sc = lossy(N, 0.02, loss=0.5, seed=3,
+                   retries=retries, retry_timeout=0.05 if retries else 0.0)
+        sim = NetSimulator(sc, grad_fn, eval_fn, seed=5, engine="object")
+        sim.run(np.zeros((N, D)), T=100, eval_every=10)
+        return len(sim.msg_flights)
+
+    assert arrivals(3) > arrivals(0)
+
+
+# -- experiments-layer wiring ------------------------------------------------
+
+
+def test_spec_with_faults_round_trips_and_runs():
+    from repro.experiments import ExperimentSpec, run
+    from repro.obs.metrics import RunMetrics
+
+    spec = ExperimentSpec(
+        name="faults_smoke",
+        problem={"kind": "quadratic_consensus", "params": {"n": 8, "d": 3}},
+        topology={"kind": "expander", "params": {"k": 4}},
+        schedule={"kind": "periodic", "params": {"h": 2}},
+        backends=[{"kind": "netsim", "params": {"scenario": "lossy",
+                                                "engine": "object",
+                                                "loss": 0.1, "retries": 2,
+                                                "retry_timeout": 0.05}}],
+        faults={"kind": "churn", "params": {"frac": 0.25, "period": 1.0,
+                                            "downtime": 0.3, "cycles": 2,
+                                            "seed": 3}},
+        T=80, eval_every=5, seed=3, r=0.02)
+    assert spec == ExperimentSpec.from_json(spec.to_json())
+    result = run(spec)
+    faults = result.metrics.faults
+    assert faults is not None
+    assert faults["crashes"] == 4 and faults["restarts"] == 4
+    assert "retransmits" in faults
+    # strict-RFC JSON round-trip of the metrics block, faults included
+    m2 = RunMetrics.from_dict(json.loads(json.dumps(
+        result.metrics.to_dict())))
+    assert m2.faults == faults
+    # the trace CLI summary renders the faults block
+    from repro.obs import render_summary
+    text = render_summary(json.loads(result.to_json()))
+    assert "faults:" in text and "crashes" in text
+
+
+def test_dense_backend_rejects_faults():
+    from repro.experiments import ExperimentSpec, run
+
+    spec = ExperimentSpec(
+        name="dense_faults",
+        problem={"kind": "quadratic_consensus", "params": {"n": 4, "d": 2}},
+        topology={"kind": "complete"},
+        schedule={"kind": "every"},
+        backends=[{"kind": "dense"}],
+        faults={"kind": "plan"},
+        T=10, seed=0)
+    with pytest.raises(ValueError, match="netsim"):
+        run(spec)
+
+
+def test_fault_spans_land_in_tracer():
+    from repro.obs import Tracer
+
+    _, grad_fn, eval_fn = _problem(N, D)
+    tracer = Tracer(detail=True)
+    plan = _PLAN_GRID["crash_restart_warm"]
+    sim = NetSimulator(homogeneous(N, 0.02, seed=1), grad_fn, eval_fn,
+                       seed=5, engine="object", faults=plan, tracer=tracer)
+    sim.run(np.zeros((N, D)), T=60, eval_every=5)
+    names = {ev.name for ev in tracer.events if ev.track == "faults"}
+    assert "fault_crash" in names and "fault_restart" in names
