@@ -1,0 +1,253 @@
+"""Serving benchmark: the checked-in manifests replayed through
+`repro.serve.ExperimentServer` as a mixed workload.
+
+What the server amortizes is XLA compilation and dispatch: a cold dense
+`repro.run()` pays trace+lower+compile per process, the serve layer pays
+it once per compile-cache signature and serves every later request from
+the warm `DDASimulator`. This bench measures exactly that, on the real
+manifest mix under `benchmarks/manifests/`:
+
+  * **Equivalence gates before any timing** (the PR 2/5 discipline): for
+    every dense-capable manifest, the cold-served AND warm-served result
+    must be bit-identical (exact JSON compare under
+    `comparable_result_dict`) to a solo `repro.run()`; a cross-request
+    packed lane of seed-variants must be bit-identical lane-for-lane to
+    solo runs. A fast-but-wrong server never posts a number.
+  * **Cold vs warm latency**: submit->result wall per manifest against a
+    fresh server (cold, pays compile) then repeated against the same
+    server (warm, cache hit) -> per-spec samples + p50/p90 and the
+    headline `speedup_p50`.
+  * **Sustained throughput**: every dense manifest x several seeds
+    submitted concurrently to a warm server with lane packing ->
+    specs/sec, cache hit rate, lane occupancy.
+
+Results land in BENCH_serve.json (schema in benchmarks/README.md); the
+CI serve-smoke job runs `--smoke` and uploads the JSON. Full mode exits
+nonzero unless warm p50 beats cold p50 by --min-speedup (default 3x).
+Non-dense manifests (netsim/launch) are excluded from the replay -- the
+compile cache is a dense-program cache -- and recorded under
+`config.skipped` with reasons, never silently dropped.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import platform
+import time
+
+import numpy as np
+
+import repro
+from repro.obs import sample_quantiles, write_json_artifact
+from repro.serve import ExperimentServer, comparable_result_dict
+
+MANIFEST_DIR = pathlib.Path(__file__).parent / "manifests"
+
+
+def load_workload(smoke: bool) -> tuple[list, dict[str, str]]:
+    """(dense specs to replay, {manifest name: reason skipped})."""
+    specs, skipped = [], {}
+    for path in sorted(MANIFEST_DIR.glob("*.json")):
+        spec = repro.ExperimentSpec.from_file(path)
+        kinds = [b.kind for b in spec.backends]
+        if "dense" not in kinds:
+            skipped[spec.name] = (f"declares {kinds}: the compile cache "
+                                  f"amortizes the dense scan program only")
+            continue
+        if smoke:
+            spec = spec.with_value("T", min(spec.T, 60))
+        specs.append(spec)
+    return specs, skipped
+
+
+def _identical(served, solo) -> bool:
+    # compare the JSON ROUND-TRIPPED artifacts -- what a client reads
+    rt = repro.RunResult.from_json(served.to_json())
+    return comparable_result_dict(rt) == comparable_result_dict(solo)
+
+
+def check_equivalence(specs, max_width: int) -> dict:
+    """Differential gates, all manifests, before any timing."""
+    solos = {s.name: repro.run(s, backend="dense") for s in specs}
+    per_spec = {}
+    with ExperimentServer(workers=1, max_width=max_width,
+                          max_wait_s=0.01) as srv:
+        for s in specs:
+            cold = srv.submit(s, backend="dense").result()
+            warm = srv.submit(s, backend="dense").result()
+            per_spec[s.name] = {
+                "cold_identical": _identical(cold, solos[s.name]),
+                "warm_identical": _identical(warm, solos[s.name]),
+                "warm_cache_hit":
+                    warm.metrics.counters.get("cache_hit") == 1.0,
+            }
+    # cross-request packed lane: seed-variants of the first manifest
+    variants = [specs[0].with_value("seed", 100 + i)
+                for i in range(max_width)]
+    lane_solos = [repro.run(v, backend="dense") for v in variants]
+    with ExperimentServer(workers=1, max_width=max_width,
+                          max_wait_s=10.0) as srv:
+        futs = [srv.submit(v, backend="dense") for v in variants]
+        packed = [f.result() for f in futs]
+    packed_ok = all(_identical(p, s) for p, s in zip(packed, lane_solos))
+    packed_width = packed[0].metrics.counters.get("lane_width")
+    ok = (packed_ok and packed_width == float(max_width)
+          and all(v["cold_identical"] and v["warm_identical"]
+                  and v["warm_cache_hit"] for v in per_spec.values()))
+    return {"ok": bool(ok), "per_spec": per_spec,
+            "packed_lane": {"identical": bool(packed_ok),
+                            "width": packed_width,
+                            "lane_spec": specs[0].name}}
+
+
+def bench_latency(specs, repeats: int) -> dict:
+    """Cold (fresh server, pays compile) vs warm submit->result walls."""
+    per_spec = []
+    cold_walls, warm_walls = [], []
+    # one fresh server for the cold round: every spec is a distinct
+    # signature, so each first submission is a true cold miss
+    with ExperimentServer(workers=1, max_wait_s=0.005) as srv:
+        for s in specs:
+            t0 = time.perf_counter()
+            res = srv.submit(s, backend="dense").result()
+            cold = time.perf_counter() - t0
+            assert res.metrics.counters.get("cache_miss") == 1.0
+            cold_walls.append(cold)
+            warms = []
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                res = srv.submit(s, backend="dense").result()
+                warms.append(time.perf_counter() - t0)
+                assert res.metrics.counters.get("cache_hit") == 1.0
+            warm_walls.extend(warms)
+            per_spec.append({
+                "name": s.name, "T": s.T,
+                "cold_s": round(cold, 4),
+                "warm_samples_s": [round(w, 6) for w in warms],
+                "warm_p50_s": float(np.percentile(warms, 50)),
+                "speedup_p50": round(cold / np.percentile(warms, 50), 2),
+            })
+        cache = srv.cache.stats()
+    return {
+        "per_spec": per_spec,
+        "cold_quantiles": sample_quantiles(cold_walls, "host"),
+        "warm_quantiles": sample_quantiles(warm_walls, "host"),
+        "speedup_p50": round(float(np.percentile(cold_walls, 50)
+                                   / np.percentile(warm_walls, 50)), 2),
+        "cache": cache,
+    }
+
+
+def bench_throughput(specs, seeds: int, workers: int,
+                     max_width: int) -> dict:
+    """Mixed replay: every dense manifest x `seeds` seed-variants,
+    submitted concurrently to a pre-warmed packing server."""
+    workload = [s.with_value("seed", 200 + i)
+                for i in range(seeds) for s in specs]
+    with ExperimentServer(workers=workers, max_width=max_width,
+                          max_wait_s=0.05) as srv:
+        for s in specs:  # pre-warm: throughput is the steady state
+            srv.submit(s, backend="dense").result()
+        t0 = time.perf_counter()
+        futs = [srv.submit(s, backend="dense") for s in workload]
+        for f in futs:
+            f.result()
+        wall = time.perf_counter() - t0
+        stats = srv.stats()
+    widths = [f.result().metrics.counters["lane_width"] for f in futs]
+    return {
+        "specs": len(workload), "distinct_manifests": len(specs),
+        "seeds_per_manifest": seeds, "workers": workers,
+        "max_width": max_width,
+        "wall_s": round(wall, 4),
+        "specs_per_sec": round(len(workload) / wall, 2),
+        "mean_lane_width": round(float(np.mean(widths)), 3),
+        "lanes": stats["packer"],
+        "cache": stats["cache"],
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--repeats", type=int, default=9,
+                    help="warm latency samples per manifest (3 in --smoke)")
+    ap.add_argument("--seeds", type=int, default=4,
+                    help="seed-variants per manifest in the throughput "
+                         "replay")
+    ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--max-width", type=int, default=4,
+                    help="lane packer max width")
+    ap.add_argument("--min-speedup", type=float, default=3.0,
+                    help="required warm-vs-cold p50 speedup (full mode)")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="short runs, fewer repeats, no speedup gate "
+                         "(equivalence still enforced): CI mode")
+    args = ap.parse_args(argv)
+
+    repeats = 3 if args.smoke else args.repeats
+    seeds = 2 if args.smoke else args.seeds
+
+    specs, skipped = load_workload(args.smoke)
+    print(f"[bench_serve] replaying {len(specs)} dense manifests: "
+          f"{[s.name for s in specs]}")
+    for name, why in skipped.items():
+        print(f"[bench_serve] skipping {name}: {why}")
+
+    equiv = check_equivalence(specs, max_width=min(args.max_width, 3))
+    print(f"[equivalence] warm-cache + packed-lane bit-identity on "
+          f"{len(specs)} manifests: {'OK' if equiv['ok'] else 'FAIL'}")
+    if not equiv["ok"]:
+        print(json.dumps(equiv, indent=2))
+        return 1
+
+    latency = bench_latency(specs, repeats)
+    for row in latency["per_spec"]:
+        print(f"[latency] {row['name']}: cold={row['cold_s']:.3f}s "
+              f"warm_p50={row['warm_p50_s']:.4f}s "
+              f"({row['speedup_p50']:.0f}x)")
+    print(f"[latency] overall cold_p50="
+          f"{latency['cold_quantiles']['p50']:.3f}s warm_p50="
+          f"{latency['warm_quantiles']['p50']:.4f}s -> "
+          f"{latency['speedup_p50']:.1f}x")
+
+    thr = bench_throughput(specs, seeds, args.workers, args.max_width)
+    print(f"[throughput] {thr['specs']} specs in {thr['wall_s']:.2f}s = "
+          f"{thr['specs_per_sec']:.1f} specs/s (lane occupancy "
+          f"{thr['lanes']['occupancy']:.2f}, cache hit rate "
+          f"{thr['cache']['hit_rate']:.2f})")
+
+    measured = latency["speedup_p50"]
+    gate = {"warm_speedup_p50_min": args.min_speedup,
+            "measured": measured,
+            "pass": bool(args.smoke or measured >= args.min_speedup)}
+    report = {
+        "benchmark": "serve",
+        "mode": "smoke" if args.smoke else "full",
+        "config": {"repeats": repeats, "seeds": seeds,
+                   "workers": args.workers, "max_width": args.max_width,
+                   "manifests": [s.name for s in specs],
+                   "skipped": skipped},
+        "host": {"platform": platform.platform(),
+                 "python": platform.python_version(),
+                 "numpy": np.__version__},
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "equivalence": equiv,
+        "latency": latency,
+        "throughput": thr,
+        "acceptance": gate,
+    }
+    write_json_artifact(args.out, report)
+    print(f"[bench_serve] wrote {args.out}")
+
+    if not args.smoke and not gate["pass"]:
+        print(f"[bench_serve] FAIL: warm/cold p50 {measured:.1f}x < "
+              f"{args.min_speedup:g}x")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,67 +1,153 @@
-"""Batched-decode serving example: prefill + token-by-token generation with
-the KV-cache serve_step on a (data=2, model=4) mesh of host devices.
+"""Serving example: LM dryrun + dense consensus traffic through the
+`repro.serve` client against a persistent experiment server.
 
-    python examples/serve_lm.py [--batch 8] [--gen 32] [--arch llama3-8b]
+Boots an in-process `ExperimentServer` (TCP on a free localhost port),
+connects the thin JSON-lines `Client`, and replays a small mixed
+workload that exercises each serving path:
+
+  1. the `launch_dryrun` LM manifest (llama3-8b smoke plan) -- routed
+     solo, since the compile cache amortizes dense scan programs only;
+     the server says why on the result's `solo_reason` metrics note;
+  2. a dense consensus manifest submitted cold then warm -- the second
+     request leases the already-compiled `DDASimulator` from the
+     compile cache and skips trace+lower+compile entirely;
+  3. a burst of seed-variants of that dense spec -- the lane packer
+     holds them briefly and flushes one vmapped `run_batch` lane, so
+     the burst costs a single dispatch.
+
+Every streamed protocol event (accepted, trace chunks, result) passes
+through `Client.run(on_event=...)`, printed here as a progress line.
+
+    python examples/serve_lm.py [--burst 4] [--skip-lm]
 """
 
-import os
-
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+from __future__ import annotations
 
 import argparse
+import pathlib
 import time
 
-import jax
-import jax.numpy as jnp
+import repro
+from repro.serve import Client, ExperimentServer, ServeError
 
-from repro.launch.mesh import make_mesh
-from repro.launch.steps import make_serve_step
-from repro.models import registry, transformer
-from repro.runtime import sharding as shrules
+MANIFESTS = (pathlib.Path(__file__).resolve().parents[1]
+             / "benchmarks" / "manifests")
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama3-8b", choices=registry.ARCH_IDS)
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    args = ap.parse_args()
+def _progress(tag: str):
+    def on_event(ev: dict) -> None:
+        kind = ev.get("event")
+        if kind == "accepted":
+            print(f"  [{tag}] accepted: {ev.get('name')}")
+        elif kind == "trace":
+            print(f"  [{tag}] trace rows {ev['lo']}..{ev['hi']} "
+                  f"of {ev['total']}")
+    return on_event
 
-    cfg = registry.get_config(args.arch, "smoke")
-    mesh = make_mesh((2, 4), ("data", "model"))
-    max_seq = args.prompt_len + args.gen
 
-    with shrules.use_rules(shrules.DEFAULT_RULES, mesh):
-        params, _ = transformer.init(jax.random.PRNGKey(0), cfg)
-        cache = transformer.init_cache(cfg, args.batch, max_seq)
-        serve = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
+def _report(tag: str, result: repro.RunResult, wall: float) -> None:
+    c = result.metrics.counters
+    hit = ("hit" if c.get("cache_hit")
+           else "miss" if c.get("cache_miss") else "n/a")
+    line = (f"  [{tag}] wall={wall:.3f}s cache={hit} "
+            f"lane_width={c.get('lane_width', 1):.0f} "
+            f"queue_wait={c.get('queue_wait_s', 0.0) * 1e3:.0f}ms")
+    reason = result.metrics.notes.get("solo_reason")
+    if reason:
+        line += f"\n  [{tag}] solo: {reason}"
+    print(line)
 
-        key = jax.random.PRNGKey(1)
-        prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0,
-                                    cfg.vocab_size)
-        # prefill token-by-token (simple; a production prefill would batch)
-        tok = prompt[:, :1]
-        for pos in range(args.prompt_len):
-            logits, cache = serve(params, cache,
-                                  prompt[:, pos:pos + 1], jnp.int32(pos))
-        # greedy generation
-        out = []
-        t0 = time.perf_counter()
-        tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None]
-        for i in range(args.gen):
-            logits, cache = serve(params, cache, tok,
-                                  jnp.int32(args.prompt_len + i))
-            tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None]
-            out.append(tok)
-        jax.block_until_ready(tok)
-        dt = time.perf_counter() - t0
-    toks = jnp.concatenate(out, axis=1)
-    print(f"[serve_lm] arch={cfg.name} generated {args.gen} tokens x "
-          f"batch {args.batch} in {dt:.2f}s "
-          f"({args.gen * args.batch / dt:.1f} tok/s on CPU)")
-    print("[serve_lm] sample token ids:", toks[0, :16].tolist())
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="mixed LM + dense workload through repro.serve")
+    ap.add_argument("--burst", type=int, default=4,
+                    help="seed-variants packed into one vmap lane")
+    ap.add_argument("--skip-lm", action="store_true",
+                    help="skip the launch_dryrun LM request")
+    args = ap.parse_args(argv)
+
+    dense = repro.ExperimentSpec.from_file(
+        MANIFESTS / "expander_periodic.json")
+    lm = repro.ExperimentSpec.from_file(MANIFESTS / "launch_dryrun.json")
+
+    with ExperimentServer(workers=2, max_width=max(args.burst, 2),
+                          max_wait_s=0.25) as srv:
+        host, port = srv.start()
+        print(f"[serve_lm] server on {host}:{port}")
+        with Client(host, port) as c:
+            assert c.ping()
+
+            if not args.skip_lm:
+                print(f"[serve_lm] 1. LM dryrun ({lm.name}): solo route")
+                t0 = time.perf_counter()
+                res = c.run(lm, on_event=_progress("lm"))
+                _report("lm", res, time.perf_counter() - t0)
+                print(f"  [lm] plan: arch={res.extras['arch']} "
+                      f"mesh={res.extras['mesh']} "
+                      f"comm_rounds={res.extras['comm_rounds']}")
+
+            print(f"[serve_lm] 2. dense cold vs warm ({dense.name})")
+            t0 = time.perf_counter()
+            cold = c.run(dense, backend="dense",
+                         on_event=_progress("cold"))
+            cold_wall = time.perf_counter() - t0
+            _report("cold", cold, cold_wall)
+            t0 = time.perf_counter()
+            warm = c.run(dense, backend="dense")
+            warm_wall = time.perf_counter() - t0
+            _report("warm", warm, warm_wall)
+            same = warm.trace.fvals[-1] == cold.trace.fvals[-1]
+            print(f"  [warm] final F={warm.trace.fvals[-1]:.6f} "
+                  f"(== cold: {same}), "
+                  f"speedup {cold_wall / warm_wall:.1f}x")
+
+            print(f"[serve_lm] 3. burst of {args.burst} seed-variants "
+                  f"-> one packed lane")
+            # separate connections so the requests are concurrent: one
+            # Client blocks per run, which would serialize the burst
+            clients = [Client(host, port) for _ in range(args.burst)]
+            try:
+                for i, cc in enumerate(clients):
+                    cc._send({"op": "run", "backend": "dense",
+                              "spec": dense.with_value("seed", 100 + i)
+                              .to_dict()})
+                t0 = time.perf_counter()
+                for i, cc in enumerate(clients):
+                    res = _drain(cc)
+                    _report(f"burst {i}", res, time.perf_counter() - t0)
+            finally:
+                for cc in clients:
+                    cc.close()
+
+            stats = c.stats()
+            print(f"[serve_lm] cache: {stats['cache']['entries']} entries, "
+                  f"{stats['cache']['hits']} hits / "
+                  f"{stats['cache']['misses']} misses; packer: "
+                  f"{stats['packer']['packed_requests']} packed into "
+                  f"{stats['packer']['lanes_flushed']} lanes "
+                  f"(occupancy {stats['packer']['occupancy']:.2f})")
+            c.shutdown()
+    print("[serve_lm] done")
+    return 0
+
+
+def _drain(c: Client) -> repro.RunResult:
+    """Finish one already-submitted run on a raw client connection."""
+    columns: dict[str, list] = {}
+    while True:
+        ev = c._recv()
+        kind = ev.get("event")
+        if kind == "trace":
+            for f, col in ev["columns"].items():
+                columns.setdefault(f, []).extend(col)
+        elif kind == "result":
+            d = ev["result"]
+            d["trace"] = columns
+            return repro.RunResult.from_dict(d)
+        elif kind == "error":
+            raise ServeError(ev.get("error", "?"), ev.get("type", "?"))
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

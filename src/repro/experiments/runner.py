@@ -26,6 +26,7 @@ Backends (the `backends` registry):
 
 from __future__ import annotations
 
+import dataclasses
 import math
 import time
 from typing import Any, Callable, Sequence
@@ -45,7 +46,8 @@ from repro.obs import RunMetrics, Tracer, profile_ctx, sample_quantiles
 #: bytes per scalar in a dense/launch gossip payload (float32)
 _DENSE_SCALAR_BYTES = 4
 
-__all__ = ["backends", "run", "run_all", "run_sweep"]
+__all__ = ["backends", "batch_compat_report", "run", "run_all",
+           "run_sweep"]
 
 backends = Registry("backend")
 
@@ -147,12 +149,12 @@ def _dense_message_counts(trace: SimTrace, n: int, k: int,
             "bytes_on_wire": float(msgs * d * _DENSE_SCALAR_BYTES)}
 
 
-@backends.register("dense")
-def _run_dense(spec: ExperimentSpec, backend: ComponentSpec,
-               tracer: Tracer | None = None) -> RunResult:
-    import jax.numpy as jnp
-
-    tr = tracer if tracer is not None else Tracer()
+def _dense_parts(spec: ExperimentSpec, backend: ComponentSpec
+                 ) -> dict[str, Any]:
+    """Validate a dense run and build everything BUT the simulator: the
+    problem, graph, schedule and stepsize closures plus the parsed backend
+    params. One definition shared by the serial backend, the vmapped sweep
+    executor and the serving layer, so their validation can never drift."""
     _require(spec.faults is None,
              "fault injection is event-driven (netsim backends only); the "
              "dense synchronous loop has no crash/recover semantics")
@@ -161,31 +163,84 @@ def _run_dense(spec: ExperimentSpec, backend: ComponentSpec,
     mix = params.pop("mix", "auto")
     loop = params.pop("loop", "scan")
     _require(not params, f"dense backend has unknown params {sorted(params)}")
+    problem = _build_problem(spec)
+    _require(isinstance(problem, C.Problem),
+             f"dense backend cannot run problem kind "
+             f"{spec.problem.kind!r}")
+    _require(problem.subgrad_stack is not None,
+             f"problem {problem.name!r} has no stacked jax subgradient")
+    _require(spec.stepsize.kind != "inv_sqrt",
+             'stepsize "inv_sqrt" is host-only; use "sqrt" on dense')
+    graph = _build_topology(spec, problem.n)
+    _require(isinstance(graph, CommGraph),
+             "dense backend needs a fixed CommGraph topology "
+             "(time-varying sequences are netsim-only)")
+    _require(spec.time_limit is None,
+             "time_limit is event-clock only (netsim backends)")
+    return dict(problem=problem, graph=graph,
+                schedule=_build_schedule(spec),
+                a_fn=_build_stepsize(spec),
+                compress_keep=compress_keep, mix=mix, loop=loop)
 
+
+def _dense_sim(spec: ExperimentSpec, parts: dict[str, Any]) -> DDASimulator:
+    """Fresh DDASimulator from `_dense_parts` output. Everything that
+    shapes the simulator's compiled programs (problem closures, graph,
+    stepsize, mix/compression realization) comes from fields the serving
+    layer's `cache_signature` pins, which is what makes instances reusable
+    across requests: per-request knobs (schedule, r) are rebound by the
+    caller before each run."""
+    import jax
+    problem = parts["problem"]
+    return DDASimulator(problem.subgrad_stack, jax.jit(problem.objective),
+                        parts["graph"], parts["schedule"],
+                        a_fn=parts["a_fn"], r=spec.r,
+                        compress_keep=parts["compress_keep"],
+                        mix=parts["mix"], projection=problem.projection)
+
+
+@backends.register("dense")
+def _run_dense(spec: ExperimentSpec, backend: ComponentSpec,
+               tracer: Tracer | None = None,
+               sim_cache=None) -> RunResult:
+    """Dense backend. `sim_cache` (optional, a `repro.serve.CompileCache`
+    or anything with its `lease(spec, backend, factory)` contract) makes
+    the simulator -- and with it the AOT-compiled scan programs in
+    `DDASimulator._compiled` -- persistent across calls: repeat traffic
+    with the same cache signature skips trace+compile entirely. The lease
+    holds a per-entry lock for the duration of the run, and per-request
+    knobs outside the signature (schedule, r) are rebound under it."""
+    import contextlib
+
+    import jax.numpy as jnp
+
+    tr = tracer if tracer is not None else Tracer()
     with tr.span("build"):
-        problem = _build_problem(spec)
-        _require(isinstance(problem, C.Problem),
-                 f"dense backend cannot run problem kind "
-                 f"{spec.problem.kind!r}")
-        _require(problem.subgrad_stack is not None,
-                 f"problem {problem.name!r} has no stacked jax subgradient")
-        _require(spec.stepsize.kind != "inv_sqrt",
-                 'stepsize "inv_sqrt" is host-only; use "sqrt" on dense')
-        graph = _build_topology(spec, problem.n)
-        _require(isinstance(graph, CommGraph),
-                 "dense backend needs a fixed CommGraph topology "
-                 "(time-varying sequences are netsim-only)")
-        _require(spec.time_limit is None,
-                 "time_limit is event-clock only (netsim backends)")
-        schedule = _build_schedule(spec)
-        a_fn = _build_stepsize(spec)
-
-        import jax
-        sim = DDASimulator(problem.subgrad_stack, jax.jit(problem.objective),
-                           graph, schedule, a_fn=a_fn, r=spec.r,
-                           compress_keep=compress_keep, mix=mix,
-                           projection=problem.projection)
+        parts = _dense_parts(spec, backend)
+        problem, graph = parts["problem"], parts["graph"]
+        schedule, loop = parts["schedule"], parts["loop"]
+        if sim_cache is None:
+            lease = contextlib.nullcontext((_dense_sim(spec, parts), False))
+        else:
+            lease = sim_cache.lease(spec, backend,
+                                    lambda: _dense_sim(spec, parts))
         x0 = jnp.zeros((problem.n, problem.d))
+    with lease as (sim, cache_hit):
+        if sim_cache is not None:
+            # a cached simulator may have been built for a different lane
+            # of the same signature: rebind the per-request knobs the
+            # signature deliberately leaves free
+            sim.schedule = schedule
+            sim.r = spec.r
+            tr.count("cache_hit" if cache_hit else "cache_miss")
+        return _run_dense_leased(spec, backend, tr, sim, problem, graph,
+                                 schedule, loop, x0)
+
+
+def _run_dense_leased(spec: ExperimentSpec, backend: ComponentSpec,
+                      tr: Tracer, sim: DDASimulator, problem, graph,
+                      schedule, loop: str, x0) -> RunResult:
+    import jax.numpy as jnp  # noqa: F401  (kept: jnp used below)
     extras: dict[str, Any] = {"mix_mode": sim.mix_mode}
 
     metrics_fields: dict[str, Any] = {}
@@ -262,20 +317,31 @@ def _dense_adaptive_run(sim: DDASimulator, ctrl, x0, T: int,
     """DDASimulator.run with the measure->predict->act loop on wall-clock.
 
     Mirrors the plain segment loop but splits each evaluation segment into
-    uniform-comm chunks, times every chunk on the host clock (blocking on
-    device completion), feeds `DenseController.observe`, and lets the
+    uniform-comm chunks, dispatches each chunk through the scanned segment
+    program's AOT compile cache (`DDASimulator._get_compiled`, shape-keyed;
+    the comm mask is data), times every chunk on the host clock (blocking
+    on device completion), feeds `DenseController.observe`, and lets the
     controller splice a re-solved h at each segment boundary -- the
     frontier is `done`, the number of iterations already executed, so the
-    splice only shapes masks not yet built. Chunk lengths vary with h, so
-    the jitted segment recompiles per new length; the controller's warmup
-    keeps those compile spikes out of the first retune (tests inject a fake
-    `timer` for determinism).
+    splice only shapes masks not yet built.
 
-    `timings` (optional dict) receives the observability record: the
-    discarded warm-up calls' wall (the loop's compile cost, always on the
-    REAL clock -- the injected `timer` only drives the controller's
-    measurements) accumulates into `timings["compile_s"]`, and each
-    iteration's measured wall appends to `timings["iter_walls"]`.
+    Compiling AOT *outside* the timed window is what keeps the controller's
+    measurements clean: timing a compile-bearing call would poison
+    t_plain/t_comm by orders of magnitude (with h0=1 the single t=1 plain
+    chunk is the ONLY plain sample until the first retune, and a
+    compile-inflated t_plain latches r_hat at 0 forever). The compiled
+    executables land in the same `sim._compiled` cache `run`/`run_batch`
+    use, so a warm simulator (e.g. held by the serving layer's compile
+    cache) pays no compile at all -- adaptive runs ride the same warm
+    executables as packable plain runs. (Earlier revisions instead warmed
+    the jit cache on a discarded duplicate call, paying one full chunk of
+    wasted compute per new chunk length.)
+
+    `timings` (optional dict) receives the observability record: the AOT
+    compile walls (always on the REAL clock -- the injected `timer` only
+    drives the controller's measurements) accumulate into
+    `timings["compile_s"]`, and each iteration's measured wall appends to
+    `timings["iter_walls"]`.
     """
     import jax
     import jax.numpy as jnp
@@ -294,7 +360,6 @@ def _dense_adaptive_run(sim: DDASimulator, ctrl, x0, T: int,
     root = jax.random.PRNGKey(seed)
 
     done = 0
-    warmed: set[int] = set()
     while done < T:
         seg_end = min(done + eval_every, T)
         while done < seg_end:
@@ -305,23 +370,14 @@ def _dense_adaptive_run(sim: DDASimulator, ctrl, x0, T: int,
                 chunk += 1
             mask = np.full(chunk, comm)
             keys = jax.random.split(jax.random.fold_in(root, done), chunk)
-            if chunk not in warmed:
-                # first use of this chunk LENGTH pays the jit trace+compile
-                # (shape-keyed; the comm mask is data). Timing that call
-                # would poison t_plain/t_comm by orders of magnitude --
-                # with h0=1 the single t=1 plain chunk is the ONLY plain
-                # sample, and a compile-inflated t_plain latches r_hat at 0
-                # forever. Warm the cache on a discarded duplicate call
-                # (pure function; costs one chunk of compute), then time.
-                warmed.add(chunk)
-                tw = time.perf_counter()
-                jax.block_until_ready(sim._segment(
-                    z, x, xhat, res, t, jnp.asarray(mask), keys))
-                if timings is not None:
-                    timings["compile_s"] += time.perf_counter() - tw
+            args = (z, x, xhat, res, t, jnp.asarray(mask), keys)
+            tw = time.perf_counter()
+            entry = sim._get_compiled(("segment",), sim._segment, args)
+            if timings is not None:
+                timings["compile_s"] += time.perf_counter() - tw
+            fn = sim._segment if entry is None else entry
             t0 = timer()
-            z, x, xhat, res, t = sim._segment(
-                z, x, xhat, res, t, jnp.asarray(mask), keys)
+            z, x, xhat, res, t = fn(*args)
             jax.block_until_ready(xhat)
             per_iter = max(timer() - t0, 0.0) / chunk
             if timings is not None:
@@ -690,10 +746,20 @@ def run_sweep(spec: ExperimentSpec, axis: str, values: Sequence[Any],
     if parallel in (None, "serial"):
         return [run(c, backend=backend) for c in cells]
     if parallel == "vmap":
-        out = _run_sweep_vmap(cells, backend)
+        out, reason = _run_sweep_vmap(cells, backend)
         if out is not None:
             return out
-        return [run(c, backend=backend) for c in cells]
+        # fall back to serial -- but LOUDLY: every result's metrics carry
+        # the reason the grid did not pack, so "my sweep got slow" is
+        # diagnosable from the artifacts instead of a silent degradation
+        results = [run(c, backend=backend) for c in cells]
+        for r in results:
+            if r.metrics is not None:
+                r.metrics = dataclasses.replace(
+                    r.metrics,
+                    notes={**r.metrics.notes, "vmap_fallback": reason})
+            r.extras["vmap_fallback"] = reason
+        return results
     if parallel == "process":
         return _run_sweep_process(cells, backend, processes)
     raise ValueError(f"parallel must be None/'serial'/'vmap'/'process', "
@@ -723,41 +789,115 @@ def _vmap_signature(spec: ExperimentSpec, backend: ComponentSpec) -> str:
     return _json.dumps([d, backend.to_dict()], sort_keys=True)
 
 
-def _run_sweep_vmap(cells: Sequence[ExperimentSpec],
-                    backend) -> list[RunResult] | None:
-    """Batched executor for shape-compatible dense cells; None = not
-    batchable (caller falls back to serial, which also surfaces any real
-    validation errors with the serial path's messages)."""
-    resolved = [_resolve_backend(c, backend) for c in cells]
-    if any(b.kind != "dense" for b in resolved):
-        return None
-    if any(c.controller is not None or c.time_limit is not None
-           or c.profile_dir is not None for c in cells):
-        return None  # profiling wants one run per capture: serial path
-    if len({_vmap_signature(c, b) for c, b in zip(cells, resolved)}) != 1:
-        return None
-    spec0 = cells[0]
-    params = dict(resolved[0].params)
-    compress_keep = params.pop("compress_keep", None)
-    mix = params.pop("mix", "auto")
-    if params.pop("loop", "scan") != "scan" or params:
-        return None
-    if spec0.stepsize.kind == "inv_sqrt":
-        return None
-    problem = _build_problem(spec0)
+def batch_compat_report(spec: ExperimentSpec,
+                        backend: ComponentSpec) -> str | None:
+    """Why this (spec, backend) cannot ride a vmapped `run_batch` lane --
+    None when it can. One definition shared by the sweep executor's
+    fallback diagnostics and the serving layer's lane packer, so "why
+    didn't this pack" always has the same answer. Deliberately
+    side-effect-light: builds at most the (cached) problem and topology."""
+    if backend.kind != "dense":
+        return (f"backend {backend.kind!r} is not dense (vmap lanes are the "
+                f"dense scanned program; netsim/launch runs are host loops)")
+    if spec.controller is not None:
+        return ("a controller run drives its own wall-clock chunk loop and "
+                "retunes its schedule online; lanes share one comm mask")
+    if spec.time_limit is not None:
+        return "time_limit is event-clock only (netsim backends)"
+    if spec.profile_dir is not None:
+        return "profiling wants one run per capture"
+    if spec.faults is not None:
+        return "fault injection is event-driven (netsim backends only)"
+    params = dict(backend.params)
+    params.pop("compress_keep", None)
+    params.pop("mix", None)
+    if params.pop("loop", "scan") != "scan":
+        return "loop='segment' is the host-loop baseline (one lane per run)"
+    if params:
+        return f"dense backend has unknown params {sorted(params)}"
+    if spec.stepsize.kind == "inv_sqrt":
+        return 'stepsize "inv_sqrt" is host-only; lanes need the jnp path'
+    problem = _build_problem(spec)
     if not isinstance(problem, C.Problem) or problem.subgrad_stack is None:
-        return None
-    graph = _build_topology(spec0, problem.n)
+        return (f"problem kind {spec.problem.kind!r} has no stacked jax "
+                f"subgradient")
+    graph = _build_topology(spec, problem.n)
     if not isinstance(graph, CommGraph):
-        return None
+        return ("topology is a time-varying sequence (netsim-only); lanes "
+                "need one fixed CommGraph")
+    return None
 
-    import jax
+
+def _vmap_pool_report(cells: Sequence[ExperimentSpec],
+                      resolved: Sequence[ComponentSpec]) -> str | None:
+    """Why this POOL of cells cannot batch into one vmapped dispatch --
+    None when it can: every cell individually batchable, plus pairwise
+    shape compatibility (identical outside the per-lane fields)."""
+    for c, b in zip(cells, resolved):
+        reason = batch_compat_report(c, b)
+        if reason is not None:
+            return f"cell {c.name!r}: {reason}"
+    sigs = {_vmap_signature(c, b) for c, b in zip(cells, resolved)}
+    if len(sigs) != 1:
+        return (f"cells differ outside the batchable lane fields "
+                f"{_VMAP_LANE_FIELDS} ({len(sigs)} distinct shape "
+                f"signatures; every lane must share one compiled program)")
+    return None
+
+
+def _dense_batch_results(cells: Sequence[ExperimentSpec],
+                         resolved: Sequence[ComponentSpec],
+                         sim: DDASimulator, problem, graph,
+                         schedules: Sequence[Any],
+                         traces: Sequence[SimTrace], wall: float,
+                         lane_counter: str = "vmap_lanes"
+                         ) -> list[RunResult]:
+    """Per-lane RunResults for one `run_batch` dispatch -- the assembly
+    shared by the vmapped sweep executor and the serving layer's lane
+    packer (identical bookkeeping: amortized wall split, closed-form
+    message counts, per-lane predictions)."""
+    B = len(cells)
+    lam2 = graph.lambda2()
+    lane_wall = wall / B
+    # one compile serves every lane: amortize it evenly so per-lane
+    # compile_s + execute_s == wall_s holds just like the serial path
+    lane_compile = min(sim.last_timings["compile_s"] / B, lane_wall)
+    results = []
+    for c, bk, sched, trc in zip(cells, resolved, schedules, traces):
+        eps_value, tta = _target_fields(trc, _eps_value(c, problem))
+        predictions = _dense_predictions(graph, c.r, sched, lam2)
+        metrics = RunMetrics(
+            compile_s=lane_compile,
+            execute_s=max(lane_wall - lane_compile, 0.0),
+            counters={lane_counter: float(B)},
+            **_dense_message_counts(trc, problem.n, graph.degree,
+                                    problem.d))
+        results.append(RunResult(
+            spec=c, backend=bk, trace=trc, wall_s=lane_wall,
+            eps_value=eps_value, time_to_target=tta,
+            predictions=predictions,
+            extras={"mix_mode": sim.mix_mode, lane_counter: B},
+            metrics=metrics))
+    return results
+
+
+def _run_sweep_vmap(cells: Sequence[ExperimentSpec], backend
+                    ) -> tuple[list[RunResult] | None, str | None]:
+    """Batched executor for shape-compatible dense cells. Returns
+    (results, None) when the pool batched, (None, reason) when it did not
+    (the caller falls back to serial -- which also surfaces any real
+    validation errors with the serial path's messages -- and attaches the
+    reason to the fallback results' metrics)."""
+    resolved = [_resolve_backend(c, backend) for c in cells]
+    reason = _vmap_pool_report(cells, resolved)
+    if reason is not None:
+        return None, reason
+    spec0 = cells[0]
+
     import jax.numpy as jnp
-    a_fn = _build_stepsize(spec0)
-    sim = DDASimulator(problem.subgrad_stack, jax.jit(problem.objective),
-                       graph, None, a_fn=a_fn, r=spec0.r,
-                       compress_keep=compress_keep, mix=mix,
-                       projection=problem.projection)
+    parts = _dense_parts(spec0, resolved[0])
+    problem, graph = parts["problem"], parts["graph"]
+    sim = _dense_sim(spec0, parts)
     schedules = [_build_schedule(c) for c in cells]
     masks = np.stack([s.comm_mask(0, spec0.T) for s in schedules])
     x0 = jnp.zeros((problem.n, problem.d))
@@ -766,29 +906,8 @@ def _run_sweep_vmap(cells: Sequence[ExperimentSpec],
                            seeds=[c.seed for c in cells],
                            rs=[c.r for c in cells])
     wall = time.perf_counter() - t0
-
-    lam2 = graph.lambda2()
-    lane_wall = wall / len(cells)
-    # one compile serves every lane: amortize it evenly so per-lane
-    # compile_s + execute_s == wall_s holds just like the serial path
-    lane_compile = min(sim.last_timings["compile_s"] / len(cells), lane_wall)
-    results = []
-    for c, bk, sched, trc in zip(cells, resolved, schedules, traces):
-        eps_value, tta = _target_fields(trc, _eps_value(c, problem))
-        predictions = _dense_predictions(graph, c.r, sched, lam2)
-        metrics = RunMetrics(
-            compile_s=lane_compile,
-            execute_s=max(lane_wall - lane_compile, 0.0),
-            counters={"vmap_lanes": float(len(cells))},
-            **_dense_message_counts(trc, problem.n, graph.degree,
-                                    problem.d))
-        results.append(RunResult(
-            spec=c, backend=bk, trace=trc, wall_s=lane_wall,
-            eps_value=eps_value, time_to_target=tta,
-            predictions=predictions,
-            extras={"mix_mode": sim.mix_mode, "vmap_lanes": len(cells)},
-            metrics=metrics))
-    return results
+    return _dense_batch_results(cells, resolved, sim, problem, graph,
+                                schedules, traces, wall), None
 
 
 def _process_cell(payload) -> RunResult:

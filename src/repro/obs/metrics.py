@@ -26,6 +26,8 @@ shape regardless of which engine produced it:
     partitioned links, and link-layer retransmits); `None` on fault-free
     runs, `{"retransmits": k}` when only bounded retry was configured.
   * `phases` / `counters` -- the tracer's aggregates, verbatim.
+  * `notes` -- free-form string diagnostics (vmap-fallback reasons, the
+    serving packer's solo reasons); empty on clean runs.
 
 Serialization is strict-RFC via the same `json_sanitize` path as
 `RunResult` (inf/nan -> null, numpy scalars -> Python), and
@@ -105,6 +107,11 @@ class RunMetrics:
     faults: dict | None = None
     phases: dict = dataclasses.field(default_factory=dict)
     counters: dict = dataclasses.field(default_factory=dict)
+    #: free-form string diagnostics (e.g. "vmap_fallback": why a sweep
+    #: degraded to serial, "solo_reason": why the serving packer ran a
+    #: spec unbatched). Absent keys mean "nothing to report"; old
+    #: serialized blocks load with the empty default.
+    notes: dict = dataclasses.field(default_factory=dict)
 
     def __post_init__(self):
         # normalize sequence fields so JSON round-trips compare equal

@@ -1,0 +1,85 @@
+"""`repro.serve` -- persistent multi-tenant experiment serving.
+
+The paper's object is amortizing a fixed cost (communication) against
+useful work (computation); this package is the serving analog -- amortize
+XLA compilation and device dispatch across many incoming `ExperimentSpec`
+requests:
+
+  * `ExperimentServer` -- long-lived worker-pool server with a stdlib
+    TCP JSON-lines front door (`python -m repro.serve serve`);
+  * `CompileCache` / `cache_signature` -- warm `DDASimulator`s keyed by
+    the dense scan program's shape signature, so repeat traffic skips
+    trace+lower+compile entirely;
+  * `LanePacker` / `lane_key` -- shape-compatible specs from different
+    requests batched into one `run_batch` vmap lane under a
+    max-wait/max-width admission policy;
+  * `Client` -- thin blocking client (`repro.serve.Client(host, port)`);
+  * `comparable_result_dict` -- the canonicalization the differential
+    serving gates compare under: served results must be BIT-IDENTICAL
+    to cold solo `repro.run()` outside wall-clock and serve bookkeeping.
+
+Quickstart (in-process):
+
+    from repro.serve import ExperimentServer
+
+    with ExperimentServer(workers=2) as srv:
+        fut = srv.submit(spec)          # Future[RunResult]
+        result = fut.result()
+        print(result.metrics.counters)  # cache_hit, queue_wait_s, ...
+
+Over TCP:
+
+    host, port = srv.start()
+    with Client(host, port) as c:
+        result = c.run(spec)
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+from repro.serve.cache import CompileCache, cache_signature
+from repro.serve.client import Client, ServeError
+from repro.serve.packer import Lane, LanePacker, lane_key
+from repro.serve.server import ExperimentServer, TRACE_CHUNK_ROWS
+
+__all__ = [
+    "Client",
+    "CompileCache",
+    "ExperimentServer",
+    "Lane",
+    "LanePacker",
+    "ServeError",
+    "TRACE_CHUNK_ROWS",
+    "cache_signature",
+    "comparable_result_dict",
+    "lane_key",
+]
+
+#: extras keys that record HOW a result was executed, not WHAT it is --
+#: batching and fallback bookkeeping legitimately differs between a solo
+#: run and the same run served from a warm cache or packed lane
+_EXECUTION_EXTRAS = ("vmap_lanes", "lane_width", "vmap_fallback",
+                     "solo_reason")
+
+
+def comparable_result_dict(result: Any) -> dict:
+    """Canonical dict for exact ("bit-identical") result comparison.
+
+    Strips the fields that measure the execution rather than define the
+    run: `wall_s`, the whole `metrics` block (wall splits, serve
+    counters), and the execution-bookkeeping extras. Everything else --
+    spec, backend, the full trace, eps/target fields, predictions,
+    remaining extras -- must match EXACTLY (`==` on the JSON dicts) for a
+    served result to count as equivalent to its solo baseline. Accepts a
+    `RunResult` or an already-serialized result dict.
+    """
+    d = result if isinstance(result, dict) else result.to_dict()
+    d = dict(d)
+    d.pop("wall_s", None)
+    d.pop("metrics", None)
+    extras = dict(d.get("extras") or {})
+    for k in _EXECUTION_EXTRAS:
+        extras.pop(k, None)
+    d["extras"] = extras
+    return d

@@ -1,0 +1,117 @@
+"""Thin TCP client for `ExperimentServer`'s JSON-lines protocol.
+
+    from repro.serve import Client
+
+    with Client(host, port) as c:
+        result = c.run(spec)            # -> RunResult (trace reassembled
+        print(c.stats()["cache"])       #    exactly from streamed chunks)
+
+The client is deliberately dumb: one socket, blocking calls, no retries.
+`run()` reassembles the streamed trace chunks into the full `RunResult`
+byte-for-byte -- the differential serving tests compare a round-tripped
+served result against a local `repro.run()` with exact JSON equality, so
+the transport must not (and does not) touch the payload.
+"""
+
+from __future__ import annotations
+
+import json
+import socket
+from typing import Any, Callable
+
+from repro.experiments.result import RunResult
+from repro.experiments.spec import ExperimentSpec
+
+__all__ = ["Client", "ServeError"]
+
+
+class ServeError(RuntimeError):
+    """Server-reported failure (`error` event), with the remote type."""
+
+    def __init__(self, error: str, remote_type: str = "Exception"):
+        super().__init__(f"{remote_type}: {error}")
+        self.remote_type = remote_type
+
+
+class Client:
+    def __init__(self, host: str = "127.0.0.1", port: int = 0,
+                 timeout: float | None = 600.0):
+        self._sock = socket.create_connection((host, port), timeout=timeout)
+        self._rfile = self._sock.makefile("rb")
+
+    # -- plumbing ------------------------------------------------------------
+
+    def _send(self, obj: dict) -> None:
+        self._sock.sendall((json.dumps(obj, allow_nan=False) + "\n")
+                           .encode("utf-8"))
+
+    def _recv(self) -> dict:
+        line = self._rfile.readline()
+        if not line:
+            raise ConnectionError("server closed the connection")
+        return json.loads(line)
+
+    def close(self) -> None:
+        try:
+            self._rfile.close()
+        finally:
+            self._sock.close()
+
+    def __enter__(self) -> "Client":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- ops -----------------------------------------------------------------
+
+    def ping(self) -> bool:
+        self._send({"op": "ping"})
+        ev = self._recv()
+        return ev.get("event") == "pong"
+
+    def stats(self) -> dict[str, Any]:
+        self._send({"op": "stats"})
+        ev = self._recv()
+        if ev.get("event") == "error":
+            raise ServeError(ev.get("error", "?"), ev.get("type", "?"))
+        ev.pop("event", None)
+        return ev
+
+    def shutdown(self) -> None:
+        self._send({"op": "shutdown"})
+        self._recv()  # "bye"
+
+    def run(self, spec: ExperimentSpec | dict, backend: str | None = None,
+            on_event: Callable[[dict], None] | None = None) -> RunResult:
+        """Submit one spec and block for its RunResult.
+
+        `on_event` (optional) sees every raw protocol event as it
+        arrives -- accepted, each trace chunk, the final result -- for
+        progress display; return value is the reassembled RunResult.
+        """
+        spec_dict = (spec.to_dict() if isinstance(spec, ExperimentSpec)
+                     else dict(spec))
+        msg: dict[str, Any] = {"op": "run", "spec": spec_dict}
+        if backend is not None:
+            msg["backend"] = backend
+        self._send(msg)
+        columns: dict[str, list] = {}
+        while True:
+            ev = self._recv()
+            if on_event is not None:
+                on_event(ev)
+            kind = ev.get("event")
+            if kind == "accepted":
+                continue
+            if kind == "trace":
+                for f, col in ev["columns"].items():
+                    columns.setdefault(f, []).extend(col)
+                continue
+            if kind == "result":
+                d = ev["result"]
+                d["trace"] = columns
+                return RunResult.from_dict(d)
+            if kind == "error":
+                raise ServeError(ev.get("error", "?"), ev.get("type", "?"))
+            raise ServeError(f"unexpected event {kind!r}", "ProtocolError")

@@ -1,0 +1,381 @@
+"""`ExperimentServer`: the persistent multi-tenant run server.
+
+Architecture (all stdlib):
+
+    TCP clients ──> ThreadingTCPServer (JSON lines)──┐
+                                                     v
+    in-process submit() ────────────────> request queue
+                                                     │ dispatcher thread
+                                 ┌───────────────────┤
+                                 v                   v
+                          LanePacker (dense,   solo requests
+                          shape-compatible)         │
+                                 │ full / expired   │
+                                 v                   v
+                            worker pool (ThreadPoolExecutor)
+                                 │
+                  CompileCache.lease -> warm DDASimulator
+                                 │
+                        Future[RunResult] -> stream back
+
+Dense requests lease simulators from a `CompileCache` (so repeat traffic
+skips trace+compile entirely) and, when shape-compatible with concurrent
+traffic, ride one `run_batch` vmap lane (`LanePacker`); netsim/launch
+requests run solo through the ordinary `repro.run()` path. Every response
+carries the serving observability on its `RunMetrics`: `cache_hit`/
+`cache_miss`, `queue_wait_s`, `lane_width`, `lane_occupancy` counters and
+a `solo_reason` note when a dense request could not pack.
+
+Wire protocol (one JSON object per line, strict RFC both directions --
+requests parse through the frozen `ExperimentSpec` schema, responses are
+`json_sanitize`d result dicts):
+
+    -> {"op": "run", "spec": {...}, "backend": "dense"?}
+    <- {"event": "accepted", "name": ...}
+    <- {"event": "trace", "lo": 0, "hi": 256, "total": N,
+        "columns": {"iters": [...], "fvals": [...], ...}}   (chunked)
+    <- {"event": "result", "result": {...}}     (trace omitted: streamed)
+    -> {"op": "ping"} / {"op": "stats"} / {"op": "shutdown"}
+    <- {"event": "pong"} / {"event": "stats", ...} / {"event": "bye"}
+    <- {"event": "error", "error": "...", "type": "ValueError"}
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import queue
+import socketserver
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any
+
+import numpy as np
+
+from repro.experiments.runner import (_build_schedule, _dense_batch_results,
+                                      _dense_parts, _dense_sim,
+                                      _resolve_backend, _run_dense)
+from repro.experiments.runner import run as _run
+from repro.experiments.spec import ExperimentSpec
+from repro.serve.cache import CompileCache
+from repro.serve.packer import LanePacker, lane_key
+
+__all__ = ["ExperimentServer", "TRACE_CHUNK_ROWS"]
+
+#: rows per streamed trace chunk (a row = one evaluation point)
+TRACE_CHUNK_ROWS = 256
+
+_STOP = object()
+
+
+@dataclasses.dataclass
+class _Request:
+    spec: ExperimentSpec
+    backend: Any
+    future: Future
+    submitted: float
+    solo_reason: str | None = None
+
+
+class ExperimentServer:
+    """Persistent run server; usable in-process (`submit`) or over TCP
+    (`start` + `repro.serve.Client`).
+
+    Args:
+      host/port: TCP bind address (`port=0` picks a free port; read the
+        real one from `start()`'s return or `.address`).
+      workers: worker-pool width (each worker drives one run or lane).
+      max_width / max_wait_s: lane-packer admission policy -- a lane
+        flushes when `max_width` shape-compatible requests arrived or the
+        oldest has waited `max_wait_s`.
+      cache_entries: compile-cache capacity (warm simulators, LRU).
+      packing: disable to force every request solo (the cache still
+        applies); the differential tests use both modes.
+    """
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 0,
+                 workers: int = 2, max_width: int = 4,
+                 max_wait_s: float = 0.05, cache_entries: int = 32,
+                 packing: bool = True):
+        self.cache = CompileCache(max_entries=cache_entries)
+        self.packer = LanePacker(max_width=max_width, max_wait_s=max_wait_s)
+        self.packing = packing
+        self._host, self._port = host, port
+        self._queue: queue.Queue = queue.Queue()
+        self._pool = ThreadPoolExecutor(max_workers=max(1, workers),
+                                        thread_name_prefix="repro-serve")
+        self._dispatcher: threading.Thread | None = None
+        self._tcp: _TCPServer | None = None
+        self._tcp_thread: threading.Thread | None = None
+        self._lock = threading.Lock()
+        self._closed = False
+        self._started_at = time.monotonic()
+        self.requests = 0
+        self.errors = 0
+
+    # -- lifecycle -----------------------------------------------------------
+
+    @property
+    def address(self) -> tuple[str, int] | None:
+        return None if self._tcp is None else self._tcp.server_address[:2]
+
+    def start(self) -> tuple[str, int]:
+        """Bind the TCP front door and return (host, port)."""
+        self._ensure_dispatcher()
+        if self._tcp is None:
+            self._tcp = _TCPServer((self._host, self._port), _Handler, self)
+            self._tcp_thread = threading.Thread(
+                target=self._tcp.serve_forever, name="repro-serve-tcp",
+                daemon=True)
+            self._tcp_thread.start()
+        return self.address  # type: ignore[return-value]
+
+    def close(self) -> None:
+        """Stop accepting, drain open lanes, finish in-flight runs."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+        if self._tcp is not None:
+            self._tcp.shutdown()
+            self._tcp.server_close()
+        if self._dispatcher is not None:
+            self._queue.put(_STOP)
+            self._dispatcher.join()
+        self._pool.shutdown(wait=True)
+
+    def __enter__(self) -> "ExperimentServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- submission ----------------------------------------------------------
+
+    def submit(self, spec: ExperimentSpec | dict,
+               backend: Any = None) -> "Future":
+        """Enqueue one run; returns a Future resolving to its RunResult."""
+        if isinstance(spec, dict):
+            spec = ExperimentSpec.from_dict(spec)
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("server is closed")
+            self.requests += 1
+        self._ensure_dispatcher()
+        req = _Request(spec=spec, backend=backend, future=Future(),
+                       submitted=time.monotonic())
+        self._queue.put(req)
+        return req.future
+
+    def stats(self) -> dict[str, Any]:
+        return {
+            "server": {"requests": self.requests, "errors": self.errors,
+                       "uptime_s": time.monotonic() - self._started_at,
+                       "packing": self.packing},
+            "cache": self.cache.stats(),
+            "packer": self.packer.stats(),
+        }
+
+    def _ensure_dispatcher(self) -> None:
+        with self._lock:
+            if self._dispatcher is None:
+                self._dispatcher = threading.Thread(
+                    target=self._dispatch_loop, name="repro-serve-dispatch",
+                    daemon=True)
+                self._dispatcher.start()
+
+    # -- dispatch ------------------------------------------------------------
+
+    def _dispatch_loop(self) -> None:
+        while True:
+            deadline = self.packer.next_deadline()
+            timeout = (None if deadline is None
+                       else max(deadline - time.monotonic(), 0.0))
+            try:
+                req = self._queue.get(timeout=timeout)
+            except queue.Empty:
+                req = None
+            if req is _STOP:
+                for lane in self.packer.flush():
+                    self._pool.submit(self._run_lane, lane)
+                return
+            if req is not None:
+                try:
+                    self._route(req)
+                except BaseException as e:  # noqa: BLE001 -- one bad
+                    self._fail(req, e)  # request must not kill dispatch
+            for lane in self.packer.pop_ready():
+                self._pool.submit(self._run_lane, lane)
+
+    def _route(self, req: _Request) -> None:
+        if not self.packing:
+            req.solo_reason = "packing disabled on this server"
+            self._pool.submit(self._run_solo, req)
+            return
+        key, reason = lane_key(req.spec, req.backend)
+        if key is None:
+            req.solo_reason = reason
+            self._pool.submit(self._run_solo, req)
+        else:
+            self.packer.admit(key, req)
+
+    # -- execution (worker pool) ---------------------------------------------
+
+    def _run_solo(self, req: _Request) -> None:
+        queue_wait = time.monotonic() - req.submitted
+        try:
+            backend = _resolve_backend(req.spec, req.backend)
+            if backend.kind == "dense":
+                result = _run_dense(req.spec, backend, sim_cache=self.cache)
+            else:
+                result = _run(req.spec, backend=backend)
+        except BaseException as e:  # noqa: BLE001 -- delivered to the client
+            self._fail(req, e)
+            return
+        self._finish(req, result, width=1, queue_wait=queue_wait)
+
+    def _run_lane(self, lane) -> None:
+        reqs = lane.items
+        if len(reqs) == 1:
+            req = reqs[0]
+            req.solo_reason = (req.solo_reason or
+                               "lane flushed at width 1 (no shape-"
+                               "compatible peer arrived within max_wait_s)")
+            self._run_solo(req)
+            return
+        waits = [time.monotonic() - r.submitted for r in reqs]
+        try:
+            import jax.numpy as jnp
+            specs = [r.spec for r in reqs]
+            resolved = [_resolve_backend(r.spec, r.backend) for r in reqs]
+            parts = _dense_parts(specs[0], resolved[0])
+            problem, graph = parts["problem"], parts["graph"]
+            schedules = [_build_schedule(c) for c in specs]
+            masks = np.stack([s.comm_mask(0, specs[0].T) for s in schedules])
+            with self.cache.lease(specs[0], resolved[0],
+                                  lambda: _dense_sim(specs[0], parts)
+                                  ) as (sim, hit):
+                sim.schedule = schedules[0]
+                sim.r = specs[0].r
+                x0 = jnp.zeros((problem.n, problem.d))
+                t0 = time.perf_counter()
+                traces = sim.run_batch(x0, specs[0].T, specs[0].eval_every,
+                                       masks, seeds=[c.seed for c in specs],
+                                       rs=[c.r for c in specs])
+                wall = time.perf_counter() - t0
+                results = _dense_batch_results(
+                    specs, resolved, sim, problem, graph, schedules,
+                    traces, wall, lane_counter="lane_width")
+        except BaseException as e:  # noqa: BLE001
+            for req in reqs:
+                self._fail(req, e)
+            return
+        for req, result, wait in zip(reqs, results, waits):
+            self._finish(req, result, width=len(reqs), queue_wait=wait,
+                         cache_hit=hit)
+
+    def _finish(self, req: _Request, result, width: int, queue_wait: float,
+                cache_hit: bool | None = None) -> None:
+        """Attach the serve-side observability to the result's metrics.
+
+        Everything added here is bookkeeping the differential gates
+        exclude (`comparable_result_dict` strips metrics), so annotation
+        can never perturb the scientific payload."""
+        m = result.metrics
+        if m is not None:
+            counters = dict(m.counters)
+            counters["queue_wait_s"] = queue_wait
+            counters["lane_width"] = float(width)
+            counters["lane_occupancy"] = width / self.packer.max_width
+            if cache_hit is not None:
+                counters["cache_hit" if cache_hit else "cache_miss"] = \
+                    counters.get(
+                        "cache_hit" if cache_hit else "cache_miss", 0) + 1
+            notes = dict(m.notes)
+            if req.solo_reason:
+                notes["solo_reason"] = req.solo_reason
+            result.metrics = dataclasses.replace(m, counters=counters,
+                                                 notes=notes)
+        if not req.future.done():
+            req.future.set_result(result)
+
+    def _fail(self, req: _Request, exc: BaseException) -> None:
+        with self._lock:
+            self.errors += 1
+        if not req.future.done():
+            req.future.set_exception(exc)
+
+
+# ---------------------------------------------------------------------------
+# TCP front door
+# ---------------------------------------------------------------------------
+
+
+class _TCPServer(socketserver.ThreadingTCPServer):
+    allow_reuse_address = True
+    daemon_threads = True
+
+    def __init__(self, addr, handler, owner: ExperimentServer):
+        self.owner = owner
+        super().__init__(addr, handler)
+
+
+class _Handler(socketserver.StreamRequestHandler):
+    """One connection; any number of newline-delimited JSON ops."""
+
+    def _send(self, obj: dict) -> None:
+        line = json.dumps(obj, allow_nan=False) + "\n"
+        self.wfile.write(line.encode("utf-8"))
+        self.wfile.flush()
+
+    def handle(self) -> None:
+        server: ExperimentServer = self.server.owner  # type: ignore[attr-defined]
+        for raw in self.rfile:
+            raw = raw.strip()
+            if not raw:
+                continue
+            try:
+                msg = json.loads(raw)
+                op = msg.get("op", "run")
+                if op == "ping":
+                    self._send({"event": "pong", "ok": True})
+                elif op == "stats":
+                    self._send({"event": "stats", **server.stats()})
+                elif op == "shutdown":
+                    self._send({"event": "bye"})
+                    # shut down from a fresh thread: shutdown() joins the
+                    # serve_forever loop, and this handler must first
+                    # return its socket to it
+                    threading.Thread(target=server.close,
+                                     daemon=True).start()
+                    return
+                elif op == "run":
+                    self._handle_run(server, msg)
+                else:
+                    self._send({"event": "error", "type": "ValueError",
+                                "error": f"unknown op {op!r}"})
+            except BrokenPipeError:
+                return
+            except Exception as e:  # noqa: BLE001 -- protocol surface
+                try:
+                    self._send({"event": "error",
+                                "type": type(e).__name__, "error": str(e)})
+                except OSError:
+                    return
+
+    def _handle_run(self, server: ExperimentServer, msg: dict) -> None:
+        spec = ExperimentSpec.from_dict(msg["spec"])
+        future = server.submit(spec, backend=msg.get("backend"))
+        self._send({"event": "accepted", "name": spec.name})
+        result = future.result()
+        d = result.to_dict()
+        trace = d.pop("trace")
+        total = len(trace["iters"])
+        for lo in range(0, total, TRACE_CHUNK_ROWS):
+            hi = min(lo + TRACE_CHUNK_ROWS, total)
+            self._send({"event": "trace", "lo": lo, "hi": hi,
+                        "total": total,
+                        "columns": {f: col[lo:hi]
+                                    for f, col in trace.items()}})
+        self._send({"event": "result", "result": d})

@@ -368,22 +368,47 @@ def _bench_paths():
     return sorted(REPO.glob("BENCH_*.json"))
 
 
+def _assert_quantiles(q, n_samples):
+    assert q["n"] == n_samples and q["unit"] == "host"
+    assert q["p50"] <= q["p90"] <= q["p99"] <= q["max"]
+
+
 @pytest.mark.parametrize("path", _bench_paths(), ids=lambda p: p.stem)
 def test_checked_in_bench_files_are_schema_valid(path):
     """Every checked-in BENCH_*.json must be strict-RFC JSON carrying the
-    full warm-run sample arrays, their quantiles, and a version-1
-    RunMetrics block per result cell."""
+    full warm-run sample arrays and their quantiles: per result cell with
+    a version-1 RunMetrics block (throughput benches), or per latency
+    spec plus the equivalence/acceptance gates (the serve bench — schema
+    in benchmarks/README.md)."""
     raw = path.read_text()
     assert "NaN" not in raw and "Infinity" not in raw
     report = json.loads(raw)
-    for key in ("benchmark", "mode", "config", "host", "results"):
+    for key in ("benchmark", "mode", "config", "host"):
         assert key in report, f"{path.name} missing {key!r}"
+
+    if report["benchmark"] == "serve":
+        assert report["equivalence"]["ok"] is True
+        lat = report["latency"]
+        warm_total = 0
+        for cell in lat["per_spec"]:
+            samples = cell["warm_samples_s"]
+            assert samples and all(s >= 0 for s in samples)
+            assert cell["cold_s"] >= 0
+            warm_total += len(samples)
+        _assert_quantiles(lat["cold_quantiles"], len(lat["per_spec"]))
+        _assert_quantiles(lat["warm_quantiles"], warm_total)
+        thr = report["throughput"]
+        assert thr["specs_per_sec"] > 0
+        assert 0.0 <= thr["lanes"]["occupancy"] <= 1.0
+        assert 0.0 <= thr["cache"]["hit_rate"] <= 1.0
+        acc = report["acceptance"]
+        assert acc["pass"] and acc["measured"] >= 0
+        return
+
     assert report["results"], f"{path.name} has no result cells"
     for cell in report["results"]:
         samples = cell["wall_samples_s"]
-        q = cell["wall_quantiles"]
         assert samples and all(s >= 0 for s in samples)
-        assert q["n"] == len(samples) and q["unit"] == "host"
-        assert q["p50"] <= q["p90"] <= q["p99"] <= q["max"]
+        _assert_quantiles(cell["wall_quantiles"], len(samples))
         m = RunMetrics.from_dict(cell["metrics"])  # schema-validates
         assert m.compile_s >= 0.0 and m.execute_s >= 0.0

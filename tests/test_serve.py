@@ -1,0 +1,366 @@
+"""The differential serving tier: `repro.serve` must be invisible.
+
+A result served from a warm compile cache, or packed into a cross-request
+`run_batch` lane, must be BIT-IDENTICAL (exact JSON equality under
+`comparable_result_dict`, which strips only wall-clock and serve
+bookkeeping) to a cold solo `repro.run()` of the same spec -- the same
+equivalence-gate-before-timing discipline the PR 2/5 fast paths shipped
+under. Plus: hermetic client->server->result TCP e2e (`-m serve`),
+property tests for the cache key and the packer's admission relation,
+and the packer/cache units.
+"""
+
+import threading
+
+import pytest
+
+import repro
+from repro.experiments import ExperimentSpec
+from repro.serve import (Client, CompileCache, ExperimentServer, LanePacker,
+                         ServeError, cache_signature, comparable_result_dict,
+                         lane_key)
+
+from _hyp import HAVE_HYPOTHESIS, given, settings, st
+
+
+def _spec(**kw):
+    base = dict(
+        name="serve",
+        problem={"kind": "quadratic_consensus",
+                 "params": {"n": 8, "d": 6, "seed": 0}},
+        topology={"kind": "expander", "params": {"k": 4, "seed": 0}},
+        schedule={"kind": "periodic", "params": {"h": 2}},
+        backends=[{"kind": "dense"}],
+        stepsize={"kind": "sqrt", "params": {"A": 0.5}},
+        T=60, eval_every=20, seed=0, r=0.01, eps_frac=0.05)
+    base.update(kw)
+    return ExperimentSpec(**base)
+
+
+def _assert_identical(served, solo, what):
+    a, b = comparable_result_dict(served), comparable_result_dict(solo)
+    assert a == b, f"{what}: served result differs from solo repro.run()"
+
+
+# ---------------------------------------------------------------------------
+# differential gates (the headline tests)
+# ---------------------------------------------------------------------------
+
+
+def test_warm_cache_run_bit_identical_to_cold_solo():
+    """Gate (a): a warm-cache served run round-trips to EXACTLY the cold
+    solo result -- and says so in its counters."""
+    spec = _spec(name="warm_gate")
+    solo = repro.run(spec, backend="dense")
+    with ExperimentServer(workers=1, max_wait_s=0.01) as srv:
+        cold = srv.submit(spec).result()
+        warm = srv.submit(spec).result()
+    # exact compare happens on the JSON ROUND-TRIPPED dict: what a client
+    # reads from an artifact, not just the in-memory object
+    _assert_identical(repro.RunResult.from_json(cold.to_json()), solo,
+                      "cold served")
+    _assert_identical(repro.RunResult.from_json(warm.to_json()), solo,
+                      "warm served")
+    assert cold.metrics.counters["cache_miss"] == 1.0
+    assert warm.metrics.counters["cache_hit"] == 1.0
+    assert warm.metrics.counters["queue_wait_s"] >= 0.0
+
+
+def test_cross_request_packed_lane_bit_identical_to_solo():
+    """Gate (b): specs packed into ONE vmap lane from different requests
+    each return results bit-identical to their solo runs."""
+    variants = [_spec(name=f"lane{s}", seed=s, r=0.01 * (s + 1))
+                for s in range(3)]
+    solos = [repro.run(v, backend="dense") for v in variants]
+    with ExperimentServer(workers=1, max_width=3, max_wait_s=5.0) as srv:
+        futs = [srv.submit(v) for v in variants]  # width 3 == max: flushes
+        packed = [f.result(timeout=120) for f in futs]
+    for served, solo in zip(packed, solos):
+        _assert_identical(repro.RunResult.from_json(served.to_json()),
+                          solo, "packed lane")
+        assert served.metrics.counters["lane_width"] == 3.0
+        assert served.extras["lane_width"] == 3
+    st_ = srv.stats()
+    assert st_["packer"]["packed_requests"] == 3
+    assert st_["packer"]["occupancy"] == 1.0
+
+
+def test_all_comm_lane_keeps_solo_program_variant():
+    """An all-comm spec ("every") must pack only with all-comm peers:
+    `run_batch` picks the cond-free program variant from `masks.all()`,
+    and mixing variants would break bit-identity with solo runs."""
+    every = _spec(name="ac", schedule={"kind": "every"})
+    sparse = _spec(name="sp", schedule={"kind": "periodic",
+                                        "params": {"h": 2}})
+    key_every, _ = lane_key(every, None)
+    key_sparse, _ = lane_key(sparse, None)
+    assert key_every is not None and key_sparse is not None
+    assert key_every != key_sparse  # same shapes, different ac bit
+    # and the differential holds end-to-end when both arrive together
+    solos = [repro.run(s, backend="dense") for s in (every, sparse)]
+    with ExperimentServer(workers=1, max_width=4, max_wait_s=0.2) as srv:
+        futs = [srv.submit(s) for s in (every, sparse)]
+        served = [f.result(timeout=120) for f in futs]
+    for got, solo in zip(served, solos):
+        _assert_identical(got, solo, "mixed ac traffic")
+
+
+def test_adaptive_spec_rides_warm_cache_solo():
+    """Satellite: a dense_adaptive (controller) spec is not packable --
+    with the stated reason -- but STILL leases the warm simulator, so
+    repeat adaptive traffic skips compile too (the run_batch-aware
+    DenseController path dispatches AOT executables from the shared
+    cache)."""
+    spec = _spec(
+        name="adaptive",
+        schedule={"kind": "adaptive", "params": {"h0": 2}},
+        controller={"kind": "dense_adaptive",
+                    "params": {"retune_every": 20}})
+    key, reason = lane_key(spec, None)
+    assert key is None and "controller" in reason
+    with ExperimentServer(workers=1, max_wait_s=0.01) as srv:
+        cold = srv.submit(spec).result(timeout=180)
+        warm = srv.submit(spec).result(timeout=180)
+    assert cold.metrics.counters["cache_miss"] == 1.0
+    assert warm.metrics.counters["cache_hit"] == 1.0
+    assert "controller" in warm.metrics.notes["solo_reason"]
+    # adaptive runs are wall-clock-driven (their retune points depend on
+    # measured timings), so no bit-identity gate -- but the warm run rides
+    # the shared AOT cache: any chunk length the cold run compiled is free
+    # (warm may still compile a NEW chunk length if its faster timings
+    # retune differently, so assert strictly-less, not zero)
+    assert warm.metrics.compile_s < cold.metrics.compile_s
+
+
+def test_netsim_spec_served_solo_with_reason():
+    """Non-dense backends run through the ordinary path, annotated."""
+    spec = ExperimentSpec(
+        name="net", problem={"kind": "quadratic_consensus",
+                             "params": {"n": 8, "d": 4, "seed": 0}},
+        topology={"kind": "expander", "params": {"k": 4, "seed": 0}},
+        schedule={"kind": "every"},
+        backends=[{"kind": "netsim", "params": {"scenario": "homogeneous",
+                                                "engine": "vectorized"}}],
+        stepsize={"kind": "inv_sqrt", "params": {"A": 0.5}},
+        T=30, eval_every=10, seed=0, r=0.01)
+    solo = repro.run(spec)
+    with ExperimentServer(workers=1, max_wait_s=0.01) as srv:
+        served = srv.submit(spec).result(timeout=120)
+    _assert_identical(served, solo, "netsim via serve")
+    assert "not dense" in served.metrics.notes["solo_reason"]
+    assert served.metrics.counters["lane_width"] == 1.0
+
+
+def test_submit_surfaces_run_errors():
+    bad = _spec(name="bad", backends=[{"kind": "dense",
+                                       "params": {"bogus": 1}}])
+    with ExperimentServer(workers=1, max_wait_s=0.01) as srv:
+        fut = srv.submit(bad)
+        with pytest.raises(ValueError, match="unknown params"):
+            fut.result(timeout=60)
+        assert srv.stats()["server"]["errors"] == 1
+
+
+# ---------------------------------------------------------------------------
+# hermetic TCP e2e (tier-1: spawned server, port 0, teardown in finally)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.serve
+def test_client_server_e2e_localhost():
+    """Gate (c): client -> TCP server -> streamed result, hermetically."""
+    spec = _spec(name="e2e", T=40, eval_every=5)  # 8 rows: multi-op smoke
+    solo = repro.run(spec, backend="dense")
+    srv = ExperimentServer(port=0, workers=1, max_wait_s=0.01)
+    try:
+        host, port = srv.start()
+        assert port != 0
+        with Client(host, port, timeout=120.0) as client:
+            assert client.ping()
+            events = []
+            served = client.run(spec, backend="dense",
+                                on_event=lambda e: events.append(e["event"]))
+            assert events[0] == "accepted"
+            assert "trace" in events and events[-1] == "result"
+            _assert_identical(served, solo, "tcp e2e")
+            # the streamed trace reassembled EXACTLY
+            assert served.to_dict()["trace"] == solo.to_dict()["trace"]
+            warm = client.run(spec, backend="dense")
+            assert warm.metrics.counters["cache_hit"] == 1.0
+            stats = client.stats()
+            assert stats["cache"]["hits"] == 1
+            bad = spec.to_dict()
+            bad["problem"] = {"kind": "no_such_problem", "params": {}}
+            with pytest.raises(ServeError, match="no_such_problem"):
+                client.run(bad)
+            assert client.ping()  # connection survives a failed run
+    finally:
+        srv.close()
+
+
+# ---------------------------------------------------------------------------
+# cache + packer units
+# ---------------------------------------------------------------------------
+
+
+def test_compile_cache_lease_lru_and_concurrency():
+    cache = CompileCache(max_entries=2)
+    built = []
+
+    def factory(tag):
+        def make():
+            built.append(tag)
+            return {"sim": tag}
+        return make
+
+    s1, s2, s3 = (_spec(T=t) for t in (10, 20, 30))  # distinct signatures
+    b = s1.backends[0]
+    out = {}
+
+    def contend():
+        with cache.lease(s1, b, factory("a2")) as (sim2, hit2):
+            out["sim"], out["hit"] = sim2, hit2
+
+    with cache.lease(s1, b, factory("a")) as (sim, hit):
+        assert sim == {"sim": "a"} and not hit
+        # same signature, concurrent: blocks on the entry lock (leases
+        # are exclusive), then hits the already-built simulator
+        thread = threading.Thread(target=contend)
+        thread.start()
+        thread.join(timeout=0.2)
+        assert out == {}  # still waiting: the lease is exclusive
+    thread.join(timeout=30)
+    assert out == {"sim": {"sim": "a"}, "hit": True}  # built once, shared
+    assert built == ["a"]
+    with cache.lease(s2, b, factory("b")) as _:
+        pass
+    with cache.lease(s3, b, factory("c")) as _:  # capacity 2: evicts LRU
+        pass
+    assert cache.stats()["entries"] == 2
+    assert cache.stats()["evictions"] == 1
+    with cache.lease(s1, b, factory("a3")) as (sim, hit):
+        assert not hit and sim == {"sim": "a3"}  # s1 was the LRU victim
+
+
+def test_lane_packer_admission_policy():
+    now = [0.0]
+    packer = LanePacker(max_width=2, max_wait_s=1.0, clock=lambda: now[0])
+    packer.admit("k1", "a")
+    assert packer.pop_ready() == []  # neither full nor expired
+    packer.admit("k1", "b")  # hits max_width
+    lanes = packer.pop_ready()
+    assert [lane.items for lane in lanes] == [["a", "b"]]
+    packer.admit("k2", "c")
+    assert packer.next_deadline() == 1.0
+    now[0] = 2.0
+    lanes = packer.pop_ready()  # expired at width 1
+    assert [lane.items for lane in lanes] == [["c"]]
+    packer.admit("k3", "d")
+    assert [lane.items for lane in packer.flush()] == [["d"]]
+    stats = packer.stats()
+    assert stats["lanes_flushed"] == 3
+    assert stats["packed_requests"] == 2
+    assert stats["occupancy"] == pytest.approx(4 / 6)
+
+
+# ---------------------------------------------------------------------------
+# property tests: cache key + admission relation
+# ---------------------------------------------------------------------------
+
+_IRRELEVANT = st.fixed_dictionaries({
+    "seed": st.integers(0, 2**31 - 1),
+    "r": st.floats(0.0, 10.0, allow_nan=False),
+    "eps_frac": st.one_of(st.none(), st.floats(0.001, 0.5)),
+    "name": st.text(
+        st.characters(whitelist_categories=("Lu", "Ll", "Nd")),
+        min_size=1, max_size=12),
+})
+
+#: shape-relevant axes and values: every pair of DISTINCT values within a
+#: field must produce distinct signatures (problem seed included -- the
+#: problem's data arrays are baked into the XLA program as constants)
+_RELEVANT_VALUES = {
+    "problem.params.n": [4, 8, 12],
+    "problem.params.d": [2, 6, 10],
+    "problem.params.seed": [0, 1, 2],
+    "problem.kind": ["quadratic_consensus", "nonsmooth"],
+    "topology.params.k": [2, 4],
+    "schedule.kind": ["every", "periodic", "sparse"],
+    "stepsize.params.A": [0.25, 0.5, 1.0],
+    "T": [20, 40, 60],
+    "eval_every": [10, 20],
+}
+_RELEVANT_AXES = {axis: st.sampled_from(vals)
+                  for axis, vals in _RELEVANT_VALUES.items()}
+
+
+@settings(max_examples=50, deadline=None)
+@given(a=_IRRELEVANT, b=_IRRELEVANT)
+def test_cache_key_ignores_cache_irrelevant_fields(a, b):
+    base = _spec()
+    backend = base.backends[0]
+    specs = []
+    for fields in (a, b):
+        s = base
+        for axis, v in fields.items():
+            s = s.with_value(axis, v)
+        specs.append(s)
+    assert cache_signature(specs[0], backend) == \
+        cache_signature(specs[1], backend)
+
+
+@settings(max_examples=50, deadline=None)
+@given(axis=st.sampled_from(sorted(_RELEVANT_AXES)), data=st.data())
+def test_cache_key_separates_shape_relevant_fields(axis, data):
+    strat = _RELEVANT_AXES[axis]
+    v1 = data.draw(strat)
+    v2 = data.draw(strat.filter(lambda v: v != v1))
+    base = _spec()
+    backend = base.backends[0]
+    s1, s2 = base.with_value(axis, v1), base.with_value(axis, v2)
+    assert cache_signature(s1, backend) != cache_signature(s2, backend)
+
+
+@settings(max_examples=25, deadline=None)
+@given(pool=st.lists(
+    st.fixed_dictionaries({
+        "seed": st.integers(0, 3),
+        "r": st.sampled_from([0.0, 0.01]),
+        "T": st.sampled_from([20, 40]),
+        "schedule": st.sampled_from([
+            {"kind": "every"},
+            {"kind": "periodic", "params": {"h": 2}},
+            {"kind": "periodic", "params": {"h": 4}},
+        ]),
+    }), min_size=2, max_size=6))
+def test_packer_admission_is_symmetric_and_transitive(pool):
+    """The admission predicate (equal non-None lane keys) is an
+    equivalence relation over any generated spec pool, so lanes are
+    well-defined partitions -- no ordering effects in what packs."""
+    specs = [_spec(name=f"p{i}", **fields) for i, fields in enumerate(pool)]
+    keys = [lane_key(s, None)[0] for s in specs]
+
+    def compat(i, j):
+        return (keys[i] is not None and keys[j] is not None
+                and keys[i] == keys[j])
+
+    idx = range(len(specs))
+    for i in idx:
+        assert compat(i, i) or keys[i] is None  # reflexive when packable
+        for j in idx:
+            assert compat(i, j) == compat(j, i)  # symmetric
+            for k in idx:
+                if compat(i, j) and compat(j, k):
+                    assert compat(i, k)  # transitive
+
+
+@pytest.mark.parametrize("axis", sorted(_RELEVANT_VALUES))
+def test_cache_key_axis_inventory(axis):
+    """Non-hypothesis floor under the property tests: for every declared
+    shape-relevant axis, pairwise-distinct values give pairwise-distinct
+    signatures (so the strategies above cannot silently test nothing)."""
+    base = _spec()
+    backend = base.backends[0]
+    sigs = [cache_signature(base.with_value(axis, v), backend)
+            for v in _RELEVANT_VALUES[axis]]
+    assert len(set(sigs)) == len(sigs), axis

@@ -61,13 +61,27 @@ def test_vmap_sweep_matches_serial(axis, values):
 
 def test_vmap_sweep_falls_back_when_not_batchable():
     """Shape-changing axes (problem n) and non-dense backends fall back to
-    the serial executor, silently and correctly."""
+    the serial executor -- correctly, and LOUDLY: every fallback result
+    carries the reason the pool did not pack (metrics.notes + extras), so
+    "my sweep got slow" is diagnosable from the artifacts."""
     res = run_sweep(_dense_spec(), "problem.params.n", [4, 8],
                     parallel="vmap")
     assert [r.spec.problem.params["n"] for r in res] == [4, 8]
     assert all("vmap_lanes" not in r.extras for r in res)
+    for r in res:
+        reason = r.metrics.notes["vmap_fallback"]
+        assert reason == r.extras["vmap_fallback"]
+        # a shape-incompatible pool must say WHY: the cells differ
+        # outside the batchable lane fields
+        assert "lane fields" in reason and "2 distinct" in reason
     res = run_sweep(_netsim_spec(), "seed", [0, 1], parallel="vmap")
     assert all("vmap_lanes" not in r.extras for r in res)
+    assert all("not dense" in r.metrics.notes["vmap_fallback"] for r in res)
+    # the reason survives the JSON artifact round-trip
+    import repro
+    rt = repro.RunResult.from_json(res[0].to_json())
+    assert rt.metrics.notes["vmap_fallback"] == \
+        res[0].metrics.notes["vmap_fallback"]
 
 
 def test_vmap_sweep_whole_schedule_axis():
