@@ -118,13 +118,22 @@ class AdaptiveController:
         False the configured graph's static lambda2 is used.
       warmup_messages / warmup_steps: minimum observations before the first
         retune -- an h spliced off two noisy flights would thrash.
+      wire_ratio: bytes-on-wire compression ratio c applied to the measured
+        r_hat before each retune (h solved against the EFFECTIVE r*c, eq.
+        21). Default 1.0 is correct for netsim runs with compression on:
+        the observed flights already serialize `wire_bytes`, so r_hat IS
+        the effective tradeoff. Set it explicitly (Compressor.wire_ratio)
+        when the r feed is a raw/uncompressed measurement -- the dense
+        backend's wall-clock tracker, or a netsim whose link calibration
+        ignores wire_bytes.
     """
 
     def __init__(self, schedule: AdaptiveSchedule | None = None,
                  update_every: float = 0.5, halflife: float = 64.0,
                  r0: float | None = None, reweight: bool = True,
                  warmup_messages: int = 8, warmup_steps: int = 8,
-                 reweight_gossip: bool = False):
+                 reweight_gossip: bool = False,
+                 wire_ratio: float = 1.0):
         self.schedule = schedule if schedule is not None else AdaptiveSchedule()
         if not isinstance(self.schedule, AdaptiveSchedule):
             raise TypeError("AdaptiveController needs an AdaptiveSchedule")
@@ -142,6 +151,9 @@ class AdaptiveController:
         # h_opt is solved against. Stale-gossip DDA only: push-sum's mass
         # splitting is its own weighting scheme (NetSimulator validates).
         self.reweight_gossip = reweight_gossip
+        if wire_ratio <= 0.0:
+            raise ValueError("wire_ratio must be positive")
+        self.wire_ratio = wire_ratio
         self.warmup_messages = warmup_messages
         self.warmup_steps = warmup_steps
         self.tracker: RTracker | None = None
@@ -305,7 +317,10 @@ class AdaptiveController:
                     self._net.mix_weights = P_eff
         else:
             lam2 = self._static_lam2()
-        changed = self.schedule.retune(cut, self._n, self._k, r_hat, lam2)
+        # history records what was OBSERVED (raw r_hat); the act half solves
+        # against the effective per-message cost r_hat * wire_ratio
+        changed = self.schedule.retune(cut, self._n, self._k,
+                                       r_hat * self.wire_ratio, lam2)
         if changed and self.tracer is not None:
             self.tracer.count("retunes")
             self.tracer.add_instant("retune", float(now), track="controller",
@@ -351,11 +366,19 @@ class DenseController:
         otherwise set h). warmup_plain defaults to 1 because an h0 = 1
         cold start has exactly ONE plain iteration (t = 1) until the first
         retune raises h -- a larger default would deadlock the loop.
+      wire_ratio: compression byte ratio c applied to the measured r_hat
+        before each retune. Unlike the netsim controller, the dense
+        tracker's r_hat comes from wall-clock iteration timings that do
+        NOT shrink with compression (the dense simulator computes full
+        vectors either way), so a compressed dense run SHOULD pass its
+        compressor's `wire_ratio(d)` here for h to land on the effective
+        r*c optimum.
     """
 
     def __init__(self, schedule: AdaptiveSchedule | None = None,
                  halflife: float = 32.0, retune_every: int | None = None,
-                 warmup_comm: int = 2, warmup_plain: int = 1):
+                 warmup_comm: int = 2, warmup_plain: int = 1,
+                 wire_ratio: float = 1.0):
         self.schedule = schedule if schedule is not None else AdaptiveSchedule()
         if not isinstance(self.schedule, AdaptiveSchedule):
             raise TypeError("DenseController needs an AdaptiveSchedule")
@@ -365,6 +388,9 @@ class DenseController:
         self.retune_every = retune_every
         self.warmup_comm = warmup_comm
         self.warmup_plain = warmup_plain
+        if wire_ratio <= 0.0:
+            raise ValueError("wire_ratio must be positive")
+        self.wire_ratio = wire_ratio
         self.tracker = None
         self._lam2 = 0.0
         self._n = 0
@@ -407,8 +433,8 @@ class DenseController:
         cut = int(frontier)
         if cut <= self.schedule.segments[-1][0]:
             return False  # same append-only guard as the netsim controller
-        changed = self.schedule.retune(cut, self._n, self._k, r_hat,
-                                       self._lam2)
+        changed = self.schedule.retune(cut, self._n, self._k,
+                                       r_hat * self.wire_ratio, self._lam2)
         if changed:
             self._last_retune_t = cut
             if self.tracer is not None:

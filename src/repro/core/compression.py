@@ -9,6 +9,14 @@ ratio c, hence r -> r*c, which moves the paper's optima:
 
 Error feedback (memory of the residual) keeps the consensus average unbiased
 over time and is required for convergence with biased compressors.
+
+This module is the seed-era flat-vector API, kept for back-compat; the
+full subsystem -- the compressor registry (`topk`/`randk`/`int8`/`none`),
+the per-message byte models, and the numpy halves the netsim engines
+consume -- lives in `repro.compress`, and every top-k support computation
+here routes through its one exact-k implementation
+(`repro.compress.topk_indices_flat`), so the flat API and the simulators
+can never disagree on tie handling again.
 """
 
 from __future__ import annotations
@@ -17,6 +25,9 @@ from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.compress.base import (INDEX_BYTES, VALUE_BYTES,
+                                 topk_indices_flat)
 
 __all__ = ["CompressionState", "topk_compress", "topk_decompress",
            "ef_init", "ef_compress", "ratio_bytes"]
@@ -29,10 +40,11 @@ class CompressionState(NamedTuple):
 
 
 def topk_compress(x: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
-    """Return (values, flat indices) of the k largest-magnitude entries."""
+    """Return (values, flat indices) of the k largest-magnitude entries.
+    Exactly k even on magnitude ties (shared exact-k implementation)."""
     flat = x.reshape(-1)
     k = min(k, flat.shape[0])
-    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    idx = topk_indices_flat(flat, k)
     return flat[idx], idx
 
 
@@ -68,7 +80,9 @@ def ef_compress(msg: PyTree, state: CompressionState,
     return sent, CompressionState(residual=resid)
 
 
-def ratio_bytes(keep_fraction: float, dtype_bytes: int = 4,
-                index_bytes: int = 4) -> float:
-    """Bytes-on-wire ratio of top-k vs dense (values + indices)."""
+def ratio_bytes(keep_fraction: float, dtype_bytes: int = VALUE_BYTES,
+                index_bytes: int = INDEX_BYTES) -> float:
+    """Bytes-on-wire ratio of top-k vs dense (values + indices). The
+    per-compressor generalization -- rand-k's index-free wire format,
+    int8's codes+scale -- is `Compressor.wire_ratio` in `repro.compress`."""
     return keep_fraction * (dtype_bytes + index_bytes) / dtype_bytes

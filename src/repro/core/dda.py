@@ -198,9 +198,17 @@ class DDASimulator:
       a_fn: stepsize a(t).
       projection: optional Proj_X applied after the prox step (stacked).
       r: communication/computation tradeoff for the simulated time axis.
-      compress_keep: top-k + error-feedback message compression ratio
-        ([beyond paper]; forces the dense mix, which models the compressed
-        transmissions).
+      compression: a built `repro.compress.Compressor` (or None). The
+        transmitted messages are compressed with error feedback kept in
+        the scanned carry; sparsifiers (`topk`/`randk`) ride the fused
+        compress-mix Pallas pass on the sparse path, quantizers ship a
+        dequantized message stack through the same gather. The diagonal
+        always mixes the node's exact own z -- only RECEIVED messages are
+        compressed. `self.wire_ratio(d)` exposes the byte model for the
+        effective tradeoff r -> r*c.
+      compress_keep: legacy alias ([beyond paper], kept for back-compat):
+        `compress_keep=f` is exactly `compression=TopK(keep=f)`. Mutually
+        exclusive with `compression`.
       mix: "auto" | "dense" | "sparse" mixing realization. "dense" is the
         P @ z matmul oracle (the seed path; O(n^2 d)). "sparse" is the
         k-regular fast path: a neighbor-index gather + the fused
@@ -208,9 +216,11 @@ class DDASimulator:
         paper's degree-scaling communication argument applied to the
         simulator's own memory traffic. "auto" picks sparse whenever the
         graph's permutation edge set is materially sparser than complete
-        (k + 1 < n), compression is off, and any `mix_weights` override is
-        supported on the edge set; it falls back to dense otherwise (the
-        resolved choice is exposed as `self.mix_mode`).
+        (k + 1 < n) and any `mix_weights` override is supported on the
+        edge set; it falls back to dense otherwise (the resolved choice
+        is exposed as `self.mix_mode`). Compression no longer disqualifies
+        the sparse path: compressed messages ride the fused compress-mix
+        kernel (`kernels.ops.compress_mix`) there.
       mix_weights: optional (n, n) mixing-matrix override (e.g. the
         straggler-reweighted effective P from
         `AdaptiveController(reweight_gossip=True)`). The sparse path folds
@@ -226,7 +236,8 @@ class DDASimulator:
                  a_fn=None, projection=None, r: float = 0.0,
                  compress_keep: float | None = None,
                  mix: str = "auto",
-                 mix_weights: np.ndarray | None = None):
+                 mix_weights: np.ndarray | None = None,
+                 compression=None):
         self.subgrad_fn = subgrad_fn
         self.eval_fn = eval_fn
         self.graph = graph
@@ -234,10 +245,24 @@ class DDASimulator:
         self.a_fn = a_fn or stepsize_sqrt(1.0)
         self.projection = projection
         self.r = float(r)
+        if compress_keep is not None and compression is not None:
+            raise ValueError("pass either compression or the legacy "
+                             "compress_keep alias, not both")
+        if compress_keep is not None:
+            from repro.compress import TopK
+            compression = TopK(keep=float(compress_keep))
         self.compress_keep = compress_keep
+        # "none" normalizes to no compression so the uncompressed program
+        # (and its compile cache keys) is byte-for-byte the seed program
+        if compression is not None and compression.kind == "none":
+            compression = None
+        self.compression = compression
         self.mix_weights = (None if mix_weights is None
                             else np.asarray(mix_weights, np.float64))
         self.mix_mode = self._resolve_mix_mode(mix)
+        #: per-segment mean per-node error-feedback residual norms of the
+        #: last run/run_batch (np (S,) or (B, S)); zeros when uncompressed
+        self.last_res_norms: np.ndarray | None = None
         P_host = (self.mix_weights if self.mix_weights is not None
                   else graph.mixing_matrix())
         self._P = jnp.asarray(P_host, jnp.float32)
@@ -251,24 +276,40 @@ class DDASimulator:
             self._w_self = jnp.asarray(w_self, jnp.float32)
             self._w_edge = jnp.asarray(w_edge, jnp.float32)
 
-        def _mix(z, res):
-            """One consensus round; top-k+error-feedback compression of the
-            transmitted messages when compress_keep is set ([beyond paper],
-            core/compression.py; reduces r by the compression ratio)."""
+        def _mix(z, res, t):
+            """One consensus round; messages are compressed (with the
+            error-feedback residual `res` folded in and updated) when a
+            compressor is attached ([beyond paper], repro.compress; the
+            wire ratio c scales the effective tradeoff r -> r*c)."""
+            comp = self.compression
             if self.mix_mode == "sparse":
                 from repro.kernels import ops as _kops
-                return _kops.gossip_gather_mix_impl(
-                    z, self._S_in, self._w_self, self._w_edge), res
-            if self.compress_keep is None:
-                return _cons.mix_dense(z, self._P), res
-            corrected = z + res
-            k = max(1, int(corrected.shape[1] * self.compress_keep))
-            mags = jnp.abs(corrected)
-            thresh = jax.lax.top_k(mags, k)[0][:, -1:]  # kth largest per row
-            sent = jnp.where(mags >= thresh, corrected, 0.0)
-            new_res = corrected - sent
-            mixed = (self._P_diag[:, None] * z
-                     + _cons.mix_dense(sent, self._P_off))
+                if comp is None:
+                    return _kops.gossip_gather_mix_impl(
+                        z, self._S_in, self._w_self, self._w_edge), res
+                corrected = z + res
+                if comp.is_sparsifier:
+                    # fused sparsify-mix: the 0/1 support rides the kernel,
+                    # never materializing the masked message stack
+                    mask = comp.support_mask_jax(corrected, t)
+                    mixed = _kops.compress_mix_impl(
+                        z, corrected, mask, self._S_in, self._w_self,
+                        self._w_edge)
+                    sent = corrected * mask
+                else:
+                    sent = comp.compress_jax(corrected, t)
+                    mixed = _kops.gossip_gather_mix_impl(
+                        z, self._S_in, self._w_self, self._w_edge, msg=sent)
+            else:
+                if comp is None:
+                    return _cons.mix_dense(z, self._P), res
+                corrected = z + res
+                sent = comp.compress_jax(corrected, t)
+                # off-diagonal mixing consumes the TRANSMITTED messages;
+                # the diagonal keeps the node's exact own z
+                mixed = (self._P_diag[:, None] * z
+                         + _cons.mix_dense(sent, self._P_off))
+            new_res = corrected - sent if comp.error_feedback else res
             return mixed, new_res
 
         def make_body(always_comm: bool):
@@ -283,10 +324,10 @@ class DDASimulator:
                 comm, key = inp
                 g = self.subgrad_fn(x, t, key)
                 if always_comm:
-                    z_mixed, res_new = _mix(z, res)
+                    z_mixed, res_new = _mix(z, res, t)
                 else:
                     z_mixed, res_new = jax.lax.cond(
-                        comm, _mix, lambda zz, rr: (zz, rr), z, res)
+                        comm, _mix, lambda zz, rr, tt: (zz, rr), z, res, t)
                 z_new = z_mixed + g
                 t_new = t + 1.0
                 a_t = self.a_fn(t_new)
@@ -330,7 +371,11 @@ class DDASimulator:
                     fv = jnp.mean(jax.vmap(self.eval_fn)(xhat))
                     fvc = self.eval_fn(jnp.mean(xhat, axis=0))
                     dis = _cons.disagreement(z)
-                    return carry, (fv, fvc, dis)
+                    # mean per-node error-feedback residual norm: the
+                    # compression block's trajectory (zeros uncompressed)
+                    rn = jnp.mean(jnp.sqrt(jnp.sum(
+                        res.reshape(res.shape[0], -1) ** 2, axis=-1)))
+                    return carry, (fv, fvc, dis, rn)
 
                 return jax.lax.scan(seg, state, (masks, starts))
             return prog
@@ -353,6 +398,14 @@ class DDASimulator:
     def _reset_timings(self) -> None:
         self.last_timings = {"compile_s": 0.0, "execute_s": 0.0,
                              "eval_s": 0.0}
+        self.last_res_norms = None
+
+    def wire_ratio(self, d: int) -> float:
+        """Bytes-on-wire fraction c for a d-float message under the
+        attached compressor (1.0 uncompressed) -- the multiplier for the
+        paper's effective tradeoff r -> r*c."""
+        return (1.0 if self.compression is None
+                else self.compression.wire_ratio(int(d)))
 
     def _get_compiled(self, kind: tuple, jitfn, args: tuple):
         """AOT executable for `jitfn` at these argument shapes, or None when
@@ -398,10 +451,10 @@ class DDASimulator:
             raise ValueError(f"mix must be auto/dense/sparse, got {mix!r}")
         if mix == "dense":
             return "dense"
+        # NOTE: compression deliberately does NOT appear here anymore --
+        # compressed messages ride the fused compress-mix kernel (or the
+        # msg= gather for quantizers) on the sparse path.
         reasons = []
-        if self.compress_keep is not None:
-            reasons.append("compress_keep models compressed transmissions "
-                           "through the dense split")
         if not self.graph.perms:
             reasons.append("graph has no permutation edge set")
         elif self.graph.degree + 1 >= self.graph.n:
@@ -489,9 +542,13 @@ class DDASimulator:
             outs.append(out)
         if not outs:  # T == 0: an empty trace, as the legacy loop returns
             return SimTrace([], [], [], [], [])
-        fv, fvc, dis = (np.concatenate([np.asarray(o[i]) for o in outs])
-                        for i in range(3))
-        return self._assemble_trace(mask_full, T, eval_every, self.r,
+        fv, fvc, dis, rn = (np.concatenate([np.asarray(o[i]) for o in outs])
+                            for i in range(4))
+        self.last_res_norms = rn
+        # compressed messages are cheaper on the wire: the time axis charges
+        # the effective tradeoff r*c (c == 1.0 leaves seeds bit-identical)
+        r_eff = self.r * self.wire_ratio(int(np.prod(x0_stack.shape[1:])))
+        return self._assemble_trace(mask_full, T, eval_every, r_eff,
                                     fv, fvc, dis)
 
     def _assemble_trace(self, mask_full, T, eval_every, r,
@@ -528,6 +585,7 @@ class DDASimulator:
         res = jnp.zeros_like(x0_stack)
         t = jnp.asarray(0.0, jnp.float32)
         n, k = self.graph.n, self.graph.degree
+        r_eff = self.r * self.wire_ratio(int(np.prod(x0_stack.shape[1:])))
         trace = SimTrace([], [], [], [], [])
         sim_time = 0.0
         comm_total = 0
@@ -545,7 +603,7 @@ class DDASimulator:
             done += seg
             n_comm = int(mask.sum())
             comm_total += n_comm
-            sim_time += seg * (1.0 / n) + n_comm * k * self.r
+            sim_time += seg * (1.0 / n) + n_comm * k * r_eff
             t_eval = time.perf_counter()
             xbar = jnp.mean(xhat, axis=0)
             trace.iters.append(done)
@@ -576,7 +634,9 @@ class DDASimulator:
         B = masks.shape[0]
         assert masks.shape == (B, T), masks.shape
         assert len(seeds) == B, (len(seeds), B)
-        rs = [self.r] * B if rs is None else list(rs)
+        c = self.wire_ratio(int(np.prod(x0_stack.shape[1:])))
+        rs = ([self.r * c] * B if rs is None
+              else [float(r) * c for r in rs])
         assert len(rs) == B
 
         self._reset_timings()
@@ -608,8 +668,9 @@ class DDASimulator:
             outs.append(out)
         if not outs:  # T == 0: empty traces, as the legacy loop returns
             return [SimTrace([], [], [], [], []) for _ in range(B)]
-        fv, fvc, dis = (np.concatenate([np.asarray(o[i]) for o in outs],
-                                       axis=1) for i in range(3))
+        fv, fvc, dis, rn = (np.concatenate([np.asarray(o[i]) for o in outs],
+                                           axis=1) for i in range(4))
+        self.last_res_norms = rn
         return [self._assemble_trace(masks[b], T, eval_every, rs[b],
                                      fv[b], fvc[b], dis[b])
                 for b in range(B)]

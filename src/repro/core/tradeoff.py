@@ -90,9 +90,17 @@ def derive_r_from_roofline(
     return t_msg / t_full
 
 
-def iteration_cost(n: int, k: int, r: float) -> float:
-    """Time units per (expensive) iteration -- eq. (9)."""
-    return 1.0 / n + k * r
+def iteration_cost(n: int, k: int, r: float, c: float = 1.0) -> float:
+    """Time units per (expensive) iteration -- eq. (9).
+
+    `c` is the bytes-on-wire compression ratio (`Compressor.wire_ratio`,
+    1.0 uncompressed): compressed gossip transmits c of the bytes, so the
+    per-message cost is r*c and every optimum below shifts as if the link
+    were 1/c times faster. Kept as a separate knob (rather than folding
+    into r at every call site) so predictions can quote both the raw and
+    the effective tradeoff.
+    """
+    return 1.0 / n + k * r * c
 
 
 def time_to_accuracy(
@@ -104,54 +112,64 @@ def time_to_accuracy(
     L: float = 1.0,
     R: float = 1.0,
     schedule: _sched.CommSchedule | None = None,
+    c: float = 1.0,
 ) -> float:
     """tau(eps) in time units for a given topology + schedule.
 
     every-iteration: eq. (10);  periodic-h: eq. (20);  sparse-p: eq. (30/31).
+    `c` is the compression byte ratio (effective per-message cost r*c, see
+    `iteration_cost`); the convergence constants are UNCHANGED by c because
+    error feedback keeps the transmitted averages unbiased -- compression
+    only cheapens the wire term.
     """
     schedule = schedule or _sched.EveryIteration()
     C = schedule.constant(L, R, lam2)
+    rc = r * c
     if isinstance(schedule, _sched.EveryIteration):
         T = (C / eps) ** 2
-        return T * (1.0 / n + k * r)
+        return T * (1.0 / n + k * rc)
     if isinstance(schedule, _sched.Periodic):
         T = (C / eps) ** 2
-        return T * (1.0 / n + k * r / schedule.h)
+        return T * (1.0 / n + k * rc / schedule.h)
     if isinstance(schedule, _sched.PiecewisePeriodic):
         # a spliced schedule's true tau is segment-dependent; quote the
         # pattern it is emitting NOW (h_current), consistent with
         # PiecewisePeriodic.constant -- this is the controller's working
         # prediction, refreshed every retune
         T = (C / eps) ** 2
-        return T * (1.0 / n + k * r / schedule.h_current)
+        return T * (1.0 / n + k * rc / schedule.h_current)
     if isinstance(schedule, _sched.IncreasinglySparse):
         p = schedule.p
         if p >= 0.5:
             return math.inf  # outside the permissible range (paper IV.B)
         T = (C / eps) ** (2.0 / (1.0 - 2.0 * p))
         H = T ** (1.0 / (p + 1.0))
-        return T / n + H * k * r
+        return T / n + H * k * rc
     raise TypeError(f"unknown schedule type {type(schedule)}")
 
 
-def n_opt_complete(r: float) -> float:
-    """Optimal processor count on the complete graph -- eq. (11)."""
-    if r <= 0:
+def n_opt_complete(r: float, c: float = 1.0) -> float:
+    """Optimal processor count on the complete graph -- eq. (11), with the
+    effective per-message cost r*c (compression enlarges the optimal
+    cluster by 1/sqrt(c))."""
+    if r * c <= 0:
         return math.inf
-    return 1.0 / math.sqrt(r)
+    return 1.0 / math.sqrt(r * c)
 
 
-def h_opt(n: int, k: int, r: float, lam2: float) -> float:
-    """Optimal intercommunication interval -- eq. (21)."""
+def h_opt(n: int, k: int, r: float, lam2: float, c: float = 1.0) -> float:
+    """Optimal intercommunication interval -- eq. (21) with effective
+    per-message cost r*c: cheaper messages pull h_opt back toward 1
+    (communicate more often), by sqrt(c)."""
     gap = 1.0 - math.sqrt(min(max(lam2, 0.0), 1.0 - 1e-15))
-    return math.sqrt(n * k * r / (18.0 + 12.0 / gap))
+    return math.sqrt(n * k * r * c / (18.0 + 12.0 / gap))
 
 
-def h_opt_int(n: int, k: int, r: float, lam2: float) -> int:
+def h_opt_int(n: int, k: int, r: float, lam2: float, c: float = 1.0) -> int:
     """Integer interval: h is a count of iterations, so clamp to >= 1.
     Matches the paper's Fig. 2 reading of eq. (21): r=0.00089, n=10 complete
     graph gives h_opt < 1 -> 'h_opt = 1' (communicate every iteration)."""
-    return max(1, round(h_opt(n, k, r, lam2)))
+    return max(1, round(h_opt(n, k, r, lam2, c)))
 
 
 # ---------------------------------------------------------------------------

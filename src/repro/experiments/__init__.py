@@ -43,11 +43,15 @@ def __getattr__(name):
     if name in ("FaultPlan", "faultplans"):
         from repro.faults.plan import FaultPlan, faultplans
         return {"FaultPlan": FaultPlan, "faultplans": faultplans}[name]
+    if name in ("Compressor", "compressors"):
+        from repro.compress import Compressor, compressors
+        return {"Compressor": Compressor, "compressors": compressors}[name]
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 __all__ = [
     "ComponentSpec",
+    "Compressor",
     "ExperimentSpec",
     "FaultPlan",
     "LMProblem",
@@ -55,6 +59,7 @@ __all__ = [
     "Registry",
     "RunResult",
     "backends",
+    "compressors",
     "faultplans",
     "problems",
     "run",

@@ -120,18 +120,36 @@ def _target_fields(trace: SimTrace, eps_value: float | None
 
 
 def _dense_predictions(graph: CommGraph, r: float, schedule,
-                       lam2: float) -> dict[str, Any]:
+                       lam2: float, c: float = 1.0) -> dict[str, Any]:
     """Paper design-rule outputs for a dense run -- one definition shared
     by the serial backend and the vmapped sweep executor, so the two can
-    never drift."""
+    never drift. `c` is the compressor's bytes-on-wire ratio: every
+    optimum is quoted at the effective tradeoff r*c (see core.tradeoff)."""
     return {
         "r": r,
-        "n_opt": _tradeoff.n_opt_complete(r),
-        "h_opt": _tradeoff.h_opt_int(graph.n, graph.degree, r, lam2),
+        "wire_ratio": c,
+        "n_opt": _tradeoff.n_opt_complete(r, c),
+        "h_opt": _tradeoff.h_opt_int(graph.n, graph.degree, r, lam2, c),
         "tau_eps": _tradeoff.time_to_accuracy(
             PREDICT_EPS, graph.n, graph.degree, r, lam2,
-            schedule=schedule),
+            schedule=schedule, c=c),
     }
+
+
+def _compression_block(kind: str, ratio: float, full_bytes: float,
+                       wire_bytes: float, residual_norms
+                       ) -> dict[str, Any]:
+    """The canonical `RunMetrics.compression` record -- one definition for
+    dense, vmapped and netsim runs: the compressor kind, its bytes-on-wire
+    ratio, how many bytes compression kept off the wire, and the mean
+    per-node error-feedback residual norm at each trace point."""
+    if residual_norms is None:
+        rns: list[float] = []
+    else:
+        rns = [float(v) for v in np.asarray(residual_norms).ravel()]
+    return {"kind": kind, "wire_ratio": float(ratio),
+            "bytes_saved": float(max(full_bytes - wire_bytes, 0.0)),
+            "residual_norms": rns}
 
 
 # ---------------------------------------------------------------------------
@@ -139,14 +157,15 @@ def _dense_predictions(graph: CommGraph, r: float, schedule,
 # ---------------------------------------------------------------------------
 
 
-def _dense_message_counts(trace: SimTrace, n: int, k: int,
-                          d: int) -> dict[str, Any]:
+def _dense_message_counts(trace: SimTrace, n: int, k: int, d: int,
+                          ratio: float = 1.0) -> dict[str, Any]:
     """Closed-form message accounting for a dense run: each gossip round
-    is every node shipping its d-vector to its k neighbors."""
+    is every node shipping its d-vector to its k neighbors; `ratio` is the
+    compressor's wire ratio (bytes actually crossing the wire)."""
     rounds = int(trace.comms[-1]) if trace.comms else 0
     msgs = rounds * n * k
     return {"gossip_rounds": rounds, "msgs": msgs,
-            "bytes_on_wire": float(msgs * d * _DENSE_SCALAR_BYTES)}
+            "bytes_on_wire": float(msgs * d * _DENSE_SCALAR_BYTES * ratio)}
 
 
 def _dense_parts(spec: ExperimentSpec, backend: ComponentSpec
@@ -163,6 +182,15 @@ def _dense_parts(spec: ExperimentSpec, backend: ComponentSpec
     mix = params.pop("mix", "auto")
     loop = params.pop("loop", "scan")
     _require(not params, f"dense backend has unknown params {sorted(params)}")
+    compression = None
+    if spec.compression is not None:
+        _require(compress_keep is None,
+                 "backend param 'compress_keep' and spec.compression are "
+                 "mutually exclusive; spec.compression is the canonical "
+                 "compression axis (kind 'topk' subsumes compress_keep)")
+        from repro.compress import build_compressor
+        compression = build_compressor(spec.compression.kind,
+                                       dict(spec.compression.params))
     problem = _build_problem(spec)
     _require(isinstance(problem, C.Problem),
              f"dense backend cannot run problem kind "
@@ -180,7 +208,8 @@ def _dense_parts(spec: ExperimentSpec, backend: ComponentSpec
     return dict(problem=problem, graph=graph,
                 schedule=_build_schedule(spec),
                 a_fn=_build_stepsize(spec),
-                compress_keep=compress_keep, mix=mix, loop=loop)
+                compress_keep=compress_keep, compression=compression,
+                mix=mix, loop=loop)
 
 
 def _dense_sim(spec: ExperimentSpec, parts: dict[str, Any]) -> DDASimulator:
@@ -196,6 +225,7 @@ def _dense_sim(spec: ExperimentSpec, parts: dict[str, Any]) -> DDASimulator:
                         parts["graph"], parts["schedule"],
                         a_fn=parts["a_fn"], r=spec.r,
                         compress_keep=parts["compress_keep"],
+                        compression=parts["compression"],
                         mix=parts["mix"], projection=problem.projection)
 
 
@@ -254,7 +284,14 @@ def _run_dense_leased(spec: ExperimentSpec, backend: ComponentSpec,
         from repro.adaptive import AdaptiveSchedule, DenseController
         _require(isinstance(schedule, AdaptiveSchedule),
                  "a controller run needs schedule kind 'adaptive'")
-        ctrl = DenseController(schedule, **spec.controller.params)
+        ctrl_params = dict(spec.controller.params)
+        if sim.compression is not None:
+            # the dense tracker's r_hat comes from wall-clock timings that
+            # do NOT shrink with compression; tell the controller the wire
+            # ratio so its retunes target the effective tradeoff r*c
+            ctrl_params.setdefault("wire_ratio",
+                                   sim.wire_ratio(problem.d))
+        ctrl = DenseController(schedule, **ctrl_params)
         ctrl.attach_tracer(tr)
         timings: dict[str, Any] = {"compile_s": 0.0, "iter_walls": []}
         t0 = time.perf_counter()
@@ -298,11 +335,21 @@ def _run_dense_leased(spec: ExperimentSpec, backend: ComponentSpec,
     metrics_fields["execute_s"] = max(wall - compile_s, 0.0)
     metrics_fields["compile_s"] = min(compile_s, wall)
     eps_value, tta = _target_fields(trace, _eps_value(spec, problem))
+    ratio = sim.wire_ratio(problem.d)
     predictions = _dense_predictions(graph, spec.r, schedule,
-                                     graph.lambda2())
-    metrics = RunMetrics.from_tracer(
-        tr, **metrics_fields,
-        **_dense_message_counts(trace, problem.n, graph.degree, problem.d))
+                                     graph.lambda2(), c=ratio)
+    counts = _dense_message_counts(trace, problem.n, graph.degree,
+                                   problem.d, ratio=ratio)
+    if sim.compression is not None:
+        comp_block = _compression_block(
+            sim.compression.kind, ratio,
+            full_bytes=float(counts["msgs"] * problem.d
+                             * _DENSE_SCALAR_BYTES),
+            wire_bytes=counts["bytes_on_wire"],
+            residual_norms=sim.last_res_norms)
+        extras["compression"] = comp_block
+        metrics_fields["compression"] = comp_block
+    metrics = RunMetrics.from_tracer(tr, **metrics_fields, **counts)
     return RunResult(spec=spec, backend=backend, trace=trace, wall_s=wall,
                      eps_value=eps_value, time_to_target=tta,
                      predictions=predictions, extras=extras,
@@ -347,6 +394,7 @@ def _dense_adaptive_run(sim: DDASimulator, ctrl, x0, T: int,
     import jax.numpy as jnp
 
     n, k = sim.graph.n, sim.graph.degree
+    r_eff = sim.r * sim.wire_ratio(int(np.prod(x0.shape[1:])))
     ctrl.bind(n, k, sim.graph.lambda2())
     sched = sim.schedule
     z = jnp.zeros_like(x0)
@@ -355,6 +403,7 @@ def _dense_adaptive_run(sim: DDASimulator, ctrl, x0, T: int,
     res = jnp.zeros_like(x0)
     t = jnp.asarray(0.0, jnp.float32)
     trace = SimTrace([], [], [], [], [])
+    res_norms: list[float] = []
     sim_time = 0.0
     comm_total = 0
     root = jax.random.PRNGKey(seed)
@@ -387,7 +436,7 @@ def _dense_adaptive_run(sim: DDASimulator, ctrl, x0, T: int,
             done += chunk
             if comm:
                 comm_total += chunk
-                sim_time += chunk * (1.0 / n + k * sim.r)
+                sim_time += chunk * (1.0 / n + k * r_eff)
             else:
                 sim_time += chunk * (1.0 / n)
         xbar = jnp.mean(xhat, axis=0)
@@ -397,8 +446,13 @@ def _dense_adaptive_run(sim: DDASimulator, ctrl, x0, T: int,
         trace.fvals_consensus.append(float(sim.eval_fn(xbar)))
         trace.comms.append(comm_total)
         trace.disagreement.append(float(_cons.disagreement(z)))
+        if sim.compression is not None:
+            res_norms.append(float(jnp.mean(jnp.linalg.norm(
+                res.reshape(n, -1), axis=1))))
         if done < T:  # a splice at the frontier T would shape zero
             ctrl.maybe_retune(done)  # iterations: don't record phantoms
+    sim.last_res_norms = (np.asarray(res_norms)
+                          if sim.compression is not None else None)
     return trace
 
 
@@ -494,6 +548,12 @@ def _run_netsim(spec: ExperimentSpec, backend: ComponentSpec,
             plan = C.build_component(faultplans, spec.faults.kind,
                                      spec.faults.params, n=problem.n)
 
+        compression = None
+        if spec.compression is not None:
+            from repro.compress import build_compressor
+            compression = build_compressor(spec.compression.kind,
+                                           dict(spec.compression.params))
+
         sim = NetSimulator(scenario, problem.grad_fn, problem.eval_fn,
                            a_fn=a_fn,
                            schedule=None if ctrl is not None else schedule,
@@ -501,7 +561,7 @@ def _run_netsim(spec: ExperimentSpec, backend: ComponentSpec,
                            pushsum_w_floor=pushsum_w_floor,
                            pushsum_inject=pushsum_inject,
                            engine=engine, controller=ctrl, tracer=tr,
-                           faults=plan)
+                           faults=plan, compression=compression)
     x0 = np.zeros((problem.n, problem.d))
     time_limit = math.inf if spec.time_limit is None else spec.time_limit
     t0 = time.perf_counter()
@@ -525,10 +585,21 @@ def _run_netsim(spec: ExperimentSpec, backend: ComponentSpec,
         compile_s=0.0,  # event loops are host numpy: nothing compiles
         execute_s=wall,
         msgs=sim.sent,
-        bytes_on_wire=float(sim.sent * scenario.message_bytes),
+        # wire_bytes is message_bytes scaled by the compressor's ratio
+        # (identical when uncompressed): bytes that actually crossed links
+        bytes_on_wire=float(sim.sent * sim.net.wire_bytes),
         drops=sim.drops,
         gossip_rounds=int(trace.comms[-1]) if trace.comms else 0,
         step_time_quantiles=sample_quantiles(sim.compute_times, "sim"))
+    if sim.compression is not None:
+        comp_block = _compression_block(
+            sim.compression.kind,
+            sim.net.wire_bytes / sim.net.message_bytes,
+            full_bytes=float(sim.sent * sim.net.message_bytes),
+            wire_bytes=float(sim.sent * sim.net.wire_bytes),
+            residual_norms=sim.comp_res_norms)
+        extras["compression"] = comp_block
+        metrics_fields["compression"] = comp_block
     if plan is not None:
         faults_block = {**(sim.fault_stats or {}),
                         "retransmits": sim.retransmits}
@@ -862,21 +933,36 @@ def _dense_batch_results(cells: Sequence[ExperimentSpec],
     # one compile serves every lane: amortize it evenly so per-lane
     # compile_s + execute_s == wall_s holds just like the serial path
     lane_compile = min(sim.last_timings["compile_s"] / B, lane_wall)
+    ratio = sim.wire_ratio(problem.d)
+    rn_all = sim.last_res_norms  # (B, S) from run_batch, or None
     results = []
-    for c, bk, sched, trc in zip(cells, resolved, schedules, traces):
+    for i, (c, bk, sched, trc) in enumerate(zip(cells, resolved,
+                                                schedules, traces)):
         eps_value, tta = _target_fields(trc, _eps_value(c, problem))
-        predictions = _dense_predictions(graph, c.r, sched, lam2)
+        predictions = _dense_predictions(graph, c.r, sched, lam2, c=ratio)
+        counts = _dense_message_counts(trc, problem.n, graph.degree,
+                                       problem.d, ratio=ratio)
+        extras = {"mix_mode": sim.mix_mode, lane_counter: B}
+        comp_block = None
+        if sim.compression is not None:
+            comp_block = _compression_block(
+                sim.compression.kind, ratio,
+                full_bytes=float(counts["msgs"] * problem.d
+                                 * _DENSE_SCALAR_BYTES),
+                wire_bytes=counts["bytes_on_wire"],
+                residual_norms=None if rn_all is None else rn_all[i])
+            extras["compression"] = comp_block
         metrics = RunMetrics(
             compile_s=lane_compile,
             execute_s=max(lane_wall - lane_compile, 0.0),
             counters={lane_counter: float(B)},
-            **_dense_message_counts(trc, problem.n, graph.degree,
-                                    problem.d))
+            compression=comp_block,
+            **counts)
         results.append(RunResult(
             spec=c, backend=bk, trace=trc, wall_s=lane_wall,
             eps_value=eps_value, time_to_target=tta,
             predictions=predictions,
-            extras={"mix_mode": sim.mix_mode, lane_counter: B},
+            extras=extras,
             metrics=metrics))
     return results
 

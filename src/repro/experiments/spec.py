@@ -111,6 +111,14 @@ class ExperimentSpec:
       faults:    optional faultplans-registry component ("plan": explicit
                  FaultPlan fields, "churn": rotating crash/restart waves).
                  Netsim backends only; the builder receives the problem's n.
+      compression: optional compressors-registry component ("topk",
+                 "randk", "int8"; "none" is the same as leaving it unset).
+                 Dense backend: compressed gossip with error feedback
+                 inside the scanned program (sparse mix path when the
+                 topology allows). Netsim: sender-side compression plus
+                 wire_bytes scaling, so bandwidth-limited links feel the
+                 ratio. Enters the serve cache signature and vmap lane
+                 key like every other top-level field.
       T:         iterations per node (launch: training steps).
       eval_every: trace evaluation cadence (iterations per node).
       seed:      run RNG seed (problem seeds live in problem params).
@@ -135,6 +143,7 @@ class ExperimentSpec:
         default_factory=lambda: ComponentSpec("sqrt", {"A": 1.0}))
     controller: ComponentSpec | None = None
     faults: ComponentSpec | None = None
+    compression: ComponentSpec | None = None
     T: int = 1000
     eval_every: int = 25
     seed: int = 0
@@ -153,6 +162,9 @@ class ExperimentSpec:
                                _component(self.controller))
         if self.faults is not None:
             object.__setattr__(self, "faults", _component(self.faults))
+        if self.compression is not None:
+            object.__setattr__(self, "compression",
+                               _component(self.compression))
         backends = tuple(_component(b) for b in self.backends)
         if not backends:
             raise ValueError("spec must declare at least one backend")
@@ -187,6 +199,8 @@ class ExperimentSpec:
                            else self.controller.to_dict()),
             "faults": (None if self.faults is None
                        else self.faults.to_dict()),
+            "compression": (None if self.compression is None
+                            else self.compression.to_dict()),
             "T": self.T,
             "eval_every": self.eval_every,
             "seed": self.seed,

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.compress_mix import compress_mix_weighted as _compress_w
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.gossip_mix import (_LANES, _SUBLANES, _TILE,
                                       gossip_mix as _gossip,
@@ -61,7 +62,7 @@ def gossip_mix(self_buf, neighbor_bufs, self_weight: float,
     return out[:M]
 
 
-def gossip_gather_mix_impl(z, S_in, w_self, w_edge, *,
+def gossip_gather_mix_impl(z, S_in, w_self, w_edge, *, msg=None,
                            interpret: bool | None = None,
                            use_kernel: bool | None = None):
     """Sparse consensus round on a stacked z: neighbor-index gather + the
@@ -71,7 +72,10 @@ def gossip_gather_mix_impl(z, S_in, w_self, w_edge, *,
     (S_in[i, j] = the node whose value node i receives in slot j);
     w_self: (n,); w_edge: (n, k). Equals `W @ z.reshape(n, -1)` for the
     mixing matrix W with diag(W) = w_self and W[i, S_in[i, j]] summing
-    w_edge[i, j] over slots.
+    w_edge[i, j] over slots. `msg` (same shape as z) substitutes the
+    TRANSMITTED stack for the neighbor gathers -- quantized gossip ships
+    the dequantized `msg` while the diagonal keeps each node's exact own
+    z -- and defaults to z itself (uncompressed).
 
     Dispatch: on compiled backends (`use_kernel=True`, the default when not
     interpreting) the gather feeds the Pallas kernel, which makes the k+1
@@ -86,7 +90,7 @@ def gossip_gather_mix_impl(z, S_in, w_self, w_edge, *,
     interpret = _default_interpret() if interpret is None else interpret
     use_kernel = (not interpret) if use_kernel is None else use_kernel
     if not use_kernel:
-        return ref.gossip_gather_mix_ref(z, S_in, w_self, w_edge)
+        return ref.gossip_gather_mix_ref(z, S_in, w_self, w_edge, msg=msg)
     n, k = S_in.shape
     # the kernel consumes weight VECTORS; scalar (uniform) weights are just
     # constant columns
@@ -95,11 +99,12 @@ def gossip_gather_mix_impl(z, S_in, w_self, w_edge, *,
     if jnp.ndim(w_edge) == 0:
         w_edge = jnp.full((n, k), w_edge, jnp.float32)
     zf = z.reshape(n, -1)
+    mf = zf if msg is None else msg.reshape(n, -1)
     M = zf.shape[1]
     pad_n = (-n) % _SUBLANES
     pad_m = (-M) % _LANES
     sb = jnp.pad(zf, ((0, pad_n), (0, pad_m)))
-    nbr = jnp.pad(jnp.moveaxis(zf[S_in], 1, 0),
+    nbr = jnp.pad(jnp.moveaxis(mf[S_in], 1, 0),
                   ((0, 0), (0, pad_n), (0, pad_m)))
     ws = jnp.pad(w_self, (0, pad_n))
     we = jnp.pad(w_edge, ((0, pad_n), (0, 0)))
@@ -107,12 +112,56 @@ def gossip_gather_mix_impl(z, S_in, w_self, w_edge, *,
     return out[:n, :M].astype(z.dtype).reshape(z.shape)
 
 
-#: jitted front door; hot loops that are already inside their own jit call
-#: `gossip_gather_mix_impl` directly so the mix inlines into the caller's
+def compress_mix_impl(z, msg, mask, S_in, w_self, w_edge, *,
+                      interpret: bool | None = None,
+                      use_kernel: bool | None = None):
+    """Fused sparsified consensus round: gather each in-neighbor's
+    corrected message AND its 0/1 transmitted support, then accumulate
+    `w_self[i] z[i] + sum_j w_edge[i, j] (msg ⊙ mask)[S_in[i, j]]` in one
+    VMEM-resident pass (`compress_mix.compress_mix_weighted`) -- the
+    sparsify multiply rides the bandwidth-bound mix for free, which is
+    what lets top-k/rand-k gossip stay on the O(nkd) sparse path instead
+    of forcing the dense matmul split.
+
+    Shapes and the ref/kernel dispatch contract match
+    `gossip_gather_mix_impl`; `mask` is 0/1 in z's dtype.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    use_kernel = (not interpret) if use_kernel is None else use_kernel
+    if not use_kernel:
+        return ref.compress_mix_ref(z, msg, mask, S_in, w_self, w_edge)
+    n, k = S_in.shape
+    if jnp.ndim(w_self) == 0:
+        w_self = jnp.full((n,), w_self, jnp.float32)
+    if jnp.ndim(w_edge) == 0:
+        w_edge = jnp.full((n, k), w_edge, jnp.float32)
+    zf = z.reshape(n, -1)
+    mf = msg.reshape(n, -1)
+    kf = mask.reshape(n, -1)
+    M = zf.shape[1]
+    pad_n = (-n) % _SUBLANES
+    pad_m = (-M) % _LANES
+    sb = jnp.pad(zf, ((0, pad_n), (0, pad_m)))
+    nbr = jnp.pad(jnp.moveaxis(mf[S_in], 1, 0),
+                  ((0, 0), (0, pad_n), (0, pad_m)))
+    msk = jnp.pad(jnp.moveaxis(kf[S_in], 1, 0),
+                  ((0, 0), (0, pad_n), (0, pad_m)))
+    ws = jnp.pad(w_self, (0, pad_n))
+    we = jnp.pad(w_edge, ((0, pad_n), (0, 0)))
+    out = _compress_w(sb, nbr, msk, ws, we, interpret=interpret)
+    return out[:n, :M].astype(z.dtype).reshape(z.shape)
+
+
+#: jitted front doors; hot loops that are already inside their own jit call
+#: the `_impl` functions directly so the mix inlines into the caller's
 #: program (a nested pjit is a fusion boundary XLA will not cross)
 gossip_gather_mix = functools.partial(
     jax.jit, static_argnames=("interpret", "use_kernel"))(
         gossip_gather_mix_impl)
+compress_mix = functools.partial(
+    jax.jit, static_argnames=("interpret", "use_kernel"))(
+        compress_mix_impl)
 
 __all__ = ["flash_attention", "selective_scan", "ssd_scan", "gossip_mix",
-           "gossip_gather_mix", "gossip_gather_mix_impl", "ref"]
+           "gossip_gather_mix", "gossip_gather_mix_impl",
+           "compress_mix", "compress_mix_impl", "ref"]

@@ -98,21 +98,39 @@ def gossip_mix_weighted_ref(self_buf, neighbor_bufs, w_self, w_edge
     return acc.astype(self_buf.dtype)
 
 
-def gossip_gather_mix_ref(z, S_in, w_self, w_edge) -> jax.Array:
+def gossip_gather_mix_ref(z, S_in, w_self, w_edge, msg=None) -> jax.Array:
     """One sparse consensus round on a stacked z, as a gather + weighted sum:
-    out[i] = w_self[i] z[i] + sum_j w_edge[i, j] z[S_in[i, j]].
+    out[i] = w_self[i] z[i] + sum_j w_edge[i, j] src[S_in[i, j]].
     z: (n, ...); S_in: (n, K) in-neighbor indices; w_self: (n,) or scalar;
     w_edge: (n, K) or scalar (uniform lazy weights: one multiply over the
-    summed gathers instead of K weight broadcasts)."""
+    summed gathers instead of K weight broadcasts). `msg` (same shape as
+    z) substitutes the TRANSMITTED stack for the neighbor gathers --
+    compressed gossip ships `msg` while the diagonal keeps the node's
+    exact own z -- and defaults to z itself (uncompressed)."""
     n, k = S_in.shape
     zf = z.reshape(n, -1).astype(jnp.float32)
+    mf = zf if msg is None else msg.reshape(n, -1).astype(jnp.float32)
     if jnp.ndim(w_edge) == 0:
-        acc = zf[S_in[:, 0]]
+        acc = mf[S_in[:, 0]]
         for j in range(1, k):
-            acc = acc + zf[S_in[:, j]]
+            acc = acc + mf[S_in[:, j]]
         out = w_self * zf + w_edge * acc
         return out.astype(z.dtype).reshape(z.shape)
     acc = w_self[:, None] * zf
     for j in range(k):
-        acc = acc + w_edge[:, j][:, None] * zf[S_in[:, j]]
+        acc = acc + w_edge[:, j][:, None] * mf[S_in[:, j]]
     return acc.astype(z.dtype).reshape(z.shape)
+
+
+def compress_mix_ref(z, msg, mask, S_in, w_self, w_edge) -> jax.Array:
+    """Masked (sparsified) consensus round:
+    out[i] = w_self[i] z[i]
+             + sum_j w_edge[i, j] (msg ⊙ mask)[S_in[i, j]].
+    z/msg/mask: (n, ...) with mask the 0/1 transmitted support; S_in:
+    (n, K); weights as in `gossip_gather_mix_ref`. The allclose target for
+    `compress_mix.compress_mix_weighted`."""
+    n = S_in.shape[0]
+    sent = (msg.reshape(n, -1).astype(jnp.float32)
+            * mask.reshape(n, -1).astype(jnp.float32))
+    return gossip_gather_mix_ref(z, S_in, w_self, w_edge,
+                                 msg=sent.reshape(z.shape))

@@ -248,6 +248,9 @@ class ObjectEngine:
         self.sent = 0
         self.rewires = 0
         self.retransmits = 0
+        # mean per-node error-feedback residual norm at each trace point
+        # (empty when sim.compression is None)
+        self.comp_res_norms: list[float] = []
         self._fr = None  # FaultRuntime when sim.faults is set
         # detail tracing resolves to one pre-computed local, so the hot
         # path carries exactly one `if tr is not None` branch per event
@@ -268,7 +271,8 @@ class ObjectEngine:
                                       inject=sim.pushsum_inject)
             else:
                 node = AsyncDDANode(i, x0_stack[i], sim.grad_fn, sim.a_fn,
-                                    sim.schedule, sim.projection)
+                                    sim.schedule, sim.projection,
+                                    compression=sim.compression)
             self.nodes.append(node)
 
     def _step_busy(self, i: int) -> float:
@@ -465,6 +469,10 @@ class ObjectEngine:
             self._tr.add_instant("eval", now, track="net",
                                  steps=int(total_steps))
         mask = self._fr.record_mask() if self._fr is not None else None
+        if self.sim.compression is not None:
+            res = np.stack([nd._comp_res for nd in self.nodes])
+            self.comp_res_norms.append(float(np.mean(
+                np.linalg.norm(res.reshape(n, -1), axis=1))))
         _record_stacks(self.sim, trace, now, total_steps, n, xhat, z,
                        comm_total, mask=mask)
 
@@ -609,6 +617,9 @@ class VectorizedEngine:
         self.sent = 0
         self.rewires = 0
         self.retransmits = 0
+        # mean per-node error-feedback residual norm at each trace point
+        # (empty when sim.compression is None)
+        self.comp_res_norms: list[float] = []
         self._fr = None  # FaultRuntime when sim.faults is set
         self._retry_on = False
         self._flight_chunks: list[np.ndarray] = []
@@ -665,7 +676,7 @@ class VectorizedEngine:
                         busy += net.serialize_time(i, int(S_out[i, slot]))
                     send_busy[i] = busy
             else:
-                busy, s = 0.0, net.link.serialize(net.message_bytes)
+                busy, s = 0.0, net.link.serialize(net.wire_bytes)
                 for _ in range(k):
                     busy += s
                 send_busy[:] = busy
@@ -687,7 +698,7 @@ class VectorizedEngine:
                 keep = rng.random(m) >= link.loss
             else:
                 keep = np.ones(m, dtype=bool)
-            s = link.serialize(net.message_bytes)
+            s = link.serialize(net.wire_bytes)
             flight = s + link.latency
             extra = max(flight - s, 0.0)
             return (keep, np.full(m, flight), np.full(m, extra))
@@ -806,6 +817,9 @@ class VectorizedEngine:
             self.z = np.zeros_like(self.x)
             self.stamp = np.zeros((n, n), dtype=np.int64)
             self.val = _EdgeStore(n, self.tail)
+            # sender-side error-feedback residuals (compressed gossip)
+            self.comp_res = (np.zeros_like(self.x)
+                             if sim.compression is not None else None)
 
     def _z_est_all(self) -> np.ndarray:
         if self.algorithm == "pushsum":
@@ -971,6 +985,9 @@ class VectorizedEngine:
             self._tr.add_instant("eval", now, track="net",
                                  steps=int(total_steps))
         mask = self._fr.record_mask() if self._fr is not None else None
+        if self.sim.compression is not None:
+            self.comp_res_norms.append(float(np.mean(np.linalg.norm(
+                self.comp_res.reshape(self.n, -1), axis=1))))
         _record_stacks(self.sim, trace, now, total_steps, self.n, self.xhat,
                        self._z_est_all(), int(self.comm_iters.sum()),
                        mask=mask)
@@ -1076,7 +1093,22 @@ class VectorizedEngine:
         """Communication iteration for a batch of stale-gossip DDA nodes:
         snapshot pre-mix z, ship it, then mix-with-latest + gradient."""
         k = self.k
-        buf = self.z[ci].copy()  # one shared snapshot for all k messages
+        comp = self.sim.compression
+        if comp is None:
+            buf = self.z[ci].copy()  # one shared snapshot for all k messages
+        else:
+            # sender-side error feedback. `compress_np` is a pure function
+            # of (row, node, stamp) -- per-message RNG is seeded from the
+            # (compressor seed, node, stamp) triple, never drawn from the
+            # engine stream -- so this row-at-a-time loop produces exactly
+            # the payloads the object engine's per-node path does,
+            # regardless of event interleaving (bit-identity contract).
+            corrected = self.z[ci] + self.comp_res[ci]
+            buf = np.stack([
+                comp.compress_np(corrected[j], int(ci[j]), int(stamps[j]))
+                for j in range(len(ci))])
+            if comp.error_feedback:
+                self.comp_res[ci] = corrected - buf
         # batched stale mix: accumulate in-neighbor slots in slot order,
         # folding never-delivered neighbors back into the self weight
         g = self.graph
@@ -1289,8 +1321,11 @@ class VectorizedEngine:
                     node.rho_w[int(src)] = float(self.rho.w[r])
             else:
                 node = AsyncDDANode(i, self.x[i], sim.grad_fn, sim.a_fn,
-                                    sim.schedule, sim.projection)
+                                    sim.schedule, sim.projection,
+                                    compression=sim.compression)
                 node.z = self.z[i].copy()
+                if sim.compression is not None:
+                    node._comp_res = self.comp_res[i].copy()
                 for src in np.nonzero(self.stamp[i] > 0)[0]:
                     r = self.val.eid[i, src]
                     node.inbox[int(src)] = (int(self.stamp[i, src]),

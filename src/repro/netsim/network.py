@@ -129,6 +129,13 @@ class Network:
         self.epoch = 0
         self.link = link
         self.message_bytes = float(message_bytes)
+        # Bytes that actually cross the wire per message. Equal to
+        # `message_bytes` uncompressed; `NetSimulator` scales it by the
+        # attached compressor's `wire_ratio` so bandwidth-limited links
+        # (LinkModel.serialize) genuinely feel the compression ratio,
+        # while `message_bytes` stays the calibration constant scenarios
+        # derive link bandwidth from (bw = message_bytes / r).
+        self.wire_bytes = self.message_bytes
         self.link_overrides = dict(link_overrides or {})
         n = topology.n
         self.node_specs = list(node_specs or [NodeSpec()] * n)
@@ -186,7 +193,7 @@ class Network:
         return self.link_overrides.get((src, dst), self.link)
 
     def serialize_time(self, src: int, dst: int) -> float:
-        return self.link_for(src, dst).serialize(self.message_bytes)
+        return self.link_for(src, dst).serialize(self.wire_bytes)
 
     def send_busy_time(self, i: int) -> float:
         """NIC occupancy for one full gossip round from node i (the k*r
@@ -195,7 +202,7 @@ class Network:
 
     def sample_flight(self, src: int, dst: int,
                       rng: np.random.Generator) -> float | None:
-        return self.link_for(src, dst).sample_flight(self.message_bytes, rng)
+        return self.link_for(src, dst).sample_flight(self.wire_bytes, rng)
 
     def local_step_time(self, i: int) -> float:
         """One local (sub)gradient step on node i's 1/n data shard."""

@@ -91,11 +91,22 @@ class _NodeBase:
 
 
 class AsyncDDANode(_NodeBase):
-    def __init__(self, i, x0, grad_fn, a_fn, schedule=None, projection=None):
+    def __init__(self, i, x0, grad_fn, a_fn, schedule=None, projection=None,
+                 compression=None):
         super().__init__(i, x0, grad_fn, a_fn, schedule, projection)
         self.z = np.zeros_like(self.x)
         # latest value per in-neighbor: src -> (sender iteration stamp, z)
         self.inbox: dict[int, tuple[int, np.ndarray]] = {}
+        # Optional `repro.compress.Compressor`: outgoing payloads are
+        # compressed with error feedback (the residual lives HERE, on the
+        # sender), while the node's own z stays exact -- mirroring
+        # DDASimulator's diagonal semantics where compression only touches
+        # what crosses the wire. `compress_np` is a pure function of
+        # (message, node, stamp), so the vectorized engine reproduces these
+        # payloads bit-for-bit regardless of event interleaving.
+        self.compression = compression
+        self._comp_res = (None if compression is None
+                          else np.zeros_like(self.x))
 
     @property
     def z_est(self) -> np.ndarray:
@@ -143,7 +154,15 @@ class AsyncDDANode(_NodeBase):
                           dtype=np.float64)
         msgs: list[tuple[int, Any]] = []
         if t_new == self.next_comm:
-            payload = (t_new, self.z.copy())  # ship pre-mix z (mix_stale)
+            comp = self.compression
+            if comp is None:
+                buf = self.z.copy()  # ship pre-mix z (mix_stale)
+            else:
+                corrected = self.z + self._comp_res
+                buf = comp.compress_np(corrected, self.i, t_new)
+                if comp.error_feedback:
+                    self._comp_res = corrected - buf
+            payload = (t_new, buf)
             msgs = [(dst, payload) for dst in net.out_neighbors(self.i)]
             z_new = self._stale_mix(net) + grad
             self.next_comm = self.schedule.next_comm_step(t_new)

@@ -109,6 +109,16 @@ class NetSimulator:
         injected gradient at its true magnitude through the ratio estimate
         instead of amplifying it by 1/w (see PushSumDDANode). Push-sum
         only; opt-in because it changes seeded trajectories.
+      compression: optional `repro.compress.Compressor` -- every gossip
+        payload is compressed on the sender with error feedback (residuals
+        live on the sender; receivers see dequantized/dense-layout
+        messages, so the stale-mix code is unchanged) and the network's
+        `wire_bytes` is scaled by the compressor's byte model, so
+        bandwidth-limited links serialize compressed messages
+        proportionally faster. Requires algorithm="dda"; both engines stay
+        bit-identical because `compress_np` is a pure function of
+        (message, node, stamp). Mutually exclusive with `faults`
+        (checkpoint rows do not carry residual state).
     """
 
     def __init__(self, scenario: Scenario, grad_fn: GradFn,
@@ -124,7 +134,8 @@ class NetSimulator:
                  controller=None,
                  tracer=None,
                  faults=None,
-                 pushsum_inject: str = "plain"):
+                 pushsum_inject: str = "plain",
+                 compression=None):
         if algorithm not in ("dda", "pushsum"):
             raise ValueError(f"unknown algorithm {algorithm!r}")
         if engine not in _ENGINES:
@@ -148,6 +159,28 @@ class NetSimulator:
                     "reset inbox by folding missing weight into the "
                     "self-loop")
             faults.validate_for(scenario.topology.n)
+        if compression is not None:
+            from repro.compress import Compressor
+            if not isinstance(compression, Compressor):
+                raise TypeError(
+                    f"compression must be a repro.compress.Compressor, "
+                    f"got {type(compression).__name__}")
+            if compression.kind == "none":
+                compression = None  # normalize: uncompressed runs stay
+                # byte-for-byte the seed event loop
+            elif algorithm != "dda":
+                raise ValueError(
+                    "compression requires algorithm='dda': push-sum ships "
+                    "cumulative sigma mass counters whose DIFFERENCES carry "
+                    "the information -- quantizing the cumulative totals "
+                    "breaks the conservation invariant mass recovery "
+                    "depends on")
+            elif faults is not None:
+                raise ValueError(
+                    "compression and faults are mutually exclusive: "
+                    "checkpoint/restore rows do not carry error-feedback "
+                    "residual state, so a restored node would replay "
+                    "compression error it already corrected")
         if controller is not None:
             if schedule is not None and schedule is not controller.schedule:
                 raise ValueError(
@@ -176,6 +209,7 @@ class NetSimulator:
         self.pushsum_inject = pushsum_inject
         self.faults = faults
         self.fault_stats: dict | None = None
+        self.compression = compression
         self.engine = engine
         self.net = scenario.build_network()
         self._engine_inst: ObjectEngine | VectorizedEngine | None = None
@@ -191,6 +225,8 @@ class NetSimulator:
         self.sent = 0
         self.rewires = 0
         self.retransmits = 0
+        # mean error-feedback residual norm per trace point (compression on)
+        self.comp_res_norms: list[float] = []
 
     # -- lifecycle ----------------------------------------------------------
 
@@ -212,6 +248,14 @@ class NetSimulator:
         n = self.net.n
         if x0_stack.shape[0] != n:
             raise ValueError(f"x0 must be stacked ({n}, ...)")
+        # compression shrinks what crosses the wire: links keep their
+        # calibrated bandwidth (bw = message_bytes / r) but serialize
+        # wire_ratio(d) of the bytes, so r_effective = r * c on
+        # bandwidth-limited links (and measure_r_empirical sees it)
+        d = int(np.prod(x0_stack.shape[1:]))
+        self.net.wire_bytes = self.net.message_bytes * (
+            1.0 if self.compression is None
+            else self.compression.wire_ratio(d))
         eng = self._resolve_engine()
         self._engine_inst = eng
         trace = eng.run(x0_stack, T, eval_every, time_limit)
@@ -223,6 +267,7 @@ class NetSimulator:
         self.sent += eng.sent
         self.rewires += eng.rewires
         self.retransmits += eng.retransmits
+        self.comp_res_norms.extend(eng.comp_res_norms)
         if eng._fr is not None:
             self.fault_stats = eng._fr.stats()
         self._nodes_cache = None  # re-materialize lazily from the new state

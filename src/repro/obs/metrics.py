@@ -25,6 +25,11 @@ shape regardless of which engine produced it:
     partition epochs, link flaps, checkpoints taken, sends refused at
     partitioned links, and link-layer retransmits); `None` on fault-free
     runs, `{"retransmits": k}` when only bounded retry was configured.
+  * `compression` -- compressed-gossip record for runs with
+    `ExperimentSpec.compression` attached: the compressor `kind`, its
+    bytes-on-wire `wire_ratio` c, `bytes_saved` vs uncompressed payloads,
+    and the `residual_norms` trajectory (mean per-node error-feedback
+    residual norm at each trace point); `None` on uncompressed runs.
   * `phases` / `counters` -- the tracer's aggregates, verbatim.
   * `notes` -- free-form string diagnostics (vmap-fallback reasons, the
     serving packer's solo reasons); empty on clean runs.
@@ -105,6 +110,7 @@ class RunMetrics:
     r_hat_trajectory: tuple = ()
     step_time_quantiles: dict | None = None
     faults: dict | None = None
+    compression: dict | None = None
     phases: dict = dataclasses.field(default_factory=dict)
     counters: dict = dataclasses.field(default_factory=dict)
     #: free-form string diagnostics (e.g. "vmap_fallback": why a sweep

@@ -85,6 +85,20 @@ def render_summary(result: dict) -> str:
         lines.append("faults:")
         lines += _rows([(k, _fmt_num(v)) for k, v in sorted(faults.items())])
 
+    # -- compression ---------------------------------------------------------
+    comp = m.get("compression")
+    if comp:
+        lines.append("compression:")
+        comp_rows = [("kind", comp.get("kind", "?")),
+                     ("wire_ratio", _fmt_num(comp.get("wire_ratio"))),
+                     ("bytes_saved", _fmt_num(comp.get("bytes_saved")))]
+        rns = comp.get("residual_norms") or []
+        if rns:
+            comp_rows.append(
+                ("ef_residual", f"{rns[0]:.4g} @ start -> "
+                                f"{rns[-1]:.4g} @ end ({len(rns)} pts)"))
+        lines += _rows(comp_rows)
+
     # -- step-time quantiles -------------------------------------------------
     q = m.get("step_time_quantiles")
     if q:

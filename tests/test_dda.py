@@ -205,9 +205,10 @@ def test_sparse_mix_weights_matches_dense_weighted():
 
 
 def test_auto_mix_fallbacks():
-    """auto -> dense for complete graphs, compression, and a mix_weights
-    with weight OUTSIDE the graph's edge support (non-regular P); forcing
-    mix="sparse" there raises."""
+    """auto -> dense for complete graphs and for a mix_weights with weight
+    OUTSIDE the graph's edge support (non-regular P); forcing mix="sparse"
+    there raises. Compression does NOT disqualify sparse: compressed
+    messages ride the fused compress-mix gather."""
     n, d = 8, 8
     subgrad, objective, _ = _quadratic_problem(n, d)
     g = _expander(n)
@@ -217,7 +218,7 @@ def test_auto_mix_fallbacks():
     assert DDASimulator(subgrad, obj, complete_graph(n),
                         EveryIteration()).mix_mode == "dense"
     assert DDASimulator(subgrad, obj, g, EveryIteration(),
-                        compress_keep=0.5).mix_mode == "dense"
+                        compress_keep=0.5).mix_mode == "sparse"
     W = g.mixing_matrix()
     W[0, :] = 1.0 / n  # weight on non-edges: not gatherable along edges
     sim = DDASimulator(subgrad, obj, g, EveryIteration(), mix_weights=W)

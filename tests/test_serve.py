@@ -105,6 +105,34 @@ def test_all_comm_lane_keeps_solo_program_variant():
         _assert_identical(got, solo, "mixed ac traffic")
 
 
+def test_compression_splits_lanes_and_cache_entries():
+    """`spec.compression` participates in BOTH serving keys: compressed
+    and uncompressed specs never share a compile-cache entry or a vmap
+    lane (the compressor realizes inside the scanned program), while
+    same-compression traffic still packs -- and the served compressed
+    result is bit-identical to solo repro.run()."""
+    plain = _spec(name="plain")
+    topk = _spec(name="topk",
+                 compression={"kind": "topk", "params": {"keep": 0.25}})
+    topk2 = _spec(name="topk2", seed=1,
+                  compression={"kind": "topk", "params": {"keep": 0.25}})
+    backend = plain.backends[0]
+    assert cache_signature(plain, backend) != cache_signature(topk, backend)
+    assert cache_signature(topk, backend) == cache_signature(topk2, backend)
+    key_plain, _ = lane_key(plain, None)
+    key_topk, _ = lane_key(topk, None)
+    key_topk2, _ = lane_key(topk2, None)
+    assert key_plain is not None and key_topk is not None
+    assert key_plain != key_topk
+    assert key_topk == key_topk2  # same compressor still packs
+    solo = repro.run(topk, backend="dense")
+    with ExperimentServer(workers=1, max_width=4, max_wait_s=0.2) as srv:
+        futs = [srv.submit(s) for s in (topk, topk2, plain)]
+        served = [f.result(timeout=120) for f in futs]
+    _assert_identical(served[0], solo, "compressed spec via server")
+    assert served[0].metrics.compression["kind"] == "topk"
+
+
 def test_adaptive_spec_rides_warm_cache_solo():
     """Satellite: a dense_adaptive (controller) spec is not packable --
     with the stated reason -- but STILL leases the warm simulator, so
@@ -289,6 +317,13 @@ _RELEVANT_VALUES = {
     "stepsize.params.A": [0.25, 0.5, 1.0],
     "T": [20, 40, 60],
     "eval_every": [10, 20],
+    # compression realizes inside the compiled program (support masks,
+    # quantization) and scales the time axis: never share a lane across it
+    "compression": [None,
+                    {"kind": "topk", "params": {"keep": 0.25}},
+                    {"kind": "topk", "params": {"keep": 0.5}},
+                    {"kind": "randk", "params": {"keep": 0.25}},
+                    {"kind": "int8", "params": {}}],
 }
 _RELEVANT_AXES = {axis: st.sampled_from(vals)
                   for axis, vals in _RELEVANT_VALUES.items()}
