@@ -21,18 +21,40 @@ manifest mix under `benchmarks/manifests/`:
     submitted concurrently to a warm server with lane packing ->
     specs/sec, cache hit rate, lane occupancy.
 
+Two robustness axes ride on top of the cache benchmarks:
+
+  * **Pool throughput** (`pool`): the MIXED dense+netsim manifest replay
+    against a fresh multi-process `WorkerPool` server vs the same
+    workload against a fresh in-process server. netsim runs are
+    host-side numpy under the GIL, so worker processes are the only way
+    to overlap them; dense lanes ship through the pipe and must come
+    back bit-identical (equivalence-gated before any timing). Full mode
+    exits nonzero unless pool wall beats in-process wall by
+    --min-pool-speedup (default 1.5x) -- enforced whenever the box has
+    >= 2 usable cores; on a single-core box no process count can beat
+    one process, so the measurement is recorded and the gate is marked
+    hardware-skipped (loudly, never silently).
+  * **Load shedding** (`shedding`): offered load ~3x capacity against a
+    single-threaded server with a bounded admission queue. Overload is
+    answered immediately (`Overloaded` + retry-after hint, counted),
+    never by a timeout, and the p99 of ACCEPTED requests stays bounded
+    by the queue depth instead of growing with the burst.
+
 Results land in BENCH_serve.json (schema in benchmarks/README.md); the
 CI serve-smoke job runs `--smoke` and uploads the JSON. Full mode exits
 nonzero unless warm p50 beats cold p50 by --min-speedup (default 3x).
-Non-dense manifests (netsim/launch) are excluded from the replay -- the
-compile cache is a dense-program cache -- and recorded under
-`config.skipped` with reasons, never silently dropped.
+Non-dense manifests (netsim/launch) are excluded from the cache replay
+-- the compile cache is a dense-program cache -- and recorded under
+`config.skipped` with reasons, never silently dropped; the pool axis
+replays dense AND netsim and skips only launch.
 """
 
 from __future__ import annotations
 
 import argparse
+import concurrent.futures
 import json
+import os
 import pathlib
 import platform
 import time
@@ -41,7 +63,7 @@ import numpy as np
 
 import repro
 from repro.obs import sample_quantiles, write_json_artifact
-from repro.serve import ExperimentServer, comparable_result_dict
+from repro.serve import ExperimentServer, Overloaded, comparable_result_dict
 
 MANIFEST_DIR = pathlib.Path(__file__).parent / "manifests"
 
@@ -169,6 +191,156 @@ def bench_throughput(specs, seeds: int, workers: int,
     }
 
 
+def load_mixed_workload(smoke: bool) -> tuple[list, dict[str, str]]:
+    """((spec, backend_kind) pairs, skipped) for the pool axis.
+
+    Dense AND netsim manifests: dense exercises bit-identity of compiled
+    lanes through the worker pipe, netsim is pure-GIL host numpy -- the
+    work that only real processes can overlap."""
+    pairs, skipped = [], {}
+    for path in sorted(MANIFEST_DIR.glob("*.json")):
+        spec = repro.ExperimentSpec.from_file(path)
+        kinds = [b.kind for b in spec.backends]
+        kind = ("dense" if "dense" in kinds
+                else "netsim" if "netsim" in kinds else None)
+        if kind is None:
+            skipped[spec.name] = (f"declares {kinds}: the pool replay "
+                                  f"covers dense+netsim only")
+            continue
+        if smoke:
+            spec = spec.with_value("T", min(spec.T, 60))
+        pairs.append((spec, kind))
+    return pairs, skipped
+
+
+def bench_pool(pairs, seeds: int, processes: int, threads: int,
+               max_width: int) -> dict:
+    """Multi-process pool vs in-process serving on the mixed replay.
+
+    Equivalence gates FIRST: every pooled result must be bit-identical
+    to a cold solo `repro.run()` -- a worker that computed something
+    else never posts a throughput number. Then the same workload (every
+    manifest x seeds) is replayed against a warmed in-process server
+    and a warmed pool (steady state, the same discipline as
+    `bench_throughput`: spawn + per-worker jax import + first compiles
+    are startup, not throughput). Warm-up submits each distinct spec
+    once per worker sequentially -- dispatch is round-robin, so that
+    reaches every worker's private compile cache. What remains in the
+    timed region is the pool's real tradeoff: pipe serialization per
+    request vs true parallelism for the GIL-bound netsim runs."""
+    solos = {s.name: repro.run(s, backend=k) for s, k in pairs}
+    per_spec = {}
+    with ExperimentServer(workers=threads, processes=processes,
+                          max_width=max_width, max_wait_s=0.05) as srv:
+        futs = [(s.name, srv.submit(s, backend=k)) for s, k in pairs]
+        for name, f in futs:
+            per_spec[name] = _identical(f.result(), solos[name])
+        equiv_pool = srv.stats()["pool"]
+    if not all(per_spec.values()):
+        return {"equivalence": {"ok": False, "per_spec": per_spec}}
+
+    workload = [(s.with_value("seed", 300 + i), k)
+                for i in range(seeds) for s, k in pairs]
+
+    def replay(procs: int) -> tuple[float, dict]:
+        with ExperimentServer(workers=threads, processes=procs,
+                              max_width=max_width, max_wait_s=0.05) as srv:
+            for s, k in pairs:  # warm every worker's cache in turn
+                for _ in range(max(procs, 1)):
+                    srv.submit(s, backend=k).result()
+            # one untimed workload pass: packed seed-variant lanes
+            # compile a WIDER program than the solo warm-up did
+            warm = [srv.submit(s, backend=k) for s, k in workload]
+            for f in warm:
+                f.result()
+            t0 = time.perf_counter()
+            futs = [srv.submit(s, backend=k) for s, k in workload]
+            for f in futs:
+                f.result()
+            wall = time.perf_counter() - t0
+            return wall, srv.stats()
+
+    single_wall, single_stats = replay(0)
+    pool_wall, pool_stats = replay(processes)
+    try:
+        cores = len(os.sched_getaffinity(0))
+    except AttributeError:
+        cores = os.cpu_count() or 1
+    return {
+        "equivalence": {"ok": True, "per_spec": per_spec,
+                        "pool": equiv_pool},
+        "specs": len(workload), "seeds_per_manifest": seeds,
+        "threads": threads, "processes": processes, "cores": cores,
+        "single_process": {
+            "wall_s": round(single_wall, 4),
+            "specs_per_sec": round(len(workload) / single_wall, 2)},
+        "pool": {
+            "wall_s": round(pool_wall, 4),
+            "specs_per_sec": round(len(workload) / pool_wall, 2),
+            "worker_restarts": pool_stats["pool"]["worker_restarts"],
+            "reenqueues": pool_stats["pool"]["reenqueues"]},
+        "speedup": round(single_wall / pool_wall, 2),
+    }
+
+
+def bench_shedding(pairs, burst: int, max_queue: int,
+                   overdrive: float = 3.0) -> dict:
+    """Offered load beyond capacity: shed fast, never time out.
+
+    One netsim manifest (fixed per-run cost, no compile jitter) is
+    offered at ~overdrive x the single-threaded server's capacity with
+    an admission queue capped at `max_queue`. Requests past the cap are
+    answered immediately with `Overloaded` (+ retry-after hint); the
+    requests that ARE admitted wait behind at most `max_queue` peers, so
+    their p99 is bounded by the queue depth -- not by the burst size,
+    which is what an unbounded queue would produce."""
+    spec, kind = next((s, k) for s, k in pairs if k == "netsim")
+    t0 = time.perf_counter()
+    repro.run(spec, backend=kind)
+    unit_s = time.perf_counter() - t0
+
+    latencies, retry_hints = [], []
+    overloaded = timeouts = 0
+    with ExperimentServer(workers=1, packing=False,
+                          max_queue=max_queue) as srv:
+        futs = []
+        for i in range(burst):
+            try:
+                f = srv.submit(spec.with_value("seed", 400 + i),
+                               backend=kind)
+            except Overloaded as e:
+                overloaded += 1
+                retry_hints.append(e.retry_after_s)
+            else:
+                f.add_done_callback(
+                    lambda _f, t=time.perf_counter():
+                        latencies.append(time.perf_counter() - t))
+                futs.append(f)
+            time.sleep(unit_s / overdrive)  # sustained offered load
+        deadline = (max_queue + 2) * unit_s * 5 + 5.0
+        for f in futs:
+            try:
+                f.result(timeout=deadline)
+            except concurrent.futures.TimeoutError:
+                timeouts += 1
+        stats = srv.stats()["robustness"]
+
+    bound_s = 2.0 * (max_queue + 1) * unit_s
+    q = sample_quantiles(latencies, "host") if latencies else {}
+    return {
+        "manifest": spec.name, "unit_run_s": round(unit_s, 4),
+        "offered": burst, "accepted": len(futs),
+        "overloaded": overloaded, "timeouts": timeouts,
+        "server_counted_overloaded": stats["overloaded"],
+        "retry_after_hint_s": [round(h, 3) for h in retry_hints[:4]],
+        "max_queue": max_queue, "overdrive": overdrive,
+        "accepted_quantiles": q,
+        "p99_bound_s": round(bound_s, 4),
+        "p99_bounded": bool(latencies
+                            and q["p99"] <= bound_s and timeouts == 0),
+    }
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--repeats", type=int, default=9,
@@ -181,6 +353,15 @@ def main(argv=None) -> int:
                     help="lane packer max width")
     ap.add_argument("--min-speedup", type=float, default=3.0,
                     help="required warm-vs-cold p50 speedup (full mode)")
+    ap.add_argument("--processes", type=int, default=2,
+                    help="worker processes for the pool axis")
+    ap.add_argument("--min-pool-speedup", type=float, default=1.5,
+                    help="required pool-vs-single-process speedup on the "
+                         "mixed workload (full mode)")
+    ap.add_argument("--burst", type=int, default=24,
+                    help="offered requests in the shedding axis")
+    ap.add_argument("--max-queue", type=int, default=4,
+                    help="admission-queue cap in the shedding axis")
     ap.add_argument("--out", default="BENCH_serve.json")
     ap.add_argument("--smoke", action="store_true",
                     help="short runs, fewer repeats, no speedup gate "
@@ -219,17 +400,54 @@ def main(argv=None) -> int:
           f"{thr['lanes']['occupancy']:.2f}, cache hit rate "
           f"{thr['cache']['hit_rate']:.2f})")
 
+    pairs, pool_skipped = load_mixed_workload(args.smoke)
+    for name, why in pool_skipped.items():
+        print(f"[pool] skipping {name}: {why}")
+    pool = bench_pool(pairs, seeds, args.processes, args.workers,
+                      args.max_width)
+    if not pool["equivalence"]["ok"]:
+        print("[pool] FAIL: pooled results not bit-identical to solo")
+        print(json.dumps(pool, indent=2))
+        return 1
+    print(f"[pool] {pool['specs']} mixed specs: in-process "
+          f"{pool['single_process']['wall_s']:.2f}s vs "
+          f"{args.processes}-worker pool {pool['pool']['wall_s']:.2f}s "
+          f"-> {pool['speedup']:.2f}x ({pool['cores']} usable cores)")
+    pool_hw_skip = pool["cores"] < 2
+    if pool_hw_skip:
+        print(f"[pool] GATE HARDWARE-SKIPPED: {pool['cores']} usable "
+              f"core(s) -- no process count can beat one process here; "
+              f"speedup recorded, not gated")
+
+    shed = bench_shedding(pairs, args.burst, args.max_queue)
+    print(f"[shedding] offered {shed['offered']} at "
+          f"{shed['overdrive']:.0f}x capacity: accepted "
+          f"{shed['accepted']}, overloaded {shed['overloaded']}, "
+          f"timeouts {shed['timeouts']}, accepted p99 "
+          f"{shed['accepted_quantiles'].get('p99', float('nan')):.3f}s "
+          f"(bound {shed['p99_bound_s']:.3f}s)")
+
     measured = latency["speedup_p50"]
+    shed_ok = bool(shed["overloaded"] > 0 and shed["timeouts"] == 0
+                   and shed["p99_bounded"])
     gate = {"warm_speedup_p50_min": args.min_speedup,
             "measured": measured,
-            "pass": bool(args.smoke or measured >= args.min_speedup)}
+            "pass": bool(args.smoke or measured >= args.min_speedup),
+            "pool_speedup_min": args.min_pool_speedup,
+            "pool_measured": pool["speedup"],
+            "pool_gate_hardware_skipped": pool_hw_skip,
+            "pool_pass": bool(args.smoke or pool_hw_skip
+                              or pool["speedup"] >= args.min_pool_speedup),
+            "shedding_pass": bool(args.smoke or shed_ok)}
     report = {
         "benchmark": "serve",
         "mode": "smoke" if args.smoke else "full",
         "config": {"repeats": repeats, "seeds": seeds,
                    "workers": args.workers, "max_width": args.max_width,
+                   "processes": args.processes,
                    "manifests": [s.name for s in specs],
-                   "skipped": skipped},
+                   "pool_manifests": [s.name for s, _ in pairs],
+                   "skipped": skipped, "pool_skipped": pool_skipped},
         "host": {"platform": platform.platform(),
                  "python": platform.python_version(),
                  "numpy": np.__version__},
@@ -237,16 +455,28 @@ def main(argv=None) -> int:
         "equivalence": equiv,
         "latency": latency,
         "throughput": thr,
+        "pool": pool,
+        "shedding": shed,
         "acceptance": gate,
     }
     write_json_artifact(args.out, report)
     print(f"[bench_serve] wrote {args.out}")
 
+    failed = False
     if not args.smoke and not gate["pass"]:
         print(f"[bench_serve] FAIL: warm/cold p50 {measured:.1f}x < "
               f"{args.min_speedup:g}x")
-        return 1
-    return 0
+        failed = True
+    if not gate["pool_pass"]:
+        print(f"[bench_serve] FAIL: pool speedup {pool['speedup']:.2f}x < "
+              f"{args.min_pool_speedup:g}x")
+        failed = True
+    if not gate["shedding_pass"]:
+        print(f"[bench_serve] FAIL: shedding gate (overloaded="
+              f"{shed['overloaded']}, timeouts={shed['timeouts']}, "
+              f"p99_bounded={shed['p99_bounded']})")
+        failed = True
+    return 1 if failed else 0
 
 
 if __name__ == "__main__":

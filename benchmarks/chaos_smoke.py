@@ -1,0 +1,147 @@
+"""Chaos smoke: the manifest mix replayed through a pooled server while
+a scripted ChaosPlan SIGKILLs a worker mid-lane and the TCP proxy in
+front of the server tears one response and drops one connection.
+
+This is the CI chaos-smoke job's driver and the end-to-end robustness
+acceptance check in one script:
+
+  * server: `ExperimentServer(processes=2)` -- real spawned worker
+    processes with private compile caches, supervised and restarted;
+  * chaos: `ChaosPlan(kill_at_dispatch=...)` delivers a SIGKILL to the
+    worker that took dispatch #2, a beat after it started computing;
+    `ChaosProxy` between client and server tears response line #6 in
+    half and drops the connection carrying line #3;
+  * client: retrying `Client` with auto idempotency keys -- every
+    retry carries the same key, so the server joins/replays instead of
+    re-running.
+
+Acceptance (exit nonzero on any failure, never a silent pass):
+  every request completes AND is bit-identical to a cold solo
+  `repro.run()`; `worker_restarts >= 1` (the kill landed and the pool
+  healed); no request executed twice (`max_executions_per_key <= 1`).
+
+Artifacts land under --out: every served RunResult JSON plus
+chaos_stats.json (plan, server/pool/chaos stats, proxy counters,
+per-request identity verdicts) for post-mortem from the CI run.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent))
+from bench_serve import load_mixed_workload  # noqa: E402
+
+import repro  # noqa: E402
+from repro.serve import (ChaosPlan, ChaosProxy, Client,  # noqa: E402
+                         ExperimentServer, comparable_result_dict)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--out", default="results/chaos_smoke")
+    ap.add_argument("--processes", type=int, default=2)
+    ap.add_argument("--retries", type=int, default=5)
+    ap.add_argument("--plan",
+                    default=str(pathlib.Path(__file__).parent
+                                / "chaos_plan.json"),
+                    help="ChaosPlan JSON (same schema as the server's "
+                         "--chaos-plan flag)")
+    ap.add_argument("--seed", type=int, default=None,
+                    help="override the plan's RNG seed")
+    ap.add_argument("--full", action="store_true",
+                    help="replay manifests at full T (default clamps "
+                         "to T=60, the smoke discipline)")
+    args = ap.parse_args(argv)
+
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    pairs, skipped = load_mixed_workload(smoke=not args.full)
+    for name, why in skipped.items():
+        print(f"[chaos_smoke] skipping {name}: {why}")
+    print(f"[chaos_smoke] replaying {len(pairs)} manifests "
+          f"through {args.processes} workers under chaos")
+
+    solos = {s.name: repro.run(s, backend=k) for s, k in pairs}
+
+    plan_dict = json.loads(pathlib.Path(args.plan).read_text())
+    if args.seed is not None:
+        plan_dict["seed"] = args.seed
+    plan = ChaosPlan.from_dict(plan_dict)
+    print(f"[chaos_smoke] plan {args.plan}: {plan_dict}")
+    per_request, failures = {}, []
+    t0 = time.perf_counter()
+    srv = ExperimentServer(workers=2, processes=args.processes,
+                           max_wait_s=0.02, chaos=plan,
+                           pool_kwargs={"backoff_base_s": 0.05})
+    try:
+        host, port = srv.start()
+        with ChaosProxy(host, port, plan) as proxy:
+            phost, pport = proxy.address
+            with Client(phost, pport, timeout=240,
+                        retries=args.retries, seed=11) as client:
+                for s, k in pairs:
+                    res = client.run(s, backend=k)
+                    rt = repro.RunResult.from_json(res.to_json())
+                    identical = (comparable_result_dict(rt)
+                                 == comparable_result_dict(solos[s.name]))
+                    per_request[s.name] = {
+                        "identical": identical,
+                        "client_retries_so_far": client.retries_used}
+                    if not identical:
+                        failures.append(f"{s.name}: served result "
+                                        f"diverged from solo repro.run()")
+                    (outdir / f"{s.name}.json").write_text(res.to_json())
+            proxy_stats = proxy.stats()
+        stats = srv.stats()
+    finally:
+        srv.close()
+    wall = time.perf_counter() - t0
+
+    rob = stats["robustness"]
+    dedup = stats["dedup"]
+    chaos = stats.get("chaos", {})
+    checks = {
+        "all_identical": all(v["identical"] for v in per_request.values()),
+        "worker_restarts_ge_1": rob["worker_restarts"] >= 1,
+        "kill_delivered": chaos.get("kills_delivered", 0) >= 1,
+        "no_double_execution": dedup["max_executions_per_key"] <= 1,
+        "proxy_dropped_connection": proxy_stats["dropped_connections"] >= 1,
+        "proxy_tore_response": proxy_stats["torn_responses"] >= 1,
+    }
+    for name, ok in checks.items():
+        print(f"[chaos_smoke] {name}: {'OK' if ok else 'FAIL'}")
+        if not ok:
+            failures.append(name)
+    print(f"[chaos_smoke] {len(pairs)} requests healed in {wall:.2f}s: "
+          f"restarts={rob['worker_restarts']} "
+          f"reenqueues={rob['reenqueues']} "
+          f"client_retries={rob['requests_retried']} "
+          f"proxy={proxy_stats}")
+
+    report = {
+        "benchmark": "chaos_smoke",
+        "mode": "full" if args.full else "smoke",
+        "wall_s": round(wall, 3),
+        "plan": plan.to_dict(),
+        "per_request": per_request,
+        "server_stats": stats,
+        "proxy_stats": proxy_stats,
+        "checks": checks,
+        "failures": failures,
+    }
+    (outdir / "chaos_stats.json").write_text(json.dumps(report, indent=2))
+    print(f"[chaos_smoke] wrote {outdir}/chaos_stats.json")
+    if failures:
+        print(f"[chaos_smoke] FAIL: {failures}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

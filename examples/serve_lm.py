@@ -13,7 +13,13 @@ workload that exercises each serving path:
      compile cache and skips trace+lower+compile entirely;
   3. a burst of seed-variants of that dense spec -- the lane packer
      holds them briefly and flushes one vmapped `run_batch` lane, so
-     the burst costs a single dispatch.
+     the burst costs a single dispatch;
+  4. the same request submitted twice concurrently under ONE
+     idempotency key -- the server joins the duplicate onto the
+     in-flight run (`requests_retried` ticks, `max_executions_per_key`
+     stays 1) and both callers get the identical result, which is what
+     makes `Client(retries=N)` safe: a retried request never runs
+     twice.
 
 Every streamed protocol event (accepted, trace chunks, result) passes
 through `Client.run(on_event=...)`, printed here as a progress line.
@@ -120,6 +126,22 @@ def main(argv=None) -> int:
                 for cc in clients:
                     cc.close()
 
+            print("[serve_lm] 4. duplicate submit, one idempotency key "
+                  "-> one execution")
+            dup = [Client(host, port) for _ in range(2)]
+            try:
+                for cc in dup:
+                    cc._send({"op": "run", "backend": "dense",
+                              "spec": dense.with_value("seed", 999)
+                              .to_dict(),
+                              "idempotency_key": "serve-lm-demo"})
+                twins = [_drain(cc) for cc in dup]
+            finally:
+                for cc in dup:
+                    cc.close()
+            same = (twins[0].trace.fvals[-1] == twins[1].trace.fvals[-1])
+            print(f"  [dedup] both callers answered, identical: {same}")
+
             stats = c.stats()
             print(f"[serve_lm] cache: {stats['cache']['entries']} entries, "
                   f"{stats['cache']['hits']} hits / "
@@ -127,6 +149,10 @@ def main(argv=None) -> int:
                   f"{stats['packer']['packed_requests']} packed into "
                   f"{stats['packer']['lanes_flushed']} lanes "
                   f"(occupancy {stats['packer']['occupancy']:.2f})")
+            print(f"[serve_lm] robustness: "
+                  f"{stats['robustness']['requests_retried']} dedup "
+                  f"joins/replays, max executions per key "
+                  f"{stats['dedup']['max_executions_per_key']}")
             c.shutdown()
     print("[serve_lm] done")
     return 0

@@ -58,9 +58,15 @@ def _flatten(tree: PyTree):
 
 
 def save_tree(path: pathlib.Path, tree: PyTree, *, extra: dict | None = None):
-    """Atomic synchronous save of a pytree of arrays."""
+    """Atomic synchronous save of a pytree of arrays.
+
+    Safe under concurrent writers: the staging dir is suffixed with the
+    writer's pid (two processes saving the same step never share a tmp),
+    and losing the commit race to an already-committed sibling is a
+    no-op, not an error -- checkpoints are content-deterministic per
+    step, so whichever writer wins committed the same bytes."""
     path = pathlib.Path(path)
-    tmp = path.with_name(path.name + ".tmp")
+    tmp = path.with_name(f"{path.name}.tmp-{os.getpid()}")
     if tmp.exists():
         shutil.rmtree(tmp)
     tmp.mkdir(parents=True)
@@ -84,9 +90,18 @@ def save_tree(path: pathlib.Path, tree: PyTree, *, extra: dict | None = None):
     _write_atomic(tmp / "meta.json",
                   lambda p: p.write_text(json.dumps(meta)))
     _write_atomic(tmp / "COMMIT", lambda p: p.write_text(_COMMIT_TOKEN))
-    if path.exists():
-        shutil.rmtree(path)
-    tmp.rename(path)
+    try:
+        if path.exists():
+            shutil.rmtree(path, ignore_errors=True)
+        tmp.rename(path)
+    except OSError:
+        if _committed(path):
+            # a concurrent writer committed this step first; theirs is
+            # whole (COMMIT verified), so dropping our staging copy is
+            # the correct outcome of the race
+            shutil.rmtree(tmp, ignore_errors=True)
+        else:
+            raise
 
 
 def restore_tree(path: pathlib.Path, like: PyTree) -> tuple[PyTree, dict]:
@@ -112,7 +127,16 @@ def restore_tree(path: pathlib.Path, like: PyTree) -> tuple[PyTree, dict]:
 
 
 class CheckpointManager:
-    """keep-k rotating checkpoints with async save and latest-resume."""
+    """keep-k rotating checkpoints with async save and latest-resume.
+
+    Multiple managers (including in different processes) may point at the
+    same directory: saves stage under per-pid tmp names, rotation
+    tolerates concurrent deletion (`FileNotFoundError` means a sibling
+    rotated first) and never removes the snapshot this manager just
+    wrote, so two writers cannot delete each other's newest work. A
+    background-save failure is re-raised from the next `wait()` (or
+    `save`/`restore_latest`, which wait first) instead of dying silently
+    on the worker thread."""
 
     def __init__(self, directory: str | pathlib.Path, keep: int = 3):
         self.dir = pathlib.Path(directory)
@@ -120,6 +144,7 @@ class CheckpointManager:
         self.keep = keep
         self._lock = threading.Lock()
         self._pending: threading.Thread | None = None
+        self._error: BaseException | None = None
 
     def _step_dirs(self) -> list[tuple[int, pathlib.Path]]:
         out = []
@@ -140,12 +165,13 @@ class CheckpointManager:
         host_tree = jax.tree.map(np.asarray, tree)  # device->host copy now
 
         def work():
-            with self._lock:
-                save_tree(self.dir / f"step_{step}", host_tree, extra=extra)
-                dirs = self._step_dirs()
-                while len(dirs) > self.keep:
-                    shutil.rmtree(dirs[0][1])
-                    dirs = dirs[1:]
+            try:
+                with self._lock:
+                    save_tree(self.dir / f"step_{step}", host_tree,
+                              extra=extra)
+                    self._rotate(protect=step)
+            except BaseException as e:  # noqa: BLE001 -- re-raised by wait()
+                self._error = e
 
         self.wait()
         t = threading.Thread(target=work, daemon=True)
@@ -154,10 +180,28 @@ class CheckpointManager:
         if blocking:
             self.wait()
 
+    def _rotate(self, protect: int | None = None) -> None:
+        """Delete committed snapshots beyond the `keep` newest. The
+        listing is taken fresh (a sibling process may have rotated since
+        the save), a vanished dir is a sibling's rotation (not an
+        error), and `protect` pins the step this manager just wrote."""
+        dirs = self._step_dirs()
+        doomed = dirs[:-self.keep] if self.keep > 0 else dirs
+        for step, p in doomed:
+            if protect is not None and step >= protect:
+                continue
+            try:
+                shutil.rmtree(p)
+            except FileNotFoundError:
+                continue
+
     def wait(self):
         if self._pending is not None:
             self._pending.join()
             self._pending = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
 
     def restore_latest(self, like: PyTree) -> tuple[int, PyTree, dict] | None:
         self.wait()

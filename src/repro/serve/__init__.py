@@ -39,20 +39,39 @@ from __future__ import annotations
 from typing import Any
 
 from repro.serve.cache import CompileCache, cache_signature
-from repro.serve.client import Client, ServeError
+from repro.serve.chaos import ChaosMonkey, ChaosPlan, ChaosProxy
+from repro.serve.client import (Client, DeadlineExceededError,
+                                OverloadedError, ServeError,
+                                ShuttingDownError)
 from repro.serve.packer import Lane, LanePacker, lane_key
-from repro.serve.server import ExperimentServer, TRACE_CHUNK_ROWS
+from repro.serve.pool import (DeadlineExceeded, PoolError, WorkerCrashed,
+                              WorkerPool, execute_requests)
+from repro.serve.server import (ExperimentServer, Overloaded, ShuttingDown,
+                                TRACE_CHUNK_ROWS)
 
 __all__ = [
+    "ChaosMonkey",
+    "ChaosPlan",
+    "ChaosProxy",
     "Client",
     "CompileCache",
+    "DeadlineExceeded",
+    "DeadlineExceededError",
     "ExperimentServer",
     "Lane",
     "LanePacker",
+    "Overloaded",
+    "OverloadedError",
+    "PoolError",
     "ServeError",
+    "ShuttingDown",
+    "ShuttingDownError",
     "TRACE_CHUNK_ROWS",
+    "WorkerCrashed",
+    "WorkerPool",
     "cache_signature",
     "comparable_result_dict",
+    "execute_requests",
     "lane_key",
 ]
 

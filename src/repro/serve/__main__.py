@@ -5,12 +5,18 @@
 
     # submit manifests to it (streams progress, optionally saves results)
     PYTHONPATH=src python -m repro.serve submit benchmarks/manifests/*.json \
-        --port 7411 --backend dense --out results/serve
+        --port 7411 --backend dense --out results/serve --retries 3
 
     # observe / stop it
     PYTHONPATH=src python -m repro.serve stats --port 7411
     PYTHONPATH=src python -m repro.serve ping  --port 7411
     PYTHONPATH=src python -m repro.serve shutdown --port 7411
+
+`serve --workers N` runs N supervised worker *processes* (crash restart,
+re-enqueue, deadline kills); `--workers 0` (the default) keeps the
+in-process execution path byte-for-byte. `--deadline-s` and
+`--max-queue` bound per-request budget and admission; `--chaos-plan`
+loads a seeded `ChaosPlan` JSON for fault drills.
 
 `submit` writes each RunResult as `<out>/<name>__serve-<backend>.json` --
 the same artifact shape as `python -m repro.experiments run --out`, so
@@ -20,6 +26,7 @@ the same artifact shape as `python -m repro.experiments run --out`, so
 from __future__ import annotations
 
 import argparse
+import json
 import pathlib
 import sys
 
@@ -29,16 +36,28 @@ from repro.serve.server import ExperimentServer
 
 
 def _cmd_serve(args) -> int:
+    chaos = None
+    if args.chaos_plan:
+        from repro.serve.chaos import ChaosPlan
+        chaos = ChaosPlan.from_dict(
+            json.loads(pathlib.Path(args.chaos_plan).read_text()))
     server = ExperimentServer(host=args.host, port=args.port,
-                              workers=args.workers,
+                              workers=args.threads,
                               max_width=args.max_lane,
                               max_wait_s=args.max_wait,
                               cache_entries=args.cache_entries,
-                              packing=not args.no_packing)
+                              packing=not args.no_packing,
+                              processes=args.workers,
+                              deadline_s=args.deadline_s,
+                              max_queue=args.max_queue,
+                              chaos=chaos)
     host, port = server.start()
+    mode = (f"workers={args.workers} procs" if args.workers
+            else f"in-process threads={args.threads}")
     print(f"[serve] listening on {host}:{port} "
-          f"(workers={args.workers} max_lane={args.max_lane} "
-          f"max_wait={args.max_wait}s)", flush=True)
+          f"({mode} max_lane={args.max_lane} max_wait={args.max_wait}s "
+          f"deadline_s={args.deadline_s} max_queue={args.max_queue})",
+          flush=True)
     if args.port_file:
         pathlib.Path(args.port_file).write_text(str(port))
     try:
@@ -60,11 +79,13 @@ def _cmd_submit(args) -> int:
     if out_dir is not None:
         out_dir.mkdir(parents=True, exist_ok=True)
     status = 0
-    with Client(args.host, args.port, timeout=args.timeout) as client:
+    with Client(args.host, args.port, timeout=args.timeout,
+                retries=args.retries) as client:
         for path in args.manifests:
             spec = ExperimentSpec.from_file(path)
             try:
-                result = client.run(spec, backend=args.backend)
+                result = client.run(spec, backend=args.backend,
+                                    deadline_s=args.deadline_s)
             except ServeError as e:
                 print(f"[serve] {spec.name}: ERROR {e}")
                 status = 1
@@ -87,7 +108,6 @@ def _cmd_submit(args) -> int:
 
 
 def _cmd_stats(args) -> int:
-    import json
     with Client(args.host, args.port, timeout=args.timeout) as client:
         print(json.dumps(client.stats(), indent=2, sort_keys=True))
     return 0
@@ -124,7 +144,21 @@ def main(argv=None) -> int:
 
     servep = sub.add_parser("serve", help="boot a server (blocks)",
                             parents=[common])
-    servep.add_argument("--workers", type=int, default=2)
+    servep.add_argument("--workers", type=int, default=0,
+                        help="supervised worker PROCESSES; 0 = run "
+                             "in-process (byte-for-byte the classic path)")
+    servep.add_argument("--threads", type=int, default=2,
+                        help="in-process executor width (pool mode uses "
+                             "these threads only for bookkeeping)")
+    servep.add_argument("--deadline-s", type=float, default=None,
+                        help="default per-request budget; expired work "
+                             "is shed, not run")
+    servep.add_argument("--max-queue", type=int, default=0,
+                        help="bounded admission queue (0 = unbounded); "
+                             "over-limit submits get a structured "
+                             "overloaded error + retry-after hint")
+    servep.add_argument("--chaos-plan", default=None,
+                        help="path to a ChaosPlan JSON (fault drills)")
     servep.add_argument("--max-lane", type=int, default=4,
                         help="lane packer max width")
     servep.add_argument("--max-wait", type=float, default=0.05,
@@ -144,6 +178,12 @@ def main(argv=None) -> int:
                               "manifest's first declared backend)")
     submitp.add_argument("--out", default=None,
                          help="directory for RunResult JSON artifacts")
+    submitp.add_argument("--retries", type=int, default=0,
+                         help="client retries with jittered backoff + "
+                              "auto idempotency keys")
+    submitp.add_argument("--deadline-s", type=float, default=None,
+                         help="per-request deadline propagated "
+                              "server-side")
     submitp.set_defaults(fn=_cmd_submit)
 
     sub.add_parser("stats", help="print server stats",
